@@ -1,0 +1,70 @@
+"""Communication-volume benchmark (the paper's qualitative efficiency claim,
+§1/§5, made quantitative via the protocol ledger).
+
+Compares, per training run: SecureBoost vs FedGBF vs Dynamic FedGBF under
+(a) the paper-faithful full-histogram exchange and (b) the beyond-paper
+argmax candidate exchange (aggregator.py) — the collective-term optimisation
+carried into §Perf.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import save_report
+from repro.core import boosting
+from repro.federation import protocol
+
+
+def main() -> list:
+    specs = {
+        "give_me_some_credit": protocol.ProtocolSpec(
+            n_samples=105_000, party_dims=(5, 5), num_bins=32, max_depth=3
+        ),
+        "default_credit_card": protocol.ProtocolSpec(
+            n_samples=21_000, party_dims=(13, 10), num_bins=32, max_depth=3
+        ),
+    }
+    configs = {
+        "secureboost": boosting.secureboost_config(rounds=20),
+        "fedgbf_static": boosting.FedGBFConfig(
+            rounds=20, n_trees_max=5, n_trees_min=5,
+            rho_id_min=0.3, rho_id_max=0.3,
+        ),
+        "dynamic_fedgbf": boosting.dynamic_fedgbf_config(rounds=20),
+    }
+
+    t0 = time.perf_counter()
+    table = {}
+    rows = []
+    for ds, spec in specs.items():
+        for model, cfg in configs.items():
+            for agg in ("histogram", "argmax"):
+                s = protocol.ProtocolSpec(
+                    n_samples=spec.n_samples, party_dims=spec.party_dims,
+                    num_bins=spec.num_bins, max_depth=spec.max_depth,
+                    aggregation=agg,
+                )
+                cost = protocol.run_cost(s, cfg)
+                table[f"{ds}/{model}/{agg}"] = cost.breakdown()
+                print(f"  {ds:22s} {model:15s} {agg:9s} "
+                      f"total={cost.total/1e6:8.1f} MB "
+                      f"(hist={cost.histograms/1e6:7.1f}, "
+                      f"grad={cost.grad_broadcast/1e6:7.1f})")
+
+    save_report("communication", table)
+    for ds in specs:
+        sb = table[f"{ds}/secureboost/histogram"]["total"]
+        dyn = table[f"{ds}/dynamic_fedgbf/histogram"]["total"]
+        dyn_arg = table[f"{ds}/dynamic_fedgbf/argmax"]["total"]
+        rows.append((
+            f"communication/{ds}",
+            (time.perf_counter() - t0) * 1e6 / 12,
+            f"dyn_vs_sb={dyn/sb:.2f}x;argmax_saves={1 - dyn_arg/dyn:.2%}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

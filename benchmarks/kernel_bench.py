@@ -1,0 +1,69 @@
+"""Histogram-path microbenchmark.
+
+On this CPU container the Pallas kernel runs in interpret mode (a correctness
+vehicle, not a speed one), so wall-clock here measures the PRODUCTION CPU
+path (segment-sum) and the algebraic one-hot formulation; the Pallas kernel's
+TPU performance is governed by the roofline numbers in EXPERIMENTS.md.
+Derived column reports achieved histogram-update throughput and the VMEM
+working set the kernel's BlockSpecs claim per grid step.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Timer, save_report, scale
+from repro.core.histogram import compute_histogram, compute_histogram_onehot
+
+
+def bench(fn, args, repeats=5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main() -> list:
+    quick = scale() == "quick"
+    n = 200_000 if quick else 1_000_000
+    d, B, nodes = 23, 32, 4
+    rng = np.random.default_rng(0)
+    binned = jnp.asarray(rng.integers(0, B, (n, d)), jnp.int32)
+    g = jnp.asarray(rng.normal(size=n), jnp.float32)
+    h = jnp.asarray(rng.random(n), jnp.float32)
+    w = jnp.ones(n, jnp.float32)
+    assign = jnp.asarray(rng.integers(0, nodes, n), jnp.int32)
+
+    seg = jax.jit(compute_histogram, static_argnums=(5, 6))
+    oh = jax.jit(compute_histogram_onehot, static_argnums=(5, 6))
+
+    t_seg = bench(lambda: seg(binned, g, h, w, assign, nodes, B), ())
+    t_oh = bench(lambda: oh(binned, g, h, w, assign, nodes, B), ())
+
+    updates = n * d  # one (g,h,count) update per (row, feature)
+    vmem_bytes = 512 * nodes * B * 4 + 512 * 8 * 4 * 2  # onehot + ids + data
+    save_report("kernel_bench", {
+        "n": n, "d": d, "segment_s": t_seg, "onehot_s": t_oh,
+        "updates_per_s_segment": updates / t_seg,
+    })
+    print(f"  segment_sum: {t_seg*1e3:.1f} ms  onehot: {t_oh*1e3:.1f} ms "
+          f"({updates/t_seg/1e9:.2f} G updates/s)")
+    return [
+        ("kernel/histogram_segment", t_seg * 1e6,
+         f"{updates/t_seg/1e9:.2f}Gupd/s;n={n};d={d}"),
+        ("kernel/histogram_onehot_alg", t_oh * 1e6,
+         f"vmem_per_step={vmem_bytes/1024:.0f}KiB"),
+    ]
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

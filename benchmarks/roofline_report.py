@@ -1,0 +1,85 @@
+"""Aggregate the dry-run matrix (reports/dryrun/*.json) into the roofline
+table consumed by EXPERIMENTS.md §Roofline."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+from benchmarks.common import REPORT_DIR, save_report
+
+DRYRUN_DIR = os.path.join(REPORT_DIR, "dryrun")
+
+
+def load_reports() -> list:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_row(r: dict) -> str:
+    roof = r["roofline"]
+    peak = r["memory"].get("peak_bytes_per_device") or 0
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+        f"| {roof['compute_s']*1e3:.2f} | {roof['memory_s']*1e3:.2f} "
+        f"| {roof['collective_s']*1e3:.2f} | {roof['dominant']} "
+        f"| {roof['useful_ratio']:.2f} | {peak/2**30:.2f} |"
+    )
+
+
+def markdown_table(reports: list, mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) "
+        "| dominant | useful | peak GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in reports:
+        if r.get("status") == "ok" and r.get("mesh") == mesh and \
+                "__" not in r["tag"].replace(f"{r['arch']}__{r['shape']}__{r['mesh']}", ""):
+            lines.append(fmt_row(r))
+    return "\n".join(lines)
+
+
+def main() -> list:
+    t0 = time.perf_counter()
+    reports = load_reports()
+    ok = [r for r in reports if r.get("status") == "ok" and not
+          r["tag"].count("__") > 2]  # exclude hillclimb variants
+    skipped = [r for r in reports if r.get("status") == "skipped"]
+    errors = [r for r in reports if r.get("status") == "error"]
+    if not reports:
+        print("  no dry-run reports found; run repro.launch.dryrun first")
+        return [("roofline/none", 0.0, "missing")]
+
+    table = markdown_table(reports)
+    with open(os.path.join(REPORT_DIR, "roofline_table.md"), "w") as f:
+        f.write(table + "\n")
+    print(table)
+    if errors:
+        for e in errors:
+            print(f"  ERROR {e['tag']}: {e.get('error', '')[:120]}")
+
+    dominant = {}
+    for r in ok:
+        dominant[r["roofline"]["dominant"]] = dominant.get(
+            r["roofline"]["dominant"], 0) + 1
+    save_report("roofline_summary", {
+        "ok": len(ok), "skipped": len(skipped), "errors": len(errors),
+        "dominant_histogram": dominant,
+    })
+    return [(
+        "roofline/matrix",
+        (time.perf_counter() - t0) * 1e6,
+        f"ok={len(ok)};skipped={len(skipped)};errors={len(errors)};"
+        f"dominant={dominant}",
+    )]
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

@@ -1,0 +1,51 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # quick scale
+    REPRO_BENCH_SCALE=full PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV rows (one per benchmark claim) and
+writes JSON artifacts under reports/.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        communication,
+        figures,
+        kernel_bench,
+        paper_tables,
+        roofline_report,
+        runtime_model,
+    )
+
+    modules = [
+        ("communication", communication),
+        ("kernel_bench", kernel_bench),
+        ("runtime_model", runtime_model),
+        ("paper_tables", paper_tables),
+        ("figures", figures),
+        ("roofline_report", roofline_report),
+    ]
+    rows = []
+    failures = 0
+    for name, mod in modules:
+        print(f"== {name} ==")
+        try:
+            rows.extend(mod.main())
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

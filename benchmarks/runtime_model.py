@@ -1,0 +1,120 @@
+"""Runtime-model benchmark (eqs. 8-11 + appendix A.1/A.2).
+
+1. A.1 check: measured single-tree build time vs data size follows
+   T_{alpha n} / T_n ~ alpha + log2(alpha)/log2(n).
+2. A.2-style error table: the paper validates its ESTIMATED SecureBoost time
+   against real FATE runs (<10% error). We do the analogue entirely within
+   our system: estimate T_S = M * T_unit from one measured tree, compare
+   against the real measured M-round training loop.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Timer, save_report, scale
+from repro.core import binning, boosting, forest, losses, runtime_model
+from repro.core.types import TreeConfig
+from repro.data import synthetic
+
+
+def subsample_scaling(ds, cfg, alphas=(0.25, 0.5, 0.75, 1.0)) -> list:
+    """Measured vs predicted (A.1) time ratios under row subsampling.
+
+    Our vectorised builder is mask-based, so histogram work is O(n) regardless
+    of alpha; to honour the paper's setting we physically slice the rows."""
+    rows = []
+    n = ds.x_train.shape[0]
+    base = None
+    for alpha in alphas:
+        k = int(n * alpha)
+        x = jnp.asarray(ds.x_train[:k])
+        y = jnp.asarray(ds.y_train[:k])
+        binned, _ = binning.fit_bin(x, cfg.num_bins)
+        g, h = losses.grad_hess("logistic", y, jnp.zeros_like(y))
+        smask = jnp.ones((1, k), jnp.float32)
+        fmask = jnp.ones((1, x.shape[1]), bool)
+        trees, _ = forest.build_forest(binned, g, h, smask, fmask, cfg)
+        jax.block_until_ready(trees)
+        with Timer() as t:
+            for _ in range(3):
+                trees, _ = forest.build_forest(binned, g, h, smask, fmask, cfg)
+                jax.block_until_ready(trees)
+        measured = t.seconds / 3
+        if alpha == alphas[-1]:
+            base = measured
+        rows.append({"alpha": alpha, "measured_s": measured})
+    for r in rows:
+        r["measured_ratio"] = r["measured_s"] / base
+        r["predicted_ratio"] = runtime_model.subsample_time_ratio(r["alpha"], n)
+    return rows
+
+
+def estimation_error(ds, cfg_tree, rounds_list) -> list:
+    """A.2 analogue: estimated vs real SecureBoost wall time in-system.
+
+    The paper's T_unit is a warm per-tree time; the real run must therefore
+    also be measured warm (first call carries XLA compilation, which FATE's
+    setup time T_0 models separately) — we warm with a 2-round run first."""
+    x = jnp.asarray(ds.x_train)
+    y = jnp.asarray(ds.y_train)
+
+    # T_unit = warm marginal cost of one boosting round (one full-data tree,
+    # INCLUSIVE of the per-round machinery, exactly what FATE's measured
+    # single-tree time includes): (t[M=6] - t[M=2]) / 4 after a warm run.
+    def timed(rounds):
+        cfg = boosting.secureboost_config(rounds=rounds, tree=cfg_tree)
+        with Timer() as t:
+            boosting.train_fedgbf(x, y, cfg, jax.random.PRNGKey(0),
+                                  eval_every=rounds)
+        return t.seconds
+
+    timed(2)  # warm compile
+    t2, t6 = timed(2), timed(6)
+    t_unit = max((t6 - t2) / 4.0, 1e-6)
+    t0 = max(t2 - 2 * t_unit, 0.0)  # setup analogue of the paper's T_0
+    rows = []
+    for rounds in rounds_list:
+        cfg = boosting.secureboost_config(rounds=rounds, tree=cfg_tree)
+        with Timer() as t:
+            boosting.train_fedgbf(x, y, cfg, jax.random.PRNGKey(0),
+                                  eval_every=rounds)
+        est = runtime_model.estimate_secureboost_runtime(rounds, t_unit, t0_s=t0)
+        rows.append({
+            "rounds": rounds,
+            "estimated_s": est,
+            "real_s": t.seconds,
+            "error_rate": runtime_model.error_rate(est, t.seconds),
+        })
+        print(f"  M={rounds:3d} estimated={est:.1f}s real={t.seconds:.1f}s "
+              f"err={rows[-1]['error_rate']:.2%}")
+    return rows
+
+
+def main() -> list:
+    quick = scale() == "quick"
+    # full-size default-credit even in quick mode: sub-second runs are too
+    # noisy for the A.2 error measurement on a shared CPU core
+    ds = synthetic.load("default_credit_card")
+    cfg_tree = TreeConfig(max_depth=3, num_bins=32)
+
+    t0 = time.perf_counter()
+    a1 = subsample_scaling(ds, cfg_tree)
+    rounds_list = [10, 20] if quick else [20, 50, 100]
+    a2 = estimation_error(ds, cfg_tree, rounds_list)
+    save_report("runtime_model", {"a1_scaling": a1, "a2_error": a2})
+
+    worst_err = max(r["error_rate"] for r in a2)
+    us = (time.perf_counter() - t0) * 1e6 / (len(a1) + len(a2))
+    return [(
+        "runtime_model/a2_error", us,
+        f"worst_estimation_error={worst_err:.2%};paper_bound=10%",
+    )]
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

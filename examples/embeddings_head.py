@@ -1,0 +1,68 @@
+"""Boosted-forest head on frozen LM embeddings — where the paper's technique
+and the assigned-architecture substrate literally compose (DESIGN.md §4).
+
+Party A (embedding provider) runs a frozen SmolLM-family encoder over text
+and holds the hidden-state features; party B (label holder) has repayment
+labels. FedGBF trains on the vertically-joined table: LM features from A,
+labels from B — a realistic VFL credit-scoring-with-text setup.
+
+    PYTHONPATH=src python examples/embeddings_head.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import boosting, metrics
+from repro.core.types import TreeConfig
+from repro.data import tokens as tokens_mod
+from repro.models import model as model_mod
+
+rng = np.random.default_rng(0)
+
+# --- Party A: frozen LM producing sequence embeddings -----------------------
+cfg = get_smoke_config("smollm-135m")
+params = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+
+N, S = 2000, 32
+src = tokens_mod.MarkovZipfSource(cfg.vocab, seed=1)
+toks = np.stack([src.sample(rng, S) for _ in range(N)])
+
+
+@jax.jit
+def embed(tokens):
+    x = model_mod.layers.embed_tokens(params["embed"], tokens, cfg)
+    x, _ = model_mod._stack_scan(params, x, cfg)
+    return x.mean(axis=1)  # (B, D) mean-pooled sequence embedding
+
+
+feats = np.asarray(
+    jnp.concatenate([embed(jnp.asarray(toks[i:i + 256]))
+                     for i in range(0, N, 256)])
+).astype(np.float32)
+print(f"party A produced {feats.shape} LM embedding features")
+
+# Ground truth: default risk is a noisy nonlinear function of the text via a
+# fixed scoring direction in embedding space (unknown to both parties).
+z = (feats - feats.mean(0)) / (feats.std(0) + 1e-6)
+w_true = rng.normal(size=feats.shape[1])
+risk_logit = z @ w_true / np.sqrt(len(w_true)) + 0.3 * np.abs(z[:, 0])
+risk_logit += rng.normal(0, 0.3, N)
+labels = (risk_logit > np.quantile(risk_logit, 0.75)).astype(np.float32)
+
+# --- Party B: labels; FedGBF head on the vertical join -----------------------
+k = int(0.7 * N)
+cfg_fg = boosting.dynamic_fedgbf_config(
+    rounds=10, tree=TreeConfig(max_depth=3, num_bins=16)
+)
+model, _ = boosting.train_fedgbf(
+    jnp.asarray(feats[:k]), jnp.asarray(labels[:k]), cfg_fg,
+    jax.random.PRNGKey(2),
+)
+rep = metrics.classification_report(
+    jnp.asarray(labels[k:]), boosting.predict(model, jnp.asarray(feats[k:]))
+)
+print(f"FedGBF on LM embeddings: test auc={rep['auc']:.4f} "
+      f"acc={rep['acc']:.4f} f1={rep['f1']:.4f}")
+assert rep["auc"] > 0.7, "embedding head should beat chance comfortably"

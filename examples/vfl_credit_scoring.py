@@ -1,0 +1,71 @@
+"""Vertical federated credit scoring: the full protocol flow on a device mesh.
+
+Two parties (bank = active with labels, fintech = passive) hold disjoint
+feature columns of the same customers. The forest builder runs under
+shard_map with the party axis = mesh "model" axis; the message ledger prices
+every exchanged byte at Paillier rates; the secure-aggregation simulation
+demonstrates the masking algebra on the gradient broadcast.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/vfl_credit_scoring.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import boosting, metrics
+from repro.core.types import TreeConfig
+from repro.data import synthetic, tabular
+from repro.federation import protocol, secure, vfl
+
+if len(jax.devices()) < 2:
+    raise SystemExit(
+        "need >=2 devices: run with "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=8"
+    )
+
+PARTIES = 2
+ds = synthetic.load("default_credit_card", n=8_000)
+x_train, d_pad = tabular.pad_features(ds.x_train, PARTIES)
+x_test, _ = tabular.pad_features(ds.x_test, PARTIES)
+part = tabular.even_partition(d_pad, PARTIES)
+print(f"bank (active) holds columns {part.columns(0)}, "
+      f"fintech (passive) holds {part.columns(1)}")
+
+# --- secure aggregation demo: parties mask their contributions; only the
+# sum is visible to the aggregator (masks cancel exactly).
+contrib = jnp.stack([jnp.ones(5) * 2.0, jnp.ones(5) * 3.0])
+masks = secure.pairwise_masks(seed=42, num_parties=2, shape=(5,))
+masked = secure.mask(contrib, masks)
+print("masked party messages (unreadable):", np.asarray(masked[0][:3]))
+print("aggregate (masks cancel):", np.asarray(secure.aggregate(masked)[:3]))
+
+# --- federated training, both aggregation modes
+mesh = jax.make_mesh((len(jax.devices()) // PARTIES, PARTIES),
+                     ("data", "model"))
+tree_cfg = TreeConfig(max_depth=3, num_bins=32)
+cfg = boosting.dynamic_fedgbf_config(rounds=8, tree=tree_cfg)
+
+for aggregation in ("histogram", "argmax"):
+    forest_fn = vfl.make_federated_forest_fn(
+        mesh, tree_cfg, aggregation=aggregation
+    )
+    model, _ = boosting.train_fedgbf(
+        jnp.asarray(x_train), jnp.asarray(ds.y_train), cfg,
+        jax.random.PRNGKey(0), forest_fn=forest_fn,
+    )
+    rep = metrics.classification_report(
+        jnp.asarray(ds.y_test), boosting.predict(model, jnp.asarray(x_test))
+    )
+    spec = protocol.ProtocolSpec(
+        n_samples=x_train.shape[0],
+        party_dims=part.dims(), num_bins=32, max_depth=3,
+        aggregation=aggregation,
+    )
+    cost = protocol.run_cost(spec, cfg)
+    print(f"[{aggregation:9s}] test auc={rep['auc']:.4f} "
+          f"protocol={cost.total/1e6:.1f} MB "
+          f"(histograms {cost.histograms/1e6:.1f} MB)")
+print("-> identical AUC (lossless), argmax slashes histogram bytes "
+      "(the beyond-paper collective optimisation)")

@@ -1,0 +1,55 @@
+"""Dependency-free pytree checkpointing (npz + json treedef).
+
+Flattens any pytree of arrays to an .npz plus a json structure descriptor;
+round-trips dtypes (incl. bfloat16 via a uint16 view) and python scalars.
+Used for both LM TrainStates and FedGBF EnsembleModels.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16 = "bfloat16"
+
+
+def save_pytree(path: str, tree) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    arrays = {}
+    meta = {"treedef": str(treedef), "leaves": []}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        entry = {"dtype": str(arr.dtype)}
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+            entry["dtype"] = _BF16
+        arrays[f"leaf_{i}"] = arr
+        meta["leaves"].append(entry)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path + ".npz" if not path.endswith(".npz") else path, **arrays)
+    with open(_meta_path(path), "w") as f:
+        json.dump(meta, f)
+
+
+def load_pytree(path: str, like) -> object:
+    """Load into the structure of ``like`` (an example pytree)."""
+    npz = np.load(path + ".npz" if not path.endswith(".npz") else path)
+    with open(_meta_path(path)) as f:
+        meta = json.load(f)
+    leaves = []
+    for i, entry in enumerate(meta["leaves"]):
+        arr = npz[f"leaf_{i}"]
+        if entry["dtype"] == _BF16:
+            arr = arr.view(jnp.bfloat16)
+        leaves.append(jnp.asarray(arr))
+    _, treedef = jax.tree.flatten(like)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def _meta_path(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".meta.json"

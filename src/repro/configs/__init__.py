@@ -1,0 +1,7 @@
+"""Architecture registry: one module per assigned architecture (plus the
+paper's own tabular configs). Each module exports ``config()`` (the exact
+assigned full-scale configuration, citation in ``source``) and
+``smoke_config()`` (reduced same-family variant: <=3 layers, d_model <= 512,
+<=4 experts — runnable on CPU)."""
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config  # noqa: F401

@@ -1,0 +1,34 @@
+"""FedGBF core: the paper's contribution as a composable JAX library.
+
+Public API:
+
+  binning.fit_bin / bin_data          quantile binning (Alg. 2 step 1)
+  histogram.compute_histogram         g/h histogram accumulation
+  split.choose_splits                 gain (eq. 1) + per-node argmax
+  tree.build_tree / predict_tree      level-wise GenerateTree (Alg. 2)
+  forest.build_forest                 vmap-parallel bagging layer (Alg. 1)
+  boosting.train_fedgbf               (Dynamic) FedGBF training (Algs. 1, 3)
+  boosting.secureboost_config         the paper's baseline as a degenerate config
+  dynamic.*                           cosine/sine schedules (eqs. 6-7)
+  runtime_model.*                     eqs. 8-11 analytical runtime model
+"""
+
+from repro.core import (  # noqa: F401
+    binning,
+    boosting,
+    dynamic,
+    forest,
+    histogram,
+    losses,
+    metrics,
+    runtime_model,
+    split,
+    tree,
+)
+from repro.core.types import (  # noqa: F401
+    EnsembleModel,
+    FedGBFConfig,
+    TreeArrays,
+    TreeConfig,
+    forest_size,
+)

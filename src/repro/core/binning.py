@@ -1,0 +1,55 @@
+"""Quantile binning (Alg. 2 step 1).
+
+Each party bins its own feature columns against L quantile points
+``S_k = {s_k1, ..., s_kL}``; the binned representation is what histogram
+accumulation consumes. Binning is a one-off preprocessing step, so it is
+implemented in plain jnp (no kernel needed).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantile_bin_edges(x: jnp.ndarray, num_bins: int) -> jnp.ndarray:
+    """Per-feature quantile edges.
+
+    Args:
+      x: (n, d) float features.
+      num_bins: number of bins B; returns B-1 interior edges per feature.
+
+    Returns:
+      (d, num_bins - 1) float32 edges, non-decreasing along axis 1.
+    """
+    qs = jnp.linspace(0.0, 1.0, num_bins + 1)[1:-1]  # B-1 interior quantiles
+    edges = jnp.quantile(x.astype(jnp.float32), qs, axis=0)  # (B-1, d)
+    return edges.T  # (d, B-1)
+
+
+def bin_data(x: jnp.ndarray, edges: jnp.ndarray) -> jnp.ndarray:
+    """Digitise features into bin ids.
+
+    ``bin = #edges strictly below value`` so bins are in [0, B-1] and the
+    split predicate "bin <= t" corresponds to "value <= edges[t]".
+
+    Args:
+      x: (n, d) float features.
+      edges: (d, B-1) per-feature edges.
+
+    Returns:
+      (n, d) int32 bin indices.
+    """
+
+    def per_feature(col: jnp.ndarray, e: jnp.ndarray) -> jnp.ndarray:
+        return jnp.searchsorted(e, col, side="left").astype(jnp.int32)
+
+    return jax.vmap(per_feature, in_axes=(1, 0), out_axes=1)(
+        x.astype(jnp.float32), edges
+    )
+
+
+def fit_bin(x: jnp.ndarray, num_bins: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Convenience: fit edges on x and bin it. Returns (binned, edges)."""
+    edges = quantile_bin_edges(x, num_bins)
+    return bin_data(x, edges), edges

@@ -1,0 +1,67 @@
+"""Dynamic FedGBF parameter schedules (§3.2.2, eqs. 6-7).
+
+The paper's printed equations have mismatched parentheses and swapped
+else-branches (eq. 6 is titled "Dynamic Increasing" but is written with cos
+and a V_min tail). We implement the semantics the text and the experiments
+unambiguously describe — "the cosine function to reduce the parameter values
+round by round and the sine function to increase" with the k=1/k=0.5 worked
+example of §3.2.2 — and note the typo here:
+
+  decay     V(b_t) = V_min + (V_max - V_min) * cos( pi (b_t-1) / (2 k (b_T-1)) )
+            for b_t in [1, k(b_T-1)+1], then V_min; V_max if b_T == 1.
+  increase  V(b_t) = V_min + (V_max - V_min) * sin( pi (b_t-1) / (2 k (b_T-1)) )
+            for b_t in [1, k(b_T-1)+1], then V_max; V_max if b_T == 1.
+
+Check against the worked example: decay of tree count 50 -> 15 over b_T = 11
+rounds. k=1: cos runs 0..pi/2 across rounds 1..11, so round 1 gives 50 and
+round 11 gives 15. k=0.5: the cos phase completes at round 6 (value 15) and
+rounds 7..11 hold 15 — exactly the paper's description.
+"""
+
+from __future__ import annotations
+
+import math
+
+
+def dynamic_decay(
+    b_t: int, b_total: int, v_min: float, v_max: float, k: float = 1.0
+) -> float:
+    """Cosine decay from v_max (round 1) to v_min (round k*(b_T-1)+1), then hold."""
+    if b_total <= 1:
+        return v_max
+    horizon = k * (b_total - 1)
+    if b_t > horizon + 1:
+        return v_min
+    phase = math.pi * (b_t - 1) / (2.0 * horizon)
+    return v_min + (v_max - v_min) * math.cos(phase)
+
+
+def dynamic_increase(
+    b_t: int, b_total: int, v_min: float, v_max: float, k: float = 1.0
+) -> float:
+    """Sine increase from v_min (round 1) to v_max (round k*(b_T-1)+1), then hold."""
+    if b_total <= 1:
+        return v_max
+    horizon = k * (b_total - 1)
+    if b_t > horizon + 1:
+        return v_max
+    phase = math.pi * (b_t - 1) / (2.0 * horizon)
+    return v_min + (v_max - v_min) * math.sin(phase)
+
+
+def n_trees_schedule(cfg, round_idx: int) -> int:
+    """Trees per round (dynamic decaying; paper: 5 -> 2, k = 1). 1-based round."""
+    v = dynamic_decay(
+        round_idx, cfg.rounds, float(cfg.n_trees_min), float(cfg.n_trees_max),
+        cfg.n_trees_speed,
+    )
+    return max(1, int(round(v)))
+
+
+def rho_id_schedule(cfg, round_idx: int) -> float:
+    """Sample rate per round (dynamic increasing; paper: 0.1 -> 0.3, k = 1)."""
+    return float(
+        dynamic_increase(
+            round_idx, cfg.rounds, cfg.rho_id_min, cfg.rho_id_max, cfg.rho_id_speed
+        )
+    )

@@ -1,0 +1,81 @@
+"""Model explainability utilities (the paper's motivating requirement:
+"tree models ... meet the user's requirement for model explainability" §1).
+
+Gain-based and split-count feature importances over a trained EnsembleModel,
+per-party attribution (which party's features drive the model — the quantity
+a VFL consortium actually negotiates over), and a text dump of any tree.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import EnsembleModel, forest_size
+from repro.data.tabular import VerticalPartition
+
+
+def feature_importance(model: EnsembleModel, num_features: int,
+                       kind: str = "gain") -> np.ndarray:
+    """Importance per feature. kind: 'gain' (sum of split gains) or 'count'.
+
+    Bagging-aware: each tree's contribution is weighted 1/n_trees of its
+    round, mirroring the forest-mean combiner.
+    """
+    imp = np.zeros(num_features, np.float64)
+    for trees in model.forests:
+        n_trees = forest_size(trees)
+        feats = np.asarray(trees.feature)        # (n_trees, num_internal)
+        gains = np.asarray(trees.gain)
+        for j in range(n_trees):
+            valid = feats[j] >= 0
+            f = feats[j][valid]
+            w = gains[j][valid] if kind == "gain" else np.ones_like(f, float)
+            np.add.at(imp, f, w / n_trees)
+    total = imp.sum()
+    return imp / total if total > 0 else imp
+
+
+def party_importance(model: EnsembleModel, partition: VerticalPartition,
+                     kind: str = "gain") -> dict:
+    """Share of model importance contributed by each party's feature slice."""
+    imp = feature_importance(model, partition.num_features, kind)
+    return {
+        f"party_{p}": float(imp[partition.columns(p)].sum())
+        for p in range(partition.num_parties)
+    }
+
+
+def dump_tree(model: EnsembleModel, round_idx: int, tree_idx: int,
+              feature_names=None) -> str:
+    """Human-readable text rendering of one tree (bin-threshold splits)."""
+    trees = model.forests[round_idx]
+    feat = np.asarray(trees.feature[tree_idx])
+    thr = np.asarray(trees.threshold[tree_idx])
+    gain = np.asarray(trees.gain[tree_idx])
+    leaf = np.asarray(trees.leaf_weight[tree_idx])
+    edges = np.asarray(model.bin_edges)
+    name = (lambda f: feature_names[f]) if feature_names else (lambda f: f"f{f}")
+
+    lines = []
+
+    def rec(level: int, idx: int, indent: str):
+        node = 2**level - 1 + idx
+        depth = model.max_depth
+        if level == depth:
+            lines.append(f"{indent}leaf[{idx}] = {leaf[idx]:+.5f}")
+            return
+        f, t = int(feat[node]), int(thr[node])
+        if f < 0:
+            lines.append(f"{indent}(pass-through)")
+            rec(level + 1, idx * 2, indent + "  ")
+            return
+        cut = edges[f, t] if t < edges.shape[1] else float("inf")
+        lines.append(
+            f"{indent}if {name(f)} <= {cut:.4f}  (bin {t}, gain {gain[node]:.3f})"
+        )
+        rec(level + 1, idx * 2, indent + "  ")
+        lines.append(f"{indent}else")
+        rec(level + 1, idx * 2 + 1, indent + "  ")
+
+    rec(0, 0, "")
+    return "\n".join(lines)

@@ -1,0 +1,84 @@
+"""Random-forest layer: the bagging base learner of FedGBF (Alg. 1 lines 3-7).
+
+The N trees of a round share (g, h) — all fit the same boosting residual —
+and differ only in their sampling masks P_m(j), Q_m(j) (eq. 4). TPU
+adaptation: the per-tree parallelism the paper gets from multi-worker FATE
+becomes a ``jax.vmap`` over the tree axis — one XLA program builds the whole
+layer, and the sampling matrices become boolean masks so shapes stay static.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree as tree_mod
+from repro.core.types import TreeArrays, TreeConfig
+
+
+def sample_masks(
+    rng: jax.Array, n: int, d: int, n_trees: int, rho_id: float, rho_feat: float
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact-count subsampling masks per tree.
+
+    The paper samples exactly n_m(j) = n * rho_id rows and d_m(j) = d * rho_feat
+    features without replacement (eq. 4); ``random.permutation(n) < k`` places
+    exactly k ones uniformly at random.
+
+    Returns:
+      sample_mask: (n_trees, n) float32 in {0, 1}
+      feature_mask: (n_trees, d) bool
+    """
+    n_keep = max(1, int(round(n * rho_id)))
+    d_keep = max(1, int(round(d * rho_feat)))
+    keys = jax.random.split(rng, 2 * n_trees).reshape(n_trees, 2, 2)
+
+    def one(k):
+        smask = (jax.random.permutation(k[0], n) < n_keep).astype(jnp.float32)
+        fmask = jax.random.permutation(k[1], d) < d_keep
+        return smask, fmask
+
+    return jax.vmap(one)(keys)
+
+
+@partial(jax.jit, static_argnames=("cfg", "histogram_fn", "choose_fn", "route_fn", "leaf_fn"))
+def build_forest(
+    binned: jnp.ndarray,
+    g: jnp.ndarray,
+    h: jnp.ndarray,
+    sample_mask: jnp.ndarray,
+    feature_mask: jnp.ndarray,
+    cfg: TreeConfig,
+    histogram_fn: Optional[Callable] = None,
+    choose_fn: Optional[Callable] = None,
+    route_fn: Optional[Callable] = None,
+    leaf_fn: Optional[Callable] = None,
+) -> tuple[TreeArrays, jnp.ndarray]:
+    """Build all trees of one forest layer in parallel (vmap over trees).
+
+    Args:
+      binned: (n, d) shared binned features.
+      g, h: (n,) shared derivatives (all trees of round m fit y_hat^(m-1)).
+      sample_mask: (n_trees, n); feature_mask: (n_trees, d).
+
+    Returns:
+      (trees, train_pred): trees is a stacked TreeArrays (leading axis
+      n_trees); train_pred (n,) is the bagging-averaged raw output on the
+      full training set, ready for the boosting update
+      y_hat^(m) = y_hat^(m-1) + lr * train_pred (Alg. 1 line 8).
+    """
+
+    def one(smask, fmask):
+        tr, assign = tree_mod.build_tree(
+            binned, g, h, smask, fmask, cfg,
+            histogram_fn=histogram_fn, choose_fn=choose_fn, route_fn=route_fn,
+            leaf_fn=leaf_fn,
+        )
+        return tr, tr.leaf_weight[assign]
+
+    trees, per_tree_pred = jax.vmap(one)(sample_mask, feature_mask)
+    train_pred = jnp.mean(per_tree_pred, axis=0)
+    return trees, train_pred

@@ -1,0 +1,92 @@
+"""Gradient/hessian histogram accumulation (Alg. 2 steps 6-8).
+
+This is the compute hot-spot of every histogram GBDT (and the quantity the
+VFL protocol ships between parties), so it has three implementations:
+
+* ``compute_histogram``      — portable jnp ``segment_sum`` path (default on CPU),
+* ``kernels/histogram``      — the Pallas TPU kernel (one-hot matmul on the MXU),
+  selected via ``impl="pallas"``,
+* ``kernels/histogram/ref.py`` — the oracle the kernel is tested against
+  (re-exports this module's function).
+
+Layout: ``hist[node, feature, bin, stat]`` with ``stat = (sum_g, sum_h, count)``.
+Histograms are *additive* in samples, which is what makes both the data-parallel
+``psum`` and the VFL per-party decomposition exact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NUM_STATS = 3  # sum_g, sum_h, count
+
+
+def compute_histogram(
+    binned: jnp.ndarray,
+    g: jnp.ndarray,
+    h: jnp.ndarray,
+    weight: jnp.ndarray,
+    assign: jnp.ndarray,
+    num_nodes: int,
+    num_bins: int,
+) -> jnp.ndarray:
+    """Accumulate (sum_g, sum_h, count) per (node, feature, bin).
+
+    Args:
+      binned: (n, d) int32 bin indices in [0, num_bins).
+      g, h:   (n,) float32 first/second-order derivatives.
+      weight: (n,) float32 0/1 sample-subsampling mask (P_m(j) of eq. 4).
+      assign: (n,) int32 node assignment at the current level, in [0, num_nodes).
+      num_nodes: static frontier width (2**level).
+      num_bins:  static B.
+
+    Returns:
+      (num_nodes, d, num_bins, 3) float32 histogram.
+    """
+    n, d = binned.shape
+    data = jnp.stack([g * weight, h * weight, weight], axis=-1)  # (n, 3)
+    ids = assign[None, :] * num_bins + binned.T  # (d, n)
+
+    def per_feature(ids_col: jnp.ndarray) -> jnp.ndarray:
+        return jax.ops.segment_sum(data, ids_col, num_segments=num_nodes * num_bins)
+
+    hist = jax.vmap(per_feature)(ids)  # (d, num_nodes * B, 3)
+    return hist.reshape(d, num_nodes, num_bins, NUM_STATS).transpose(1, 0, 2, 3)
+
+
+def compute_histogram_onehot(
+    binned: jnp.ndarray,
+    g: jnp.ndarray,
+    h: jnp.ndarray,
+    weight: jnp.ndarray,
+    assign: jnp.ndarray,
+    num_nodes: int,
+    num_bins: int,
+) -> jnp.ndarray:
+    """MXU-shaped formulation: histogram as a dense one-hot matmul.
+
+    This is the mathematical statement of the TPU adaptation (DESIGN.md §2):
+    ``hist = onehot(node*B + bin)^T @ [g, h, 1]`` per feature. The Pallas
+    kernel tiles exactly this contraction; this jnp version exists so the
+    algebraic identity itself is testable without Pallas.
+    """
+    n, d = binned.shape
+    data = jnp.stack([g * weight, h * weight, weight], axis=-1)  # (n, 3)
+    ids = assign[:, None] * num_bins + binned  # (n, d)
+    onehot = jax.nn.one_hot(ids, num_nodes * num_bins, dtype=data.dtype)  # (n, d, NB)
+    hist = jnp.einsum("ndk,ns->dks", onehot, data)  # (d, NB, 3)
+    return hist.reshape(d, num_nodes, num_bins, NUM_STATS).transpose(1, 0, 2, 3)
+
+
+def histogram_dispatch(impl: str = "segment"):
+    """Select a histogram implementation by name."""
+    if impl == "segment":
+        return compute_histogram
+    if impl == "onehot":
+        return compute_histogram_onehot
+    if impl == "pallas":
+        from repro.kernels.histogram import ops as _ops
+
+        return _ops.compute_histogram_pallas
+    raise ValueError(f"unknown histogram impl {impl!r}")

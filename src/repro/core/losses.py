@@ -1,0 +1,49 @@
+"""Second-order losses: per-sample gradients g_i and hessians h_i (Alg. 2 step 2).
+
+In the VFL protocol these are the quantities the active party computes,
+encrypts and broadcasts; everything downstream consumes only (g, h).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sigmoid(z: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.sigmoid(z)
+
+
+def logistic_grad_hess(y: jnp.ndarray, y_hat: jnp.ndarray):
+    """Binary logloss on raw margins: g = p - y, h = p (1 - p)."""
+    p = sigmoid(y_hat)
+    return p - y, p * (1.0 - p)
+
+
+def squared_grad_hess(y: jnp.ndarray, y_hat: jnp.ndarray):
+    """0.5 * (y_hat - y)^2: g = y_hat - y, h = 1."""
+    return y_hat - y, jnp.ones_like(y_hat)
+
+
+_LOSSES = {
+    "logistic": logistic_grad_hess,
+    "squared": squared_grad_hess,
+}
+
+
+def grad_hess(loss: str, y: jnp.ndarray, y_hat: jnp.ndarray):
+    try:
+        fn = _LOSSES[loss]
+    except KeyError as e:  # pragma: no cover - config error
+        raise ValueError(f"unknown loss {loss!r}; options: {sorted(_LOSSES)}") from e
+    return fn(y.astype(jnp.float32), y_hat.astype(jnp.float32))
+
+
+def loss_value(loss: str, y: jnp.ndarray, y_hat: jnp.ndarray) -> jnp.ndarray:
+    y = y.astype(jnp.float32)
+    if loss == "logistic":
+        # stable logloss on margins
+        return jnp.mean(jnp.maximum(y_hat, 0) - y_hat * y + jnp.log1p(jnp.exp(-jnp.abs(y_hat))))
+    if loss == "squared":
+        return 0.5 * jnp.mean((y_hat - y) ** 2)
+    raise ValueError(f"unknown loss {loss!r}")

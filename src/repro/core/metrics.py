@@ -1,0 +1,45 @@
+"""Evaluation metrics reported by the paper: AUC, accuracy, F1 (§4.1)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def auc(y: jnp.ndarray, score: jnp.ndarray) -> jnp.ndarray:
+    """Area under ROC via the Mann-Whitney rank statistic (ties averaged)."""
+    y = y.astype(jnp.float32)
+    n = y.shape[0]
+    order = jnp.argsort(score)
+    sorted_scores = score[order]
+    # average ranks for ties: rank = mean of 1-based positions of equal scores
+    ranks_lo = jnp.searchsorted(sorted_scores, score, side="left").astype(jnp.float32)
+    ranks_hi = jnp.searchsorted(sorted_scores, score, side="right").astype(jnp.float32)
+    ranks = 0.5 * (ranks_lo + ranks_hi + 1.0)  # 1-based average rank
+    n_pos = jnp.sum(y)
+    n_neg = n - n_pos
+    sum_pos_ranks = jnp.sum(ranks * y)
+    return (sum_pos_ranks - n_pos * (n_pos + 1.0) / 2.0) / jnp.maximum(n_pos * n_neg, 1.0)
+
+
+def accuracy(y: jnp.ndarray, prob: jnp.ndarray, threshold: float = 0.5) -> jnp.ndarray:
+    pred = (prob >= threshold).astype(jnp.float32)
+    return jnp.mean(pred == y.astype(jnp.float32))
+
+
+def f1_score(y: jnp.ndarray, prob: jnp.ndarray, threshold: float = 0.5) -> jnp.ndarray:
+    y = y.astype(jnp.float32)
+    pred = (prob >= threshold).astype(jnp.float32)
+    tp = jnp.sum(pred * y)
+    fp = jnp.sum(pred * (1.0 - y))
+    fn = jnp.sum((1.0 - pred) * y)
+    return 2.0 * tp / jnp.maximum(2.0 * tp + fp + fn, 1.0)
+
+
+def classification_report(y: jnp.ndarray, margin: jnp.ndarray) -> dict:
+    """All three paper metrics from raw margins."""
+    prob = 1.0 / (1.0 + jnp.exp(-margin))
+    return {
+        "auc": float(auc(y, margin)),
+        "acc": float(accuracy(y, prob)),
+        "f1": float(f1_score(y, prob)),
+    }

@@ -1,0 +1,103 @@
+"""Split finding: gain evaluation (eq. 1) and global argmax (Alg. 2 step 9).
+
+The active party runs this on decrypted histograms. The same function is used
+by the federated path — each party evaluates its feature shard, then the gains
+are compared globally (see federation/aggregator.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.types import TreeConfig
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+class SplitDecision(NamedTuple):
+    feature: jnp.ndarray    # (num_nodes,) int32, -1 if no split
+    threshold: jnp.ndarray  # (num_nodes,) int32; bin <= threshold goes left
+    gain: jnp.ndarray       # (num_nodes,) float32 (NEG_INF/0 when no split)
+
+
+def split_gains(hist: jnp.ndarray, cfg: TreeConfig) -> jnp.ndarray:
+    """Gain of splitting each (node, feature) at each bin threshold.
+
+    Args:
+      hist: (num_nodes, d, B, 3) histogram.
+      cfg:  tree config (lambda_, gamma, min_child_weight).
+
+    Returns:
+      (num_nodes, d, B) float32 gains; invalid candidates are -inf.
+      Threshold semantics: left = {bin <= b}.
+    """
+    num_bins = hist.shape[2]
+    cum = jnp.cumsum(hist, axis=2)  # (nodes, d, B, 3): left stats at threshold b
+    total = cum[:, :, -1, :][:, :, None, :]  # (nodes, d, 1, 3)
+
+    gl, hl = cum[..., 0], cum[..., 1]
+    gt, ht = total[..., 0], total[..., 1]
+    gr, hr = gt - gl, ht - hl
+
+    lam = cfg.lambda_
+    gain = 0.5 * (
+        gl**2 / (hl + lam) + gr**2 / (hr + lam) - gt**2 / (ht + lam)
+    ) - cfg.gamma
+
+    valid = (
+        (hl >= cfg.min_child_weight)
+        & (hr >= cfg.min_child_weight)
+        # threshold == B-1 sends everything left: not a split
+        & (jnp.arange(num_bins)[None, None, :] < num_bins - 1)
+    )
+    return jnp.where(valid, gain, NEG_INF)
+
+
+def choose_splits(
+    hist: jnp.ndarray,
+    feature_mask: jnp.ndarray,
+    cfg: TreeConfig,
+    feature_offset: int = 0,
+) -> SplitDecision:
+    """Pick the best (feature, threshold) per node from a histogram.
+
+    Args:
+      hist: (num_nodes, d, B, 3).
+      feature_mask: (d,) bool — feature subsampling mask (Q_m(j) of eq. 4).
+      feature_offset: global index of this histogram's first feature column
+        (non-zero on passive parties evaluating a feature shard).
+
+    Returns:
+      SplitDecision with *global* feature indices. Nodes whose best gain is
+      not positive get feature = -1 and threshold = B (routes all left).
+    """
+    num_nodes, d, num_bins, _ = hist.shape
+    gains = split_gains(hist, cfg)  # (nodes, d, B)
+    gains = jnp.where(feature_mask[None, :, None], gains, NEG_INF)
+
+    flat = gains.reshape(num_nodes, d * num_bins)
+    best = jnp.argmax(flat, axis=1)
+    best_gain = jnp.take_along_axis(flat, best[:, None], axis=1)[:, 0]
+
+    feature = (best // num_bins).astype(jnp.int32) + feature_offset
+    threshold = (best % num_bins).astype(jnp.int32)
+
+    has_split = best_gain > 0.0
+    feature = jnp.where(has_split, feature, -1)
+    threshold = jnp.where(has_split, threshold, num_bins)
+    return SplitDecision(feature=feature, threshold=threshold, gain=best_gain)
+
+
+def leaf_weights(hist_leaf: jnp.ndarray, cfg: TreeConfig) -> jnp.ndarray:
+    """Optimal leaf weights w = -G / (H + lambda) (Alg. 2 step 14).
+
+    Args:
+      hist_leaf: (num_leaves, 3) aggregated (G, H, count) per leaf.
+    Returns:
+      (num_leaves,) float32; empty leaves get 0.
+    """
+    g, h, c = hist_leaf[..., 0], hist_leaf[..., 1], hist_leaf[..., 2]
+    w = -g / (h + cfg.lambda_)
+    return jnp.where(c > 0, w, 0.0)

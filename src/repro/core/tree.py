@@ -1,0 +1,146 @@
+"""Level-wise decision-tree construction (Alg. 2, GenerateTree) — fully jittable.
+
+TPU adaptation (DESIGN.md §2): instead of growing nodes one at a time from a
+pending-split queue, we grow the complete tree *level by level* with static
+shapes — one histogram pass per level covers the whole frontier, the routing
+update is a vectorised gather, and the depth loop is unrolled (max_depth is
+static and small, paper uses 3).
+
+The histogram provider is injectable: the centralized path passes
+``core.histogram.compute_histogram``; the federated path passes a shard_map
+wrapper that computes per-party shard histograms and reassembles them
+(federation/aggregator.py). Because histograms are additive and reassembly is
+exact, both paths produce *identical* trees — the paper's losslessness claim,
+asserted in tests/test_federation.py.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import histogram as hist_mod
+from repro.core import split as split_mod
+from repro.core.types import TreeArrays, TreeConfig
+
+HistogramFn = Callable[..., jnp.ndarray]
+
+
+def route_local(binned: jnp.ndarray, assign: jnp.ndarray, decision) -> jnp.ndarray:
+    """Centralized routing: go right iff bin value strictly above threshold.
+
+    Unsplit nodes carry threshold == num_bins, so everything routes left.
+    """
+    n = binned.shape[0]
+    rows = jnp.arange(n)
+    node_feat = decision.feature[assign]   # (n,)
+    node_thr = decision.threshold[assign]  # (n,)
+    fv = binned[rows, jnp.clip(node_feat, 0, None)]
+    go_right = (node_feat >= 0) & (fv > node_thr)
+    return assign * 2 + go_right.astype(jnp.int32)
+
+
+def build_tree(
+    binned: jnp.ndarray,
+    g: jnp.ndarray,
+    h: jnp.ndarray,
+    sample_mask: jnp.ndarray,
+    feature_mask: jnp.ndarray,
+    cfg: TreeConfig,
+    histogram_fn: Optional[HistogramFn] = None,
+    choose_fn: Optional[Callable] = None,
+    route_fn: Optional[Callable] = None,
+    leaf_fn: Optional[HistogramFn] = None,
+) -> tuple[TreeArrays, jnp.ndarray]:
+    """Build one tree; returns (tree, leaf_assign_for_all_samples).
+
+    Every sample (masked or not) is routed so the caller can update
+    y_hat on the full training set; masked-out samples simply do not
+    contribute to histograms or leaf weights.
+
+    Args:
+      binned: (n, d) int32 binned features (the *local feature shard* on the
+        federated path — d is then d_party, not d_global).
+      g, h: (n,) float32 derivatives w.r.t. y_hat^(m-1).
+      sample_mask: (n,) float32 0/1 — P_m(j) of eq. 4.
+      feature_mask: (d,) bool — Q_m(j) of eq. 4 (local slice when federated).
+      histogram_fn: signature of ``core.histogram.compute_histogram``.
+      choose_fn: signature of ``core.split.choose_splits`` (minus cfg);
+        the federated path overrides this to run the party-wise argmax.
+      route_fn: (binned, assign, decision) -> new assign. The federated path
+        overrides this with the ownership-masked psum that mirrors Alg. 2
+        step 3 ("the passive party returns the divided ID space").
+    """
+    if histogram_fn is None:
+        histogram_fn = hist_mod.compute_histogram
+    if choose_fn is None:
+        choose_fn = lambda hist, fmask: split_mod.choose_splits(hist, fmask, cfg)
+    if route_fn is None:
+        route_fn = route_local
+
+    n, _ = binned.shape
+    assign = jnp.zeros(n, dtype=jnp.int32)  # within-level node index
+
+    features, thresholds, gains = [], [], []
+    for level in range(cfg.max_depth):
+        num_nodes = 2**level
+        hist = histogram_fn(
+            binned, g, h, sample_mask, assign, num_nodes, cfg.num_bins
+        )
+        decision = choose_fn(hist, feature_mask)
+        features.append(decision.feature)
+        thresholds.append(decision.threshold)
+        gains.append(jnp.maximum(decision.gain, 0.0))
+        assign = route_fn(binned, assign, decision)
+
+    # Leaf statistics: aggregate (G, H, count) per leaf over masked samples.
+    # In the VFL protocol the active party owns g, h and the final routing in
+    # plaintext, so leaf weights are computed locally (Alg. 2 step 14);
+    # ``leaf_fn`` is only overridden when samples are sharded over the data
+    # axis (psum of the additive stats, no party gather).
+    if leaf_fn is None:
+        leaf_fn = hist_mod.compute_histogram
+    leaf_hist = leaf_fn(
+        jnp.zeros((n, 1), dtype=jnp.int32),  # single pseudo-feature, bin 0
+        g, h, sample_mask, assign, cfg.num_leaves, 1,
+    )[:, 0, 0, :]  # (num_leaves, 3)
+    weights = split_mod.leaf_weights(leaf_hist, cfg)
+
+    tree = TreeArrays(
+        feature=jnp.concatenate(features),
+        threshold=jnp.concatenate(thresholds),
+        gain=jnp.concatenate(gains),
+        leaf_weight=weights,
+    )
+    return tree, assign
+
+
+def predict_tree(tree: TreeArrays, binned: jnp.ndarray, max_depth: int) -> jnp.ndarray:
+    """Route samples through one tree and return leaf weights.
+
+    Args:
+      tree: TreeArrays (single tree, no leading batch axis).
+      binned: (n, d) int32 — binned with the training edges.
+      max_depth: static tree depth.
+    Returns:
+      (n,) float32 raw tree output.
+    """
+    n = binned.shape[0]
+    rows = jnp.arange(n)
+    idx = jnp.zeros(n, dtype=jnp.int32)
+    for level in range(max_depth):
+        offset = 2**level - 1
+        f = tree.feature[offset + idx]
+        t = tree.threshold[offset + idx]
+        fv = binned[rows, jnp.clip(f, 0, None)]
+        go_right = (f >= 0) & (fv > t)
+        idx = idx * 2 + go_right.astype(jnp.int32)
+    return tree.leaf_weight[idx]
+
+
+def predict_forest(trees: TreeArrays, binned: jnp.ndarray, max_depth: int) -> jnp.ndarray:
+    """Mean over a stacked forest (bagging combiner g of Alg. 1 line 7)."""
+    per_tree = jax.vmap(lambda tr: predict_tree(tr, binned, max_depth))(trees)
+    return jnp.mean(per_tree, axis=0)

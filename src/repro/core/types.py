@@ -1,0 +1,103 @@
+"""Core datatypes for the FedGBF tree-ensemble library.
+
+All tree structures are *fixed-topology complete binary trees* of static depth
+``max_depth`` so that every builder/predictor is jittable and vmappable:
+
+* internal nodes are stored level-order: level ``l`` occupies indices
+  ``[2**l - 1, 2**(l+1) - 2]``; ``num_internal = 2**max_depth - 1``;
+* ``feature == -1`` marks a node that did not split (its threshold is set to
+  ``num_bins`` so every sample routes left, landing in the left-most
+  descendant leaf, which carries the node's weight);
+* leaves are the ``2**max_depth`` slots of the final level.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class TreeArrays(NamedTuple):
+    """A single decision tree (or a stack of them when vmapped)."""
+
+    feature: jnp.ndarray      # (num_internal,) int32 — split feature, -1 = leaf-through
+    threshold: jnp.ndarray    # (num_internal,) int32 — go left iff bin <= threshold
+    gain: jnp.ndarray         # (num_internal,) float32 — split gain (eq. 1)
+    leaf_weight: jnp.ndarray  # (2**max_depth,) float32 — XGBoost leaf weights
+
+
+def forest_size(trees: TreeArrays) -> int:
+    """Number of trees in a stacked forest (leading axis of every field)."""
+    return int(trees.feature.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeConfig:
+    """Static hyper-parameters of a single decision tree (Alg. 2)."""
+
+    max_depth: int = 3
+    num_bins: int = 32
+    lambda_: float = 1.0          # L2 regulariser on leaf weights
+    gamma: float = 0.0            # minimum gain to split (eq. 1's gamma)
+    min_child_weight: float = 1e-3
+
+    @property
+    def num_internal(self) -> int:
+        return 2 ** self.max_depth - 1
+
+    @property
+    def num_leaves(self) -> int:
+        return 2 ** self.max_depth
+
+
+@dataclasses.dataclass(frozen=True)
+class FedGBFConfig:
+    """FedGBF / Dynamic FedGBF training configuration (Algs. 1 & 3).
+
+    ``n_trees_*`` and ``rho_id_*`` describe the dynamic schedules of
+    §3.2.2; setting min == max recovers static FedGBF, and
+    ``n_trees == 1, rho_id == 1`` recovers SecureBoost exactly.
+    """
+
+    rounds: int = 20                  # M, boosting rounds
+    learning_rate: float = 0.1
+    tree: TreeConfig = dataclasses.field(default_factory=TreeConfig)
+    loss: str = "logistic"            # "logistic" | "squared"
+
+    # Forest size schedule (dynamic decay, eq. 7): t_max -> t_min at speed t_k.
+    n_trees_max: int = 5
+    n_trees_min: int = 5
+    n_trees_speed: float = 1.0
+
+    # Sample-rate schedule (dynamic increase, eq. 6): S_min -> S_max, speed S_k.
+    rho_id_min: float = 1.0
+    rho_id_max: float = 1.0
+    rho_id_speed: float = 1.0
+
+    rho_feat: float = 1.0             # feature sampling rate (static in the paper)
+    base_score: float = 0.0           # initial prediction (paper: y_hat^(0) = 0)
+
+
+class EnsembleModel(NamedTuple):
+    """A trained (Dynamic) FedGBF model: one forest per boosting round.
+
+    Rounds may have different tree counts (dynamic schedule), so forests live
+    in a Python tuple (of stacked TreeArrays) rather than one array.
+    """
+
+    forests: tuple               # tuple[TreeArrays, ...], each with leading tree axis
+    learning_rate: float
+    base_score: float
+    bin_edges: jnp.ndarray       # (d, num_bins - 1) — quantile edges used in training
+    loss: str
+    max_depth: int
+
+    @property
+    def rounds(self) -> int:
+        return len(self.forests)
+
+    @property
+    def total_trees(self) -> int:
+        return sum(forest_size(f) for f in self.forests)

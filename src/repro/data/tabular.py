@@ -1,0 +1,82 @@
+"""Vertical partitioning of tabular data across parties (Table 1 / FATE-style).
+
+In VFL every party holds the same rows (after private-set-intersection
+alignment, which we model as an id-sorted join) but a disjoint *column* slice.
+The active party (party 0) additionally holds the labels.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+
+class VerticalPartition(NamedTuple):
+    """Column ownership: party p owns columns [offsets[p], offsets[p+1])."""
+
+    offsets: tuple  # len = num_parties + 1, offsets[0] == 0
+    num_features: int
+
+    @property
+    def num_parties(self) -> int:
+        return len(self.offsets) - 1
+
+    def columns(self, party: int) -> slice:
+        return slice(self.offsets[party], self.offsets[party + 1])
+
+    def owner_of(self, feature: int) -> int:
+        """Which party owns a global feature index."""
+        for p in range(self.num_parties):
+            if self.offsets[p] <= feature < self.offsets[p + 1]:
+                return p
+        raise IndexError(feature)
+
+    def dims(self) -> tuple:
+        return tuple(
+            self.offsets[p + 1] - self.offsets[p] for p in range(self.num_parties)
+        )
+
+
+def partition_from_dims(dims: Sequence[int]) -> VerticalPartition:
+    offsets = [0]
+    for d in dims:
+        offsets.append(offsets[-1] + int(d))
+    return VerticalPartition(offsets=tuple(offsets), num_features=offsets[-1])
+
+
+def even_partition(num_features: int, num_parties: int) -> VerticalPartition:
+    """Equal column shards — the layout the shard_map runtime uses, where the
+    party axis is a mesh axis and every shard must have identical width.
+    Features are padded (by the caller) when d % parties != 0."""
+    if num_features % num_parties != 0:
+        raise ValueError(
+            f"{num_features} features do not shard evenly over {num_parties} "
+            "parties; pad columns first (see pad_features)."
+        )
+    w = num_features // num_parties
+    return partition_from_dims([w] * num_parties)
+
+
+def pad_features(x: np.ndarray, num_parties: int) -> tuple[np.ndarray, int]:
+    """Right-pad with constant columns so d % num_parties == 0.
+
+    Constant columns can never be chosen by split finding (zero gain), so
+    padding is semantically inert; returns (padded_x, d_padded).
+    """
+    n, d = x.shape
+    rem = (-d) % num_parties
+    if rem == 0:
+        return x, d
+    pad = np.zeros((n, rem), dtype=x.dtype)
+    return np.concatenate([x, pad], axis=1), d + rem
+
+
+def aligned_intersection(ids_a: np.ndarray, ids_b: np.ndarray) -> np.ndarray:
+    """Private-set-intersection stand-in: sorted intersection of sample ids.
+
+    The real protocol (Liang & Chawathe 2004) reveals only the intersection;
+    computationally that is exactly np.intersect1d, which is what both sides
+    end up ordering their rows by.
+    """
+    return np.intersect1d(ids_a, ids_b)

@@ -1,0 +1,1 @@
+from repro.federation import aggregator, mesh_roles, protocol, secure, vfl  # noqa: F401

@@ -1,0 +1,137 @@
+"""Per-party collectives of the VFL protocol, as jax.lax primitives.
+
+Two aggregation modes (DESIGN.md §2, EXPERIMENTS.md §Perf):
+
+* ``"histogram"`` — paper-faithful: every party ships its full per-shard
+  histogram to the active party (Alg. 2 step 7). In SPMD this is an
+  ``all_gather`` over the party axis; bytes = nodes * d_party * B * 3 per
+  party per level.
+* ``"argmax"`` — beyond-paper collective optimisation: each party evaluates
+  its local best split and only the (gain, feature, threshold) candidates are
+  exchanged; bytes = nodes * 3 per party per level, a ~d_party*B/1
+  reduction of the dominant protocol message. Lossless: the global argmax of
+  per-party argmaxes equals the argmax of the union (ties broken towards the
+  lower party id, matching jnp.argmax's first-occurrence rule on the
+  concatenated axis).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import histogram as hist_mod
+from repro.core import split as split_mod
+from repro.core.split import SplitDecision
+from repro.core.types import TreeConfig
+from repro.federation import mesh_roles
+
+
+def federated_histogram_fn(
+    party_axis: str = mesh_roles.PARTY_AXIS,
+    data_axes: tuple = (),
+    base_fn: Callable = hist_mod.compute_histogram,
+):
+    """Histogram provider running *inside* shard_map.
+
+    Computes the local-shard histogram, psums over sample shards (the
+    beyond-FATE multi-worker extension — histograms are additive), then
+    all-gathers over parties so split selection sees the global histogram,
+    mirroring "send summed ciphertext bins to the active party".
+    """
+
+    def fn(binned_shard, g, h, weight, assign, num_nodes, num_bins):
+        local = base_fn(binned_shard, g, h, weight, assign, num_nodes, num_bins)
+        for ax in data_axes:
+            local = jax.lax.psum(local, ax)
+        return jax.lax.all_gather(local, party_axis, axis=1, tiled=True)
+
+    return fn
+
+
+def local_histogram_fn(
+    party_axis: str = mesh_roles.PARTY_AXIS,
+    data_axes: tuple = (),
+    base_fn: Callable = hist_mod.compute_histogram,
+):
+    """Like federated_histogram_fn but WITHOUT the party all-gather — used by
+    the argmax aggregation mode, where histograms stay party-local."""
+
+    def fn(binned_shard, g, h, weight, assign, num_nodes, num_bins):
+        local = base_fn(binned_shard, g, h, weight, assign, num_nodes, num_bins)
+        for ax in data_axes:
+            local = jax.lax.psum(local, ax)
+        return local
+
+    return fn
+
+
+def federated_choose_fn(cfg: TreeConfig, party_axis: str = mesh_roles.PARTY_AXIS):
+    """Split chooser for the ``argmax`` mode: local best, then global argmax.
+
+    Receives the *party-local* histogram (nodes, d_party, B, 3); returns a
+    SplitDecision with global feature ids, identical on every party.
+    """
+
+    def fn(hist_local, feature_mask_local):
+        d_party = hist_local.shape[1]
+        p = jax.lax.axis_index(party_axis)
+        local = split_mod.choose_splits(
+            hist_local, feature_mask_local, cfg,
+            feature_offset=p * d_party,
+        )
+        # Exchange only the candidate tuples (the small message).
+        gains = jax.lax.all_gather(local.gain, party_axis)       # (P, nodes)
+        feats = jax.lax.all_gather(local.feature, party_axis)    # (P, nodes)
+        thrs = jax.lax.all_gather(local.threshold, party_axis)   # (P, nodes)
+        best_party = jnp.argmax(gains, axis=0)                   # (nodes,)
+        take = lambda a: jnp.take_along_axis(a, best_party[None, :], axis=0)[0]
+        return SplitDecision(
+            feature=take(feats), threshold=take(thrs), gain=take(gains)
+        )
+
+    return fn
+
+
+def centralized_choose_fn(cfg: TreeConfig, party_axis: str = mesh_roles.PARTY_AXIS):
+    """Split chooser for the ``histogram`` mode: the gathered global histogram
+    is evaluated identically on every party (the active party's computation,
+    replicated by SPMD). The feature mask arrives as the local slice and is
+    gathered to match the gathered histogram."""
+
+    def fn(hist_global, feature_mask_local):
+        fmask = jax.lax.all_gather(
+            feature_mask_local, party_axis, axis=0, tiled=True
+        )
+        return split_mod.choose_splits(hist_global, fmask, cfg)
+
+    return fn
+
+
+def federated_route_fn(party_axis: str = mesh_roles.PARTY_AXIS):
+    """Ownership-masked routing (Alg. 2 step 3 / SecureBoost step 4).
+
+    The winning feature belongs to exactly one party; that party computes the
+    left/right partition of the frontier samples and the bitmap is shared —
+    in SPMD, a psum of the masked contribution.
+    """
+
+    def fn(binned_shard, assign, decision):
+        n, d_party = binned_shard.shape
+        rows = jnp.arange(n)
+        p = jax.lax.axis_index(party_axis)
+        f_global = decision.feature[assign]       # (n,) global ids, -1 = no split
+        f_local = f_global - p * d_party
+        owned = (f_local >= 0) & (f_local < d_party)
+        fv = binned_shard[rows, jnp.clip(f_local, 0, d_party - 1)]
+        thr = decision.threshold[assign]
+        go_right_local = jnp.where(
+            owned & (f_global >= 0), (fv > thr).astype(jnp.int32), 0
+        )
+        go_right = jax.lax.psum(go_right_local, party_axis)
+        return assign * 2 + go_right
+
+    return fn

@@ -1,0 +1,36 @@
+"""Mesh-axis roles shared by the tabular VFL runtime and the LM substrate.
+
+The same physical mesh serves both workloads (DESIGN.md §5):
+
+  axis "model" — VFL *parties* (feature shards) for FedGBF;
+                 tensor-parallel shards (heads / d_ff / experts) for the LMs.
+  axis "data"  — sample shards (histograms are psum-additive);
+                 batch shards / FSDP for the LMs.
+  axis "pod"   — multi-pod replication folded into data parallelism.
+
+Party 0 of the "model" axis is the *active* party (label holder); the
+remaining shards are passive parties. For the dry-run the mesh is built by
+``launch.mesh.make_production_mesh``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+PARTY_AXIS = "model"
+DATA_AXIS = "data"
+POD_AXIS = "pod"
+
+
+def party_index(axis: str = PARTY_AXIS) -> jax.Array:
+    """This shard's party id (inside shard_map)."""
+    return jax.lax.axis_index(axis)
+
+
+def num_parties(mesh: jax.sharding.Mesh, axis: str = PARTY_AXIS) -> int:
+    return mesh.shape[axis]
+
+
+def data_axes(mesh: jax.sharding.Mesh) -> tuple:
+    """All sample-sharding axes present in the mesh (pod folds into data)."""
+    return tuple(a for a in (POD_AXIS, DATA_AXIS) if a in mesh.shape)

@@ -1,0 +1,141 @@
+"""Message ledger: exact per-round communication volume of the VFL protocol.
+
+The paper motivates FedGBF by SecureBoost's "high interactive communication
+costs" but never quantifies them; this module does, from first principles, so
+the communication claim becomes measurable (benchmarks/communication.py) and
+so the dry-run's collective-roofline term for the tabular workload has a
+ground truth to compare against.
+
+Message inventory per *tree* (Alg. 2), with n = samples, d_p = party p's
+features, B = bins, L = levels (= max_depth), P = passive parties:
+
+  1. grad broadcast     active -> each passive: n ciphertext pairs (g, h)
+                        [once per boosting round, shared by the round's trees
+                        when sample masks are communicated as id lists]
+  2. histograms         each passive -> active, per level:
+                        nodes(l) * d_p * B * 2 ciphertexts  ("histogram" mode)
+                        or nodes(l) * (1 gain + 1 feat + 1 thr) plaintexts
+                        ("argmax" mode — the beyond-paper variant)
+  3. split notify       active -> owner party: nodes(l) small tuples
+  4. id partition       owner -> active: n-bit bitmap per level
+
+Ciphertext size: Paillier with ``key_bits`` modulus has 2*key_bits-bit
+ciphertexts (mod N^2); FATE's default key is 1024 bits -> 256 B each.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core import dynamic
+from repro.core.types import FedGBFConfig
+
+
+@dataclass(frozen=True)
+class ProtocolCosts:
+    """Per-phase byte counts for one full training run."""
+
+    grad_broadcast: int
+    histograms: int
+    split_notify: int
+    id_partition: int
+
+    @property
+    def total(self) -> int:
+        return (
+            self.grad_broadcast + self.histograms
+            + self.split_notify + self.id_partition
+        )
+
+    def breakdown(self) -> dict:
+        return {
+            "grad_broadcast": self.grad_broadcast,
+            "histograms": self.histograms,
+            "split_notify": self.split_notify,
+            "id_partition": self.id_partition,
+            "total": self.total,
+        }
+
+
+@dataclass(frozen=True)
+class ProtocolSpec:
+    n_samples: int
+    party_dims: tuple          # features per passive+active party (active first)
+    num_bins: int = 32
+    max_depth: int = 3
+    key_bits: int = 1024       # Paillier modulus
+    aggregation: str = "histogram"   # or "argmax"
+
+    @property
+    def ciphertext_bytes(self) -> int:
+        return 2 * self.key_bits // 8
+
+    @property
+    def passive_parties(self) -> int:
+        return len(self.party_dims) - 1
+
+
+def tree_cost(spec: ProtocolSpec, rho_id: float, rho_feat: float) -> ProtocolCosts:
+    """Bytes exchanged to build ONE tree (grad broadcast excluded; it is
+    per-round, see run_cost)."""
+    n = int(round(spec.n_samples * rho_id))
+    ct = spec.ciphertext_bytes
+    hist_bytes = 0
+    notify_bytes = 0
+    partition_bytes = 0
+    for level in range(spec.max_depth):
+        nodes = 2**level
+        for d_p in spec.party_dims[1:]:  # passive parties only send histograms
+            d_eff = max(1, int(round(d_p * rho_feat)))
+            if spec.aggregation == "histogram":
+                hist_bytes += nodes * d_eff * spec.num_bins * 2 * ct
+            else:  # argmax: gain (f32) + feature (i32) + threshold (i32)
+                hist_bytes += nodes * 12
+        notify_bytes += nodes * 12
+        partition_bytes += (n + 7) // 8  # one n-bit bitmap per level
+    return ProtocolCosts(
+        grad_broadcast=0,
+        histograms=hist_bytes,
+        split_notify=notify_bytes,
+        id_partition=partition_bytes,
+    )
+
+
+def run_cost(spec: ProtocolSpec, cfg: FedGBFConfig) -> ProtocolCosts:
+    """Total bytes for a full (Dynamic) FedGBF training run under ``cfg``."""
+    ct = spec.ciphertext_bytes
+    grad = hist = notify = part = 0
+    for m in range(1, cfg.rounds + 1):
+        n_trees = dynamic.n_trees_schedule(cfg, m)
+        rho_id = dynamic.rho_id_schedule(cfg, m)
+        n_eff = int(round(spec.n_samples * rho_id))
+        # one encrypted (g, h) broadcast per round, to each passive party,
+        # restricted to the union of sampled ids (bounded by n_eff * trees)
+        grad += spec.passive_parties * min(
+            spec.n_samples, n_eff * n_trees
+        ) * 2 * ct
+        for _ in range(n_trees):
+            c = tree_cost(spec, rho_id, cfg.rho_feat)
+            hist += c.histograms
+            notify += c.split_notify
+            part += c.id_partition
+    return ProtocolCosts(grad, hist, notify, part)
+
+
+@dataclass
+class Ledger:
+    """Mutable run-time ledger for drivers that want live accounting."""
+
+    entries: list = field(default_factory=list)
+
+    def record(self, phase: str, nbytes: int, round_idx: int) -> None:
+        self.entries.append({"phase": phase, "bytes": int(nbytes), "round": round_idx})
+
+    def total(self) -> int:
+        return sum(e["bytes"] for e in self.entries)
+
+    def by_phase(self) -> dict:
+        out: dict = {}
+        for e in self.entries:
+            out[e["phase"]] = out.get(e["phase"], 0) + e["bytes"]
+        return out

@@ -1,0 +1,53 @@
+"""Secure-aggregation simulation (information-flow model, not cryptography).
+
+TPU inapplicability note (DESIGN.md §2): Paillier is modular big-integer
+arithmetic with no TPU analogue — forcing it through the MXU would be a
+degenerate port. What the *system* needs from the crypto layer is its
+algebra: passive parties can SUM encrypted values they cannot READ. We model
+that with pairwise additive masking over float32 (the SecAgg construction of
+Bonawitz et al., adapted to VFL): party p adds PRF(seed_pq)-derived masks
+that cancel in the aggregate. The active party sees only the sum, passive
+parties see only masked values — the same visibility set as Paillier, minus
+semantic security of individual messages (which we do not claim).
+
+Used by examples/vfl_credit_scoring.py to demonstrate the protocol flow; the
+shard_map hot path exchanges plaintext aggregates (the quantities that are
+decrypted in the real protocol anyway) and charges the Paillier byte cost via
+protocol.ProtocolSpec.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_masks(
+    seed: int, num_parties: int, shape: tuple, dtype=jnp.float32
+) -> jnp.ndarray:
+    """masks[p] for each party, with sum_p masks[p] == 0 exactly.
+
+    mask_p = sum_{q>p} PRF(p,q) - sum_{q<p} PRF(q,p): every PRF term appears
+    once with each sign, so the sum telescopes to zero (exact in float because
+    the identical bit patterns cancel pairwise).
+    """
+    masks = [jnp.zeros(shape, dtype) for _ in range(num_parties)]
+    for p in range(num_parties):
+        for q in range(p + 1, num_parties):
+            prf = jax.random.normal(
+                jax.random.fold_in(jax.random.PRNGKey(seed), p * num_parties + q),
+                shape, dtype,
+            )
+            masks[p] = masks[p] + prf
+            masks[q] = masks[q] - prf
+    return jnp.stack(masks)
+
+
+def mask(values: jnp.ndarray, masks: jnp.ndarray) -> jnp.ndarray:
+    """Each party's masked contribution: values[p] + masks[p]."""
+    return values + masks
+
+
+def aggregate(masked: jnp.ndarray) -> jnp.ndarray:
+    """Active-party aggregation: sum over parties; masks cancel exactly."""
+    return jnp.sum(masked, axis=0)

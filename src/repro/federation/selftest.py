@@ -1,0 +1,83 @@
+"""Losslessness self-check: federated (shard_map) == centralized trees.
+
+Run in a subprocess with multiple CPU devices, e.g.:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.federation.selftest
+
+Exits non-zero on any mismatch. tests/test_federation.py shells out to this
+module so the main pytest process keeps its single-device view.
+"""
+
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import binning, forest, losses
+from repro.core.types import TreeConfig
+from repro.federation import vfl
+
+
+def check(num_parties: int, aggregation: str, shard_samples: bool) -> None:
+    mesh_axes = ("data", "model")
+    n_dev = len(jax.devices())
+    data_dim = n_dev // num_parties
+    mesh = jax.make_mesh((data_dim, num_parties), mesh_axes)
+
+    rng = np.random.default_rng(0)
+    n, d = 512, num_parties * 3
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+    cfg = TreeConfig(max_depth=3, num_bins=16)
+
+    binned, _ = binning.fit_bin(x, cfg.num_bins)
+    g, h = losses.grad_hess("logistic", y, jnp.zeros(n))
+    smask, fmask = forest.sample_masks(jax.random.PRNGKey(7), n, d, 4, 0.8, 1.0)
+
+    trees_c, pred_c = forest.build_forest(binned, g, h, smask, fmask, cfg)
+
+    fed_fn = vfl.make_federated_forest_fn(
+        mesh, cfg, aggregation=aggregation, shard_samples=shard_samples
+    )
+    with jax.set_mesh(mesh):
+        trees_f, pred_f = fed_fn(binned, g, h, smask, fmask)
+
+    np.testing.assert_array_equal(
+        np.asarray(trees_c.feature), np.asarray(trees_f.feature),
+        err_msg=f"feature mismatch ({aggregation}, shard_samples={shard_samples})",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(trees_c.threshold), np.asarray(trees_f.threshold)
+    )
+    np.testing.assert_allclose(
+        np.asarray(trees_c.leaf_weight), np.asarray(trees_f.leaf_weight),
+        rtol=1e-5, atol=1e-6,
+    )
+    np.testing.assert_allclose(
+        np.asarray(pred_c), np.asarray(pred_f), rtol=1e-5, atol=1e-6
+    )
+    print(
+        f"OK lossless: parties={num_parties} aggregation={aggregation} "
+        f"shard_samples={shard_samples}"
+    )
+
+
+def main() -> int:
+    n_dev = len(jax.devices())
+    if n_dev < 4:
+        print(f"need >= 4 devices, got {n_dev} (set XLA_FLAGS)", file=sys.stderr)
+        return 2
+    for aggregation in ("histogram", "argmax"):
+        for shard_samples in (False, True):
+            check(num_parties=4, aggregation=aggregation, shard_samples=shard_samples)
+    check(num_parties=2, aggregation="histogram", shard_samples=True)
+    print("ALL FEDERATION SELF-TESTS PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,2 @@
+from repro.kernels.ensemble_predict import ops, ref  # noqa: F401
+from repro.kernels.ensemble_predict.ops import predict_forest_pallas  # noqa: F401

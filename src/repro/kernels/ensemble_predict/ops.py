@@ -1,0 +1,44 @@
+"""Jitted wrapper: drop-in for ``core.tree.predict_forest``."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import TreeArrays
+from repro.kernels.ensemble_predict.ensemble_predict import (
+    predict_forest_pallas_call,
+)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("max_depth", "tile_n", "interpret"))
+def predict_forest_pallas(
+    trees: TreeArrays,       # stacked: leading axis n_trees
+    binned: jnp.ndarray,     # (n, d) int32
+    max_depth: int,
+    *,
+    tile_n: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Bagging-mean forest prediction, (n,) float32."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, d = binned.shape
+    n_pad = ((n + tile_n - 1) // tile_n) * tile_n
+    binned_p = jnp.pad(binned, ((0, n_pad - n), (0, 0)))
+    out = predict_forest_pallas_call(
+        binned_p,
+        trees.feature.astype(jnp.int32),
+        trees.threshold.astype(jnp.int32),
+        trees.leaf_weight.astype(jnp.float32),
+        max_depth=max_depth,
+        tile_n=tile_n,
+        interpret=interpret,
+    )
+    return out[:n]

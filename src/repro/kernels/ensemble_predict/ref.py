@@ -1,0 +1,4 @@
+"""Pure-jnp oracle: the level-wise gather traversal used by the library."""
+
+from repro.core.tree import predict_forest as predict_forest_ref  # noqa: F401
+from repro.core.tree import predict_tree  # noqa: F401

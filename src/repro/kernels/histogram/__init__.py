@@ -1,0 +1,2 @@
+from repro.kernels.histogram import ops, ref  # noqa: F401
+from repro.kernels.histogram.ops import compute_histogram_pallas  # noqa: F401

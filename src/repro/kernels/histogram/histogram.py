@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: gradient-histogram accumulation as one-hot MXU matmuls.
+
+TPU adaptation (DESIGN.md §2). GPU GBDTs accumulate histograms with atomic
+scatter-adds into shared memory; TPUs have neither atomics nor arbitrary
+scatter. Instead we express the histogram as a dense contraction
+
+    hist[f, :, :] = onehot(node * B + bin[:, f])^T  @  [g*w, h*w, w]
+                    (NB x T)                           (T x 3)
+
+which the MXU executes as an ordinary matmul. Key layout decisions:
+
+* ``NB = num_nodes * num_bins`` is the matmul N dimension; with the paper's
+  depth-3 trees and B = 32 the deepest frontier gives NB = 128 — exactly one
+  MXU tile. ``ops.py`` pads NB to a multiple of 128 otherwise.
+* The sample axis T is the contraction dimension; we tile it with
+  ``tile_n`` rows per grid step and accumulate across grid axis 0 (TPU grid
+  iterations are sequential, so read-modify-write on the output block is the
+  standard revisiting-accumulator pattern, initialised at program_id(0) == 0).
+* The stats axis (g, h, count) is padded to ``STATS_PAD = 8`` sublanes; the
+  wrapper slices back to 3. The matmul is memory-bound (we stream ids once),
+  so the pad costs bandwidth-nothing.
+* Features are processed ``feat_block`` per grid step (grid axis 1), looped
+  inside the kernel with a fori_loop; each feature's one-hot lives only in
+  VMEM/VREGs — the (T x NB) one-hot never touches HBM, which is the entire
+  point versus materialising ``jax.nn.one_hot`` in XLA.
+
+VMEM budget per step (tile_n=512, NB<=1024, feat_block=8, f32):
+ids 512*8*4 = 16 KiB, data 512*8*4 = 16 KiB, onehot 512*1024*4 = 2 MiB,
+out 8*1024*8*4 = 256 KiB — comfortably inside the ~16 MiB/core VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+STATS = 3      # sum_g, sum_h, count
+STATS_PAD = 8  # sublane-aligned stats width inside the kernel
+
+
+def _histogram_kernel(ids_ref, data_ref, out_ref, *, nb: int, feat_block: int):
+    """One grid step: accumulate ``feat_block`` features for one sample tile.
+
+    ids_ref:  (tile_n, feat_block) int32 — node * B + bin, -1 for padded rows
+    data_ref: (tile_n, STATS_PAD) float32 — [g*w, h*w, w, 0...]
+    out_ref:  (feat_block, nb, STATS_PAD) float32 — accumulated histogram
+    """
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    data = data_ref[...]  # (T, STATS_PAD)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (ids_ref.shape[0], nb), 1)
+
+    def body(f, carry):
+        ids_col = ids_ref[:, f]  # (T,)
+        onehot = (ids_col[:, None] == iota).astype(jnp.float32)  # (T, NB)
+        # (NB, T) @ (T, STATS_PAD) on the MXU.
+        acc = jax.lax.dot_general(
+            onehot, data,
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (NB, STATS_PAD)
+        out_ref[f, :, :] += acc
+        return carry
+
+    jax.lax.fori_loop(0, feat_block, body, 0)
+
+
+def histogram_pallas_call(
+    ids: jnp.ndarray,
+    data: jnp.ndarray,
+    nb: int,
+    *,
+    tile_n: int = 512,
+    feat_block: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Raw pallas_call. Caller guarantees padding invariants (see ops.py):
+
+    ids  (n_pad, d_pad) int32, n_pad % tile_n == 0, d_pad % feat_block == 0,
+         values in [0, nb); padded rows may hold any id because their data is 0.
+    data (n_pad, STATS_PAD) float32, zero rows where padded/masked.
+
+    Returns (d_pad, nb, STATS_PAD) float32.
+    """
+    n_pad, d_pad = ids.shape
+    grid = (n_pad // tile_n, d_pad // feat_block)
+
+    return pl.pallas_call(
+        functools.partial(_histogram_kernel, nb=nb, feat_block=feat_block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, feat_block), lambda i, j: (i, j)),
+            pl.BlockSpec((tile_n, STATS_PAD), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((feat_block, nb, STATS_PAD), lambda i, j: (j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d_pad, nb, STATS_PAD), jnp.float32),
+        interpret=interpret,
+    )(ids, data)

@@ -1,0 +1,75 @@
+"""Jitted wrapper for the Pallas histogram kernel.
+
+Drop-in replacement for ``core.histogram.compute_histogram`` (selected via
+``histogram_dispatch("pallas")``): handles id fusion, padding to tile
+boundaries, and un-padding of the result. ``interpret`` defaults to True off
+TPU so the same code path validates on CPU.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.histogram.histogram import (
+    STATS,
+    STATS_PAD,
+    histogram_pallas_call,
+)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@partial(
+    jax.jit,
+    static_argnames=("num_nodes", "num_bins", "tile_n", "feat_block", "interpret"),
+)
+def compute_histogram_pallas(
+    binned: jnp.ndarray,
+    g: jnp.ndarray,
+    h: jnp.ndarray,
+    weight: jnp.ndarray,
+    assign: jnp.ndarray,
+    num_nodes: int,
+    num_bins: int,
+    *,
+    tile_n: int = 512,
+    feat_block: int = 8,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Same contract as ``core.histogram.compute_histogram``.
+
+    Returns (num_nodes, d, num_bins, 3) float32.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, d = binned.shape
+    nb = num_nodes * num_bins
+    # MXU lane alignment: pad the one-hot width to 128 (see kernel docstring).
+    nb_pad = _round_up(nb, 128)
+
+    ids = assign[:, None] * num_bins + binned  # (n, d)
+    data = jnp.stack(
+        [g * weight, h * weight, weight], axis=-1
+    ).astype(jnp.float32)  # (n, 3)
+
+    n_pad = _round_up(n, tile_n)
+    d_pad = _round_up(d, feat_block)
+    ids = jnp.pad(ids, ((0, n_pad - n), (0, d_pad - d)))
+    data = jnp.pad(data, ((0, n_pad - n), (0, STATS_PAD - STATS)))
+
+    hist = histogram_pallas_call(
+        ids, data, nb_pad,
+        tile_n=tile_n, feat_block=feat_block, interpret=interpret,
+    )  # (d_pad, nb_pad, STATS_PAD)
+
+    hist = hist[:d, :nb, :STATS]
+    return hist.reshape(d, num_nodes, num_bins, STATS).transpose(1, 0, 2, 3)

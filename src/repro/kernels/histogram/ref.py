@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the Pallas histogram kernel.
+
+The reference is the segment-sum implementation used by the portable CPU
+path; the kernel must match it exactly (float32 accumulation in both).
+"""
+
+from repro.core.histogram import compute_histogram as histogram_ref  # noqa: F401
+from repro.core.histogram import compute_histogram_onehot  # noqa: F401

@@ -1,0 +1,39 @@
+"""Production mesh construction (deliverable e).
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state; callers (dryrun.py) force the placeholder device count via
+XLA_FLAGS *before* any jax import.
+
+Mesh roles (shared with the tabular VFL runtime, federation/mesh_roles.py):
+  single pod   (16, 16)      -> ("data", "model")       256 chips
+  multi-pod    (2, 16, 16)   -> ("pod", "data", "model") 512 chips
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(num_devices: int | None = None):
+    """Small mesh for in-pytest dry-run smoke (8 forced host devices)."""
+    n = num_devices or len(jax.devices())
+    model = 2 if n % 2 == 0 else 1
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def batch_axes(mesh: jax.sharding.Mesh) -> tuple:
+    """Axes the global batch shards over (pod folds into data)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+# TPU v5e hardware constants used by the roofline (tools/roofline.py).
+PEAK_FLOPS_BF16 = 197e12     # per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (per direction)
+HBM_BYTES = 16 * 2**30       # 16 GiB per chip

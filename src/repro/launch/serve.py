@@ -1,0 +1,88 @@
+"""Batched serving driver (deliverable b): prefill + decode loop with a KV
+cache, greedy/temperature sampling over batched requests.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
+        --batch 4 --prompt-len 32 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import model as model_mod
+
+
+def generate(params, cfg, prompts: jnp.ndarray, gen_len: int,
+             temperature: float = 0.0, stubs: dict | None = None):
+    """prompts: (B, P) int32 -> (B, P + gen_len)."""
+    B, P = prompts.shape
+    max_len = P + gen_len
+    cache = model_mod.init_cache(cfg, B, max_len)
+    if cfg.encoder is not None:
+        enc_out = model_mod.encode(params, stubs["frames"], cfg)
+        cache = model_mod.fill_cross_cache(params, cache, enc_out, cfg)
+
+    step = jax.jit(
+        lambda p, c, t, pos: model_mod.decode_step(p, c, t, pos, cfg)
+    )
+    key = jax.random.PRNGKey(0)
+    out = [prompts]
+    tok = None
+    # teacher-forced prefill through the decode path (fills every cache)
+    for t in range(P):
+        logits, cache = step(params, cache, prompts[:, t : t + 1], jnp.int32(t))
+    tok = jnp.argmax(logits[:, :, : cfg.vocab], axis=-1).astype(jnp.int32)
+    for t in range(P, max_len):
+        out.append(tok)
+        logits, cache = step(params, cache, tok, jnp.int32(t))
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits[:, 0, : cfg.vocab] / temperature
+            )[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, :, : cfg.vocab], axis=-1).astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    rng = np.random.default_rng(0)
+    params = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32
+    )
+    stubs = {}
+    if cfg.frontend == "audio_stub":
+        stubs["frames"] = jnp.asarray(rng.normal(
+            size=(args.batch, cfg.encoder.num_frames, cfg.d_model)
+        ), jnp.float32)
+
+    t0 = time.time()
+    out = generate(params, cfg, prompts, args.gen,
+                   temperature=args.temperature, stubs=stubs)
+    dt = time.time() - t0
+    total_steps = args.prompt_len + args.gen
+    print(f"arch={cfg.name} batch={args.batch} "
+          f"steps={total_steps} wall={dt:.1f}s "
+          f"({args.batch * total_steps / dt:.1f} tok/s incl. compile)")
+    print("sample token ids:", np.asarray(out[0, :24]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Assigned input shapes (deliverable f) and ShapeDtypeStruct input specs.
+
+  train_4k     seq=4096    global_batch=256   lowers train_step
+  prefill_32k  seq=32768   global_batch=32    lowers prefill (full forward)
+  decode_32k   seq=32768   global_batch=128   lowers serve_step (1 token, KV cache)
+  long_500k    seq=524288  global_batch=1     lowers serve_step; sub-quadratic archs only
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStructs for
+every model input — shardable stand-ins, no device allocation.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+# long_500k applicability (DESIGN.md §4): SSM/hybrid/linear-attention archs
+# plus dense archs with a sliding-window variant.
+LONG_OK = {"zamba2-7b", "rwkv6-7b", "gemma2-2b", "mixtral-8x22b"}
+
+
+def applicable(arch_id: str, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped)."""
+    if shape_name == "long_500k" and arch_id not in LONG_OK:
+        return False, "full-attention arch: long_500k skipped (DESIGN.md §4)"
+    return True, ""
+
+
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def stub_specs(cfg: ModelConfig, batch: int) -> dict:
+    out = {}
+    if cfg.frontend == "vision_stub":
+        out["patch_embeds"] = _sd(
+            (batch, cfg.num_patches, cfg.d_model), jnp.float32
+        )
+    if cfg.frontend == "audio_stub":
+        out["frames"] = _sd(
+            (batch, cfg.encoder.num_frames, cfg.d_model), jnp.float32
+        )
+    return out
+
+
+def train_input_specs(cfg: ModelConfig, spec: ShapeSpec) -> dict:
+    batch = {
+        "tokens": _sd((spec.global_batch, spec.seq_len), jnp.int32),
+        "labels": _sd((spec.global_batch, spec.seq_len), jnp.int32),
+    }
+    batch.update(stub_specs(cfg, spec.global_batch))
+    return batch
+
+
+def prefill_input_specs(cfg: ModelConfig, spec: ShapeSpec) -> dict:
+    batch = {"tokens": _sd((spec.global_batch, spec.seq_len), jnp.int32)}
+    batch.update(stub_specs(cfg, spec.global_batch))
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, spec: ShapeSpec) -> dict:
+    """token + pos + cache (cache shapes via eval_shape of init_cache)."""
+    from repro.models import model as model_mod
+
+    cache = jax.eval_shape(
+        lambda: model_mod.init_cache(cfg, spec.global_batch, spec.seq_len)
+    )
+    return {
+        "token": _sd((spec.global_batch, 1), jnp.int32),
+        "pos": _sd((), jnp.int32),
+        "cache": cache,
+    }
+
+
+def input_specs_for(cfg: ModelConfig, spec: ShapeSpec) -> dict:
+    if spec.kind == "train":
+        return train_input_specs(cfg, spec)
+    if spec.kind == "prefill":
+        return prefill_input_specs(cfg, spec)
+    return decode_input_specs(cfg, spec)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    return input_specs_for(cfg, SHAPES[shape_name])

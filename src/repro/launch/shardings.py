@@ -1,0 +1,161 @@
+"""Parameter / activation / cache PartitionSpecs for the LM substrate.
+
+Rules (DESIGN.md §5): weight matrices shard their contraction structure as
+(FSDP over "data", tensor-parallel over "model") —
+
+  up-projections   (..., D_in, D_out):  P(..., "data", "model")
+  down-projections (..., D_in, D_out):  P(..., "model", "data")
+  expert weights   (U, E, D, F):        same on the trailing two dims
+  vectors / norms / small tables:       replicated
+
+An axis is dropped whenever the dim is not divisible by the mesh axis size —
+divisibility is checked per-leaf, so MQA (kv=1) K/V projections replicate on
+"model" automatically while the 48-head Q shards. Caches shard batch over
+(pod, data) and the cache-length (or head) dim over "model" when divisible.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+# Param leaves whose LAST TWO dims shard ("model", "data") instead of
+# ("data", "model") — the down/output projections.
+_REVERSED = {"w_down", "w_out", "wo", "out_proj"}
+# Leaves that stay replicated regardless of shape.
+_REPLICATED = {"scale", "bias", "mu", "u", "w0", "A_log", "D", "dt_bias",
+               "norm", "ln_scale", "ln_bias", "router"}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def _divides(dim: int, axis: str, mesh: Mesh) -> bool:
+    return axis in mesh.shape and dim % mesh.shape[axis] == 0
+
+
+def _in_moe(path) -> bool:
+    return any(getattr(e, "key", None) == "moe" for e in path)
+
+
+def param_spec(path, leaf, mesh: Mesh) -> P:
+    name = _leaf_name(path)
+    shape = leaf.shape
+    if name in _REPLICATED or len(shape) < 2:
+        return P()
+    d_in, d_out = shape[-2], shape[-1]
+    lead = (None,) * (len(shape) - 2)
+    if _in_moe(path) and len(shape) >= 3:
+        # Expert weights (U, E, D, F) / (U, E, F, D): keep the up-projection
+        # contraction dim (D) REPLICATED so 'ecd,edf' needs no all-reduce;
+        # shard F over "model" (one modest psum on the down-projection).
+        # EXPERIMENTS.md §Perf granite-moe iteration 2.
+        if name in _REVERSED:  # w_down (E, F, D)
+            a_in = "model" if _divides(d_in, "model", mesh) else None
+            return P(*lead, a_in, None)
+        a_out = "model" if _divides(d_out, "model", mesh) else None
+        return P(*lead, None, a_out)
+    if name in _REVERSED:
+        a_in = "model" if _divides(d_in, "model", mesh) else None
+        a_out = "data" if _divides(d_out, "data", mesh) else None
+    else:
+        a_in = "data" if _divides(d_in, "data", mesh) else None
+        a_out = "model" if _divides(d_out, "model", mesh) else None
+    return P(*lead, a_in, a_out)
+
+
+def param_shardings(cfg, mesh: Mesh):
+    """NamedSharding pytree matching init_params(cfg) (via eval_shape)."""
+    from repro.models import model as model_mod
+
+    shapes = jax.eval_shape(
+        lambda k: model_mod.init_params(k, cfg), jax.random.PRNGKey(0)
+    )
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf, mesh)),
+        shapes,
+    )
+
+
+def train_state_shardings(cfg, mesh: Mesh):
+    """Shardings for TrainState(params, AdamWState(step, m, v)) — the AdamW
+    moments mirror the parameter shardings exactly."""
+    from repro.models import train as train_mod
+    from repro.optim.adamw import AdamWState
+
+    ps = param_shardings(cfg, mesh)
+    return train_mod.TrainState(
+        params=ps,
+        opt=AdamWState(step=replicated(mesh), m=ps, v=ps),
+    )
+
+
+def batch_spec(mesh: Mesh, ndim: int, batch_size: int | None = None) -> NamedSharding:
+    """Token/label batches: batch dim over (pod, data) when divisible;
+    falls back through (data,) alone, then replication (batch == 1)."""
+    for ba in (batch_axes(mesh), ("data",) if "data" in mesh.shape else ()):
+        if not ba:
+            continue
+        total = 1
+        for a in ba:
+            total *= mesh.shape[a]
+        if batch_size is None or batch_size % total == 0:
+            return NamedSharding(mesh, P(ba, *([None] * (ndim - 1))))
+    return NamedSharding(mesh, P(*([None] * ndim)))
+
+
+def cache_spec(path, leaf, mesh: Mesh, batch_dim: int = 1) -> NamedSharding:
+    """Decode caches: leaf shapes (U, B, ...). Shard B over (pod, data) when
+    divisible; shard the largest trailing dim over "model" — PLUS any batch
+    axes the batch dim could not use (long_500k's B=1 left 'data' idle and
+    the zamba2 shared cache peaked at 23.7 GiB/dev; folding the idle axes
+    into the cache-length dim cuts it below the 16 GiB HBM line)."""
+    shape = leaf.shape
+    ba = batch_axes(mesh)
+    total_batch_shards = 1
+    for a in ba:
+        total_batch_shards *= mesh.shape[a]
+    spec = [None] * len(shape)
+    batch_sharded = (
+        len(shape) > batch_dim and shape[batch_dim] % total_batch_shards == 0
+    )
+    if batch_sharded:
+        spec[batch_dim] = ba
+    trail_axes = ("model",) if batch_sharded else tuple(ba) + ("model",)
+    # trailing dims: pick the largest divisible dim after batch
+    for axes in (trail_axes, ("model",)):
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        best = None
+        for i in range(batch_dim + 1, len(shape)):
+            if shape[i] % total == 0 and (best is None or shape[i] > shape[best]):
+                best = i
+        if best is not None:
+            spec[best] = axes if len(axes) > 1 else axes[0]
+            break
+    return NamedSharding(mesh, P(*spec))
+
+
+def cache_shardings(cfg, mesh: Mesh, batch: int, seq_len: int):
+    from repro.models import model as model_mod
+
+    shapes = jax.eval_shape(
+        lambda: model_mod.init_cache(cfg, batch, seq_len)
+    )
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_spec(path, leaf, mesh), shapes
+    )
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

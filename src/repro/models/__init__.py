@@ -1,0 +1,8 @@
+from repro.models import blocks, layers, model, moe, ssm  # noqa: F401
+from repro.models.config import (  # noqa: F401
+    EncoderConfig,
+    ModelConfig,
+    MoEConfig,
+    RWKVConfig,
+    SSMConfig,
+)

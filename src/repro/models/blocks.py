@@ -1,0 +1,236 @@
+"""Block-level composition: init / forward / decode for every block type.
+
+A block is (params, x) -> (x, aux). Pre-norm residual throughout; gemma2 adds
+post-norms (cfg.post_norm). Decode variants thread a per-block cache.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, moe as moe_mod, ssm as ssm_mod
+
+ATTN_TYPES = {"attn", "attn_local", "attn_swa", "attn_moe", "enc_attn", "dec_attn"}
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_block(key, block_type: str, cfg) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    keys = jax.random.split(key, 8)
+    p: dict = {}
+    if block_type in ATTN_TYPES:
+        p["ln_attn"] = layers.init_norm(cfg, d)
+        p["attn"] = layers.init_attention(
+            keys[0], cfg, d, cfg.n_heads, cfg.n_kv_heads, hd
+        )
+        if cfg.post_norm:
+            p["ln_attn_post"] = layers.init_norm(cfg, d)
+        if block_type == "dec_attn":
+            p["ln_cross"] = layers.init_norm(cfg, d)
+            p["cross"] = layers.init_attention(
+                keys[1], cfg, d, cfg.n_heads, cfg.n_heads, hd, cross=True
+            )
+        p["ln_ffn"] = layers.init_norm(cfg, d)
+        if block_type in ("attn_swa", "attn_moe"):
+            p["moe"] = moe_mod.init_moe(keys[2], cfg, d, cfg.d_ff)
+        else:
+            p["ffn"] = layers.init_ffn(keys[2], cfg, d, cfg.d_ff)
+        if cfg.post_norm:
+            p["ln_ffn_post"] = layers.init_norm(cfg, d)
+    elif block_type == "mamba":
+        p["ln"] = layers.init_norm(cfg, d)
+        p["mamba"] = ssm_mod.init_mamba(keys[0], cfg, d)
+    elif block_type == "rwkv":
+        p["ln_time"] = layers.init_norm(cfg, d)
+        p["time"] = ssm_mod.init_rwkv(keys[0], cfg, d)
+        p["ln_chan"] = layers.init_norm(cfg, d)
+        p["chan"] = ssm_mod.init_rwkv_channel(keys[1], cfg, d, cfg.d_ff)
+    else:
+        raise ValueError(f"unknown block type {block_type!r}")
+    return p
+
+
+def init_shared_attn(key, cfg) -> dict:
+    """Zamba2's weight-shared attention+FFN block (applied periodically)."""
+    d, hd = cfg.d_model, cfg.hd
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln_attn": layers.init_norm(cfg, d),
+        "attn": layers.init_attention(k1, cfg, d, cfg.n_heads, cfg.n_kv_heads, hd),
+        "ln_ffn": layers.init_norm(cfg, d),
+        "ffn": layers.init_ffn(k2, cfg, d, cfg.d_ff),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward (full sequence)
+# ---------------------------------------------------------------------------
+def _attn_kwargs(block_type: str, cfg) -> dict:
+    window = cfg.window if block_type in ("attn_local", "attn_swa") else 0
+    return dict(
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+        causal=block_type != "enc_attn",
+        window=window,
+        attn_softcap=cfg.attn_softcap,
+        use_rope=cfg.pos_type == "rope",
+    )
+
+
+def block_forward(
+    p: dict, x: jnp.ndarray, block_type: str, cfg,
+    enc_out: Optional[jnp.ndarray] = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    aux = jnp.zeros((), jnp.float32)
+    if block_type in ATTN_TYPES:
+        h = layers.attention(
+            p["attn"], layers.apply_norm(p["ln_attn"], x, cfg), cfg,
+            **_attn_kwargs(block_type, cfg),
+        )
+        if cfg.post_norm:
+            h = layers.apply_norm(p["ln_attn_post"], h, cfg)
+        x = x + h
+        if block_type == "dec_attn":
+            h = layers.attention(
+                p["cross"], layers.apply_norm(p["ln_cross"], x, cfg), cfg,
+                n_heads=cfg.n_heads, n_kv=cfg.n_heads, hd=cfg.hd,
+                causal=False, kv_src=enc_out, use_rope=False,
+            )
+            x = x + h
+        z = layers.apply_norm(p["ln_ffn"], x, cfg)
+        if block_type in ("attn_swa", "attn_moe"):
+            h, aux = moe_mod.moe_ffn_dispatch(p["moe"], z, cfg)
+        else:
+            h = layers.ffn(p["ffn"], z, cfg)
+        if cfg.post_norm:
+            h = layers.apply_norm(p["ln_ffn_post"], h, cfg)
+        x = x + h
+    elif block_type == "mamba":
+        x = x + ssm_mod.mamba_forward(
+            p["mamba"], layers.apply_norm(p["ln"], x, cfg), cfg, cfg.d_model
+        )
+    elif block_type == "rwkv":
+        x = x + ssm_mod.rwkv_forward(
+            p["time"], layers.apply_norm(p["ln_time"], x, cfg), cfg, cfg.d_model
+        )
+        out, _ = ssm_mod.rwkv_channel_mix(
+            p["chan"], layers.apply_norm(p["ln_chan"], x, cfg)
+        )
+        x = x + out
+    else:
+        raise ValueError(block_type)
+    return x, aux
+
+
+def shared_attn_forward(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    h = layers.attention(
+        p["attn"], layers.apply_norm(p["ln_attn"], x, cfg), cfg,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+        causal=True, use_rope=cfg.pos_type == "rope",
+    )
+    x = x + h
+    x = x + layers.ffn(p["ffn"], layers.apply_norm(p["ln_ffn"], x, cfg), cfg)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Cache init + decode (single token)
+# ---------------------------------------------------------------------------
+def init_block_cache(block_type: str, cfg, batch: int, seq_len: int) -> dict:
+    if block_type in ATTN_TYPES:
+        window = cfg.window if block_type in ("attn_local", "attn_swa") else 0
+        cache = layers.init_kv_cache(
+            cfg, batch, seq_len, cfg.n_kv_heads, cfg.hd, window
+        )
+        return cache
+    if block_type == "mamba":
+        return ssm_mod.init_mamba_cache(cfg, batch, cfg.d_model)
+    if block_type == "rwkv":
+        c = ssm_mod.init_rwkv_cache(cfg, batch, cfg.d_model)
+        c["chan_prev"] = jnp.zeros((batch, 1, cfg.d_model), jnp.float32)
+        return c
+    raise ValueError(block_type)
+
+
+def block_decode(
+    p: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
+    block_type: str, cfg,
+    cross_cache: Optional[dict] = None,
+) -> tuple[jnp.ndarray, dict]:
+    if block_type in ATTN_TYPES:
+        window = cfg.window if block_type in ("attn_local", "attn_swa") else 0
+        h, new_cache = layers.attention_decode(
+            p["attn"], layers.apply_norm(p["ln_attn"], x, cfg), cache, pos, cfg,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+            window=window, attn_softcap=cfg.attn_softcap,
+            use_rope=cfg.pos_type == "rope",
+        )
+        if cfg.post_norm:
+            h = layers.apply_norm(p["ln_attn_post"], h, cfg)
+        x = x + h
+        if block_type == "dec_attn":
+            # cross-attention against precomputed encoder K/V (cross_cache)
+            h = _cross_decode(p["cross"], layers.apply_norm(p["ln_cross"], x, cfg),
+                              cross_cache, cfg)
+            x = x + h
+        z = layers.apply_norm(p["ln_ffn"], x, cfg)
+        if block_type in ("attn_swa", "attn_moe"):
+            h, _ = moe_mod.moe_ffn_dispatch(p["moe"], z, cfg)
+        else:
+            h = layers.ffn(p["ffn"], z, cfg)
+        if cfg.post_norm:
+            h = layers.apply_norm(p["ln_ffn_post"], h, cfg)
+        return x + h, new_cache
+    if block_type == "mamba":
+        h, new_cache = ssm_mod.mamba_decode(
+            p["mamba"], layers.apply_norm(p["ln"], x, cfg), cache, cfg, cfg.d_model
+        )
+        return x + h, new_cache
+    if block_type == "rwkv":
+        h, time_cache = ssm_mod.rwkv_decode(
+            p["time"], layers.apply_norm(p["ln_time"], x, cfg),
+            {"state": cache["state"], "x_prev": cache["x_prev"]}, cfg, cfg.d_model,
+        )
+        x = x + h
+        z = layers.apply_norm(p["ln_chan"], x, cfg)
+        out, _ = ssm_mod.rwkv_channel_mix(
+            p["chan"], z, x_prev=cache["chan_prev"].astype(z.dtype)
+        )
+        new_cache = dict(time_cache, chan_prev=z.astype(jnp.float32))
+        return x + out, new_cache
+    raise ValueError(block_type)
+
+
+def _cross_decode(p: dict, x: jnp.ndarray, cross_cache: dict, cfg) -> jnp.ndarray:
+    """Cross-attention with K/V precomputed once from encoder output."""
+    B = x.shape[0]
+    H, hd = cfg.n_heads, cfg.hd
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, 1, H, hd)
+    k, v = cross_cache["k"], cross_cache["v"]     # (B, S_enc, H, hd)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (hd ** 0.5)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(B, 1, H * hd)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def shared_attn_decode(p: dict, x: jnp.ndarray, cache: dict, pos, cfg):
+    h, new_cache = layers.attention_decode(
+        p["attn"], layers.apply_norm(p["ln_attn"], x, cfg), cache, pos, cfg,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+        use_rope=cfg.pos_type == "rope",
+    )
+    x = x + h
+    x = x + layers.ffn(p["ffn"], layers.apply_norm(p["ln_ffn"], x, cfg), cfg)
+    return x, new_cache
+
+
+def make_cross_cache(p_block: dict, enc_out: jnp.ndarray, cfg) -> dict:
+    """Precompute cross-attention K/V from encoder output for one dec layer."""
+    B, S_enc, _ = enc_out.shape
+    k = (enc_out @ p_block["cross"]["wk"].astype(enc_out.dtype)).reshape(B, S_enc, cfg.n_heads, cfg.hd)
+    v = (enc_out @ p_block["cross"]["wv"].astype(enc_out.dtype)).reshape(B, S_enc, cfg.n_heads, cfg.hd)
+    return {"k": k, "v": v}

@@ -1,0 +1,286 @@
+"""Shared neural layers: norms, RoPE, attention (GQA/MQA, sliding window,
+softcap, cross-attention, KV cache), and FFN variants. Pure functional JAX —
+params are plain dicts, shapes are static, everything jit/scan-friendly.
+
+Sharding note: weights carry NamedSharding via launch/shardings.py; inside
+the forward we only add light ``with_sharding_constraint``-free code and let
+GSPMD propagate — the dry-run (launch/dryrun.py) verifies the result.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import partition
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+    return out.astype(x.dtype)
+
+
+def apply_norm(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    if cfg.norm_type == "layer":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def init_norm(cfg, d: int) -> dict:
+    if cfg.norm_type == "layer":
+        return {"scale": jnp.ones(d, jnp.float32), "bias": jnp.zeros(d, jnp.float32)}
+    return {"scale": jnp.zeros(d, jnp.float32)}  # rms stored as (1 + scale)
+
+
+# ---------------------------------------------------------------------------
+# Rotary / absolute positions
+# ---------------------------------------------------------------------------
+def rope_frequencies(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_at(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Sinusoidal embeddings at arbitrary (possibly traced) positions.
+
+    positions: (..., S) int -> (..., S, d) float32.
+    """
+    pos = positions.astype(jnp.float32)[..., None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / d))
+    ang = pos * div
+    pe = jnp.zeros(positions.shape + (d,), jnp.float32)
+    pe = pe.at[..., 0::2].set(jnp.sin(ang))
+    pe = pe.at[..., 1::2].set(jnp.cos(ang))
+    return pe
+
+
+def sinusoidal_positions(length: int, d: int) -> jnp.ndarray:
+    return sinusoidal_at(jnp.arange(length), d)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return cap * jnp.tanh(x / cap) if cap > 0 else x
+
+
+def init_attention(key, cfg, d_model: int, n_heads: int, n_kv: int, hd: int,
+                   cross: bool = False) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d_model)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": (jax.random.normal(k1, (d_model, n_heads * hd)) * s).astype(dt),
+        "wk": (jax.random.normal(k2, (d_model, n_kv * hd)) * s).astype(dt),
+        "wv": (jax.random.normal(k3, (d_model, n_kv * hd)) * s).astype(dt),
+        "wo": (jax.random.normal(k4, (n_heads * hd, d_model))
+               * (1.0 / math.sqrt(n_heads * hd))).astype(dt),
+    }
+    return p
+
+
+def _expand_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, S, K, hd) -> (B, S, K*groups, hd) by head repetition (GQA)."""
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def attention(
+    p: dict,
+    x: jnp.ndarray,
+    cfg,
+    *,
+    n_heads: int,
+    n_kv: int,
+    hd: int,
+    causal: bool = True,
+    window: int = 0,
+    positions: Optional[jnp.ndarray] = None,
+    kv_src: Optional[jnp.ndarray] = None,     # cross-attention source
+    attn_softcap: float = 0.0,
+    use_rope: bool = True,
+) -> jnp.ndarray:
+    """Full-sequence attention. x: (B, S, D) -> (B, S, D)."""
+    B, S, _ = x.shape
+    src = kv_src if kv_src is not None else x
+    S_kv = src.shape[1]
+    seq_ok = getattr(cfg, "seq_shard_attn", True)
+    wq, wk, wv = (p[w].astype(x.dtype) for w in ("wq", "wk", "wv"))
+    q = partition.shard_heads((x @ wq).reshape(B, S, n_heads, hd),
+                              role="q", seq_ok=seq_ok)
+    k = partition.shard_heads((src @ wk).reshape(B, S_kv, n_kv, hd), role="kv")
+    v = partition.shard_heads((src @ wv).reshape(B, S_kv, n_kv, hd), role="kv")
+
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if use_rope and kv_src is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    k = partition.shard_heads(_expand_kv(k, n_heads // n_kv), role="kv")
+    v = partition.shard_heads(_expand_kv(v, n_heads // n_kv), role="kv")
+
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+    scores = softcap(scores, attn_softcap)
+
+    if kv_src is None:  # self-attention masks
+        qi = jnp.arange(S)[:, None]
+        ki = jnp.arange(S_kv)[None, :]
+        mask = jnp.ones((S, S_kv), bool)
+        if causal:
+            mask &= ki <= qi
+        if window > 0:
+            mask &= qi - ki < window
+        scores = jnp.where(mask[None, None], scores, -1e30)
+
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(B, S, n_heads * hd)
+    out = partition.shard_fused_heads(out, n_heads=n_heads, seq_ok=seq_ok)
+    return partition.shard_tokens(out @ p["wo"].astype(x.dtype))
+
+
+def attention_decode(
+    p: dict,
+    x: jnp.ndarray,                 # (B, 1, D)
+    cache: dict,                    # {"k","v": (B, C, n_kv, hd)}
+    pos: jnp.ndarray,               # scalar int32 — absolute position
+    cfg,
+    *,
+    n_heads: int,
+    n_kv: int,
+    hd: int,
+    window: int = 0,
+    attn_softcap: float = 0.0,
+    use_rope: bool = True,
+) -> tuple[jnp.ndarray, dict]:
+    """One-token decode against a (ring-buffered when windowed) KV cache."""
+    B = x.shape[0]
+    C = cache["k"].shape[1]
+    wq, wk, wv = (p[w].astype(x.dtype) for w in ("wq", "wk", "wv"))
+    q = (x @ wq).reshape(B, 1, n_heads, hd)
+    k_new = (x @ wk).reshape(B, 1, n_kv, hd)
+    v_new = (x @ wv).reshape(B, 1, n_kv, hd)
+    if use_rope:
+        pvec = jnp.full((B, 1), pos, jnp.int32)
+        q = apply_rope(q, pvec, cfg.rope_theta)
+        k_new = apply_rope(k_new, pvec, cfg.rope_theta)
+
+    slot = pos % C  # ring buffer (C == window when windowed, else C == S_max)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+    new_cache = {"k": k, "v": v}
+
+    kx = _expand_kv(k, n_heads // n_kv)
+    vx = _expand_kv(v, n_heads // n_kv)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kx) / math.sqrt(hd)
+    scores = softcap(scores, attn_softcap)
+    valid = jnp.arange(C) <= pos          # unfilled ring slots masked out
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vx).reshape(B, 1, n_heads * hd)
+    return out @ p["wo"].astype(x.dtype), new_cache
+
+
+def init_kv_cache(cfg, batch: int, seq_len: int, n_kv: int, hd: int,
+                  window: int = 0) -> dict:
+    C = min(seq_len, window) if window > 0 else seq_len
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "k": jnp.zeros((batch, C, n_kv, hd), dt),
+        "v": jnp.zeros((batch, C, n_kv, hd), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# FFN variants
+# ---------------------------------------------------------------------------
+def init_ffn(key, cfg, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    dt = jnp.dtype(cfg.param_dtype)
+    if cfg.ffn_type in ("swiglu", "geglu"):
+        return {
+            "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dt),
+            "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dt),
+            "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s_out).astype(dt),
+        }
+    return {
+        "w_in": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dt),
+        "w_out": (jax.random.normal(k2, (d_ff, d_model)) * s_out).astype(dt),
+    }
+
+
+def ffn(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    w = {k: v.astype(x.dtype) for k, v in p.items()}
+    if cfg.ffn_type == "swiglu":
+        h = jax.nn.silu(partition.shard_ff(x @ w["w_gate"])) * (x @ w["w_up"])
+    elif cfg.ffn_type == "geglu":
+        h = jax.nn.gelu(partition.shard_ff(x @ w["w_gate"]), approximate=True) * (
+            x @ w["w_up"])
+    else:
+        h = jax.nn.gelu(partition.shard_ff(x @ w["w_in"]), approximate=True)
+        return partition.shard_tokens(h @ w["w_out"])
+    h = partition.shard_ff(h)
+    return partition.shard_tokens(h @ w["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def init_embed(key, cfg) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    p = {
+        "tokens": (jax.random.normal(k1, (cfg.vocab_padded, cfg.d_model))
+                   * 0.02).astype(dt)
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (
+            jax.random.normal(k2, (cfg.d_model, cfg.vocab_padded))
+            / math.sqrt(cfg.d_model)
+        ).astype(dt)
+    return p
+
+
+def embed_tokens(p: dict, tokens: jnp.ndarray, cfg, pos_offset=0) -> jnp.ndarray:
+    x = jnp.take(p["tokens"], tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+    x = partition.shard_tokens(x)
+    if cfg.pos_type == "abs":  # whisper-style absolute positions
+        positions = jnp.arange(tokens.shape[-1]) + pos_offset
+        x = x + sinusoidal_at(positions, cfg.d_model).astype(x.dtype)
+    return x
+
+
+def lm_logits(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    w = p["tokens"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = partition.shard_ff(x @ w.astype(x.dtype))  # vocab over "model"
+    return softcap(logits, cfg.logits_softcap)

@@ -1,0 +1,280 @@
+"""Model assembly: init, full-sequence forward (training), prefill/decode
+(serving), loss — all driven by ModelConfig's unit pattern.
+
+Layer stacking: the stack is ``num_units`` repetitions of ``cfg.pattern``;
+parameters are stacked per pattern position (leading axis = num_units) and the
+depth loop is a single ``lax.scan`` (keeps HLO size O(pattern), which is what
+makes the 80-program dry-run matrix compile in reasonable time). Zamba2's
+weight-shared attention block lives outside the scanned pytree and is applied
+every ``shared_attn_every`` units under ``lax.cond``.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, layers
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, 8)
+    params: dict = {"embed": layers.init_embed(keys[0], cfg)}
+
+    def stack_init(key, block_type):
+        ks = jax.random.split(key, cfg.num_units)
+        return jax.vmap(lambda k: blocks.init_block(k, block_type, cfg))(ks)
+
+    unit_keys = jax.random.split(keys[1], len(cfg.pattern))
+    params["units"] = [
+        stack_init(unit_keys[i], bt) for i, bt in enumerate(cfg.pattern)
+    ]
+    params["final_norm"] = layers.init_norm(cfg, cfg.d_model)
+
+    if cfg.shared_attn_every > 0:
+        params["shared"] = blocks.init_shared_attn(keys[2], cfg)
+
+    if cfg.encoder is not None:
+        enc = cfg.encoder
+        ks = jax.random.split(keys[3], enc.num_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(
+                lambda k: blocks.init_block(k, "enc_attn", cfg)
+            )(ks),
+            "final_norm": layers.init_norm(cfg, cfg.d_model),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+def _num_shared_apps(cfg: ModelConfig) -> int:
+    if cfg.shared_attn_every <= 0:
+        return 0
+    return sum(
+        1 for u in range(cfg.num_units) if (u + 1) % cfg.shared_attn_every == 0
+    )
+
+
+def _stack_scan(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+                enc_out: Optional[jnp.ndarray] = None):
+    """Scan the unit stack. Returns (x, total_aux)."""
+
+    def unit_body(carry, unit_params_and_idx):
+        x, aux = carry
+        unit_params, unit_idx = unit_params_and_idx
+        for pos, bt in enumerate(cfg.pattern):
+            x, a = blocks.block_forward(unit_params[pos], x, bt, cfg, enc_out)
+            aux = aux + a
+        if cfg.shared_attn_every > 0:
+            x = jax.lax.cond(
+                (unit_idx + 1) % cfg.shared_attn_every == 0,
+                lambda v: blocks.shared_attn_forward(params["shared"], v, cfg),
+                lambda v: v,
+                x,
+            )
+        return (x, aux), None
+
+    body = jax.checkpoint(unit_body) if cfg.remat else unit_body
+    (x, aux), _ = jax.lax.scan(
+        body,
+        (x, jnp.zeros((), jnp.float32)),
+        (params["units"], jnp.arange(cfg.num_units)),
+        unroll=cfg.num_units if cfg.scan_unroll else 1,
+    )
+    return x, aux
+
+
+def encode(params: dict, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Whisper-style encoder over stubbed frame embeddings (B, F, D)."""
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + layers.sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+
+    def body(x, layer_params):
+        x, _ = blocks.block_forward(layer_params, x, "enc_attn", cfg)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(
+        body, x, params["encoder"]["layers"],
+        unroll=cfg.encoder.num_layers if cfg.scan_unroll else 1,
+    )
+    return layers.apply_norm(params["encoder"]["final_norm"], x, cfg)
+
+
+def forward(
+    params: dict,
+    tokens: jnp.ndarray,                      # (B, S) int32
+    cfg: ModelConfig,
+    patch_embeds: Optional[jnp.ndarray] = None,   # VLM stub (B, P, D)
+    frames: Optional[jnp.ndarray] = None,         # audio stub (B, F, D)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward -> (logits (B, S, vocab_padded), aux_loss)."""
+    x = layers.embed_tokens(params["embed"], tokens, cfg)
+    if cfg.frontend == "vision_stub" and patch_embeds is not None:
+        # First num_patches positions carry projected patch embeddings
+        # (the ViT+projector is stubbed per the brief; DESIGN.md §4).
+        P = patch_embeds.shape[1]
+        x = jnp.concatenate(
+            [patch_embeds.astype(x.dtype), x[:, P:, :]], axis=1
+        )
+    enc_out = None
+    if cfg.encoder is not None:
+        assert frames is not None, "audio arch requires stub frames"
+        enc_out = encode(params, frames, cfg)
+
+    x, aux = _stack_scan(params, x, cfg, enc_out)
+    x = layers.apply_norm(params["final_norm"], x, cfg)
+    logits = layers.lm_logits(params["embed"], x, cfg)
+    return logits, aux
+
+
+def loss_fn(
+    params: dict, batch: dict, cfg: ModelConfig
+) -> tuple[jnp.ndarray, dict]:
+    """Next-token cross entropy (+ MoE aux). batch: tokens, labels[, stubs]."""
+    logits, aux = forward(
+        params, batch["tokens"], cfg,
+        patch_embeds=batch.get("patch_embeds"),
+        frames=batch.get("frames"),
+    )
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = ce + aux
+    return total, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """Decode cache for the whole stack, stacked per pattern position."""
+    cache: dict = {
+        "blocks": [
+            jax.tree.map(
+                lambda l: jnp.broadcast_to(
+                    l, (cfg.num_units,) + l.shape
+                ),
+                blocks.init_block_cache(bt, cfg, batch, seq_len),
+            )
+            for bt in cfg.pattern
+        ]
+    }
+    if cfg.shared_attn_every > 0:
+        base = blocks.init_block_cache("attn", cfg, batch, seq_len)
+        cache["shared"] = jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (cfg.num_units,) + l.shape), base
+        )
+    if cfg.encoder is not None:
+        enc = cfg.encoder
+        kv_shape = (cfg.num_units, batch, enc.num_frames, cfg.n_heads, cfg.hd)
+        dt = jnp.dtype(cfg.compute_dtype)
+        cache["cross"] = {"k": jnp.zeros(kv_shape, dt), "v": jnp.zeros(kv_shape, dt)}
+    return cache
+
+
+def fill_cross_cache(params: dict, cache: dict, enc_out: jnp.ndarray,
+                     cfg: ModelConfig) -> dict:
+    """Populate the per-decoder-layer cross K/V from encoder output (prefill)."""
+    assert cfg.pattern == ("dec_attn",), "cross cache assumes a dec-only pattern"
+    kv = jax.vmap(
+        lambda p_layer: blocks.make_cross_cache(p_layer, enc_out, cfg)
+    )(params["units"][0])
+    return dict(cache, cross=kv)
+
+
+def decode_step(
+    params: dict,
+    cache: dict,
+    token: jnp.ndarray,     # (B, 1) int32
+    pos: jnp.ndarray,       # scalar int32
+    cfg: ModelConfig,
+) -> tuple[jnp.ndarray, dict]:
+    """One decode step -> (logits (B, 1, vocab_padded), new cache)."""
+    x = layers.embed_tokens(params["embed"], token, cfg, pos_offset=pos)
+
+    def unit_body(carry, xs):
+        x = carry
+        unit_params, unit_caches, shared_cache, cross_cache, unit_idx = xs
+        new_caches = []
+        for p_idx, bt in enumerate(cfg.pattern):
+            cc = cross_cache if bt == "dec_attn" else None
+            x, nc = blocks.block_decode(
+                unit_params[p_idx], x, unit_caches[p_idx], pos, bt, cfg,
+                cross_cache=cc,
+            )
+            new_caches.append(nc)
+        if cfg.shared_attn_every > 0:
+            def fire(operand):
+                xx, sc = operand
+                return blocks.shared_attn_decode(params["shared"], xx, sc, pos, cfg)
+
+            x, shared_cache = jax.lax.cond(
+                (unit_idx + 1) % cfg.shared_attn_every == 0,
+                fire,
+                lambda operand: operand,
+                (x, shared_cache),
+            )
+        return x, (new_caches, shared_cache)
+
+    xs = (
+        params["units"],
+        cache["blocks"],
+        cache.get("shared"),
+        cache.get("cross"),
+        jnp.arange(cfg.num_units),
+    )
+    x, (new_block_caches, new_shared) = jax.lax.scan(
+        unit_body, x, xs, unroll=cfg.num_units if cfg.scan_unroll else 1,
+    )
+    new_cache = dict(cache, blocks=new_block_caches)
+    if cfg.shared_attn_every > 0:
+        new_cache["shared"] = new_shared
+
+    x = layers.apply_norm(params["final_norm"], x, cfg)
+    logits = layers.lm_logits(params["embed"], x, cfg)
+    return logits, new_cache
+
+
+def prefill(
+    params: dict, tokens: jnp.ndarray, cfg: ModelConfig, **stubs
+) -> jnp.ndarray:
+    """Prefill = full forward returning last-position logits (cache filling is
+    exercised separately by decode_step; the dry-run prefill shape lowers this
+    full-sequence program, which dominates prefill cost)."""
+    logits, _ = forward(params, tokens, cfg, **stubs)
+    return logits[:, -1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Parameter accounting (roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+def count_params(params: dict) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Parameter count via eval_shape (no allocation); MoE active-only
+    replaces expert params with the top_k fraction."""
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    total = sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+    if active_only and cfg.moe is not None:
+        moe_layers = sum(1 for bt in cfg.pattern if bt in ("attn_swa", "attn_moe"))
+        moe_layers *= cfg.num_units
+        expert_params = cfg.moe.num_experts * 3 * cfg.d_model * cfg.d_ff
+        active = cfg.moe.top_k * 3 * cfg.d_model * cfg.d_ff
+        total -= moe_layers * (expert_params - active)
+    return total

@@ -1,0 +1,169 @@
+"""Mixture-of-Experts FFN: top-k routing with ragged (sorted) expert matmuls.
+
+TPU-idiomatic dispatch (DESIGN.md hardware-adaptation table): instead of the
+GShard dense one-hot dispatch tensor (O(S^2 * E / capacity) bytes) we sort the
+token copies by expert id and run ``jax.lax.ragged_dot`` — grouped matmuls the
+TPU executes back-to-back on the MXU (the megablox pattern). FLOPs scale with
+*active* params only, which keeps the roofline's MODEL_FLOPS/HLO_FLOPs ratio
+honest for MoE architectures.
+
+Experts are sharded over the "model" mesh axis on the leading (group) dim of
+each expert weight; GSPMD turns the sorted-token exchange into an all-to-all.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import partition
+
+
+def init_moe(key, cfg, d_model: int, d_ff: int) -> dict:
+    E = cfg.moe.num_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "router": (jax.random.normal(k1, (d_model, E)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(k2, (E, d_model, d_ff)) * s_in).astype(dt),
+        "w_up": (jax.random.normal(k3, (E, d_model, d_ff)) * s_in).astype(dt),
+        "w_down": (jax.random.normal(k4, (E, d_ff, d_model)) * s_out).astype(dt),
+    }
+
+
+def moe_ffn(p: dict, x: jnp.ndarray, cfg) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss).
+
+    aux_loss is the Switch-style load-balance term
+    E * sum_e f_e * p_e (f = dispatch fraction, p = mean router prob).
+    """
+    B, S, D = x.shape
+    E, K = cfg.moe.num_experts, cfg.moe.top_k
+    T = B * S
+    xf = x.reshape(T, D)
+
+    router_logits = xf.astype(jnp.float32) @ p["router"]       # (T, E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, K)                     # (T, K)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # Load-balance auxiliary loss.
+    dispatch_frac = jnp.mean(
+        jax.nn.one_hot(top_i, E, dtype=jnp.float32).sum(axis=1), axis=0
+    )
+    aux = E * jnp.sum(dispatch_frac * jnp.mean(probs, axis=0)) * cfg.moe.aux_loss_weight
+
+    # Token copies sorted by expert: ragged grouped matmuls.
+    expert_id = top_i.reshape(T * K)
+    order = jnp.argsort(expert_id)
+    inv_order = jnp.argsort(order)
+    xs = jnp.repeat(xf, K, axis=0)[order]                      # (T*K, D)
+    group_sizes = jnp.bincount(expert_id, length=E).astype(jnp.int32)
+
+    dt = x.dtype
+    hg = partition.shard_ff(jax.lax.ragged_dot(xs, p["w_gate"].astype(dt), group_sizes))
+    hu = partition.shard_ff(jax.lax.ragged_dot(xs, p["w_up"].astype(dt), group_sizes))
+    act = jax.nn.silu(hg) * hu
+    ys = jax.lax.ragged_dot(act, p["w_down"].astype(dt), group_sizes)  # (T*K, D)
+
+    y = ys[inv_order].reshape(T, K, D)
+    out = jnp.sum(y * top_w[..., None].astype(dt), axis=1)
+    return partition.shard_tokens(out.reshape(B, S, D)), aux
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def moe_ffn_dense(p: dict, x: jnp.ndarray, cfg) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-padded dense dispatch: (E, C, D) buckets + batched matmuls.
+
+    GSPMD partitions plain batched dot_generals (unlike ragged_dot), so the
+    per-device expert FLOPs really are global/chips; tokens over capacity C
+    are dropped (standard Switch behaviour, capacity_factor controls slack).
+    """
+    B, S, D = x.shape
+    E, K = cfg.moe.num_experts, cfg.moe.top_k
+    T = B * S
+    TK = T * K
+    xf = x.reshape(T, D)
+
+    router_logits = xf.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, K)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    dispatch_frac = jnp.mean(
+        jax.nn.one_hot(top_i, E, dtype=jnp.float32).sum(axis=1), axis=0
+    )
+    aux = E * jnp.sum(dispatch_frac * jnp.mean(probs, axis=0)) * cfg.moe.aux_loss_weight
+
+    # Rank of each token copy within its expert bucket.
+    expert_id = top_i.reshape(TK)
+    order = jnp.argsort(expert_id)
+    sorted_e = expert_id[order]
+    group_sizes = jnp.bincount(expert_id, length=E)
+    starts = jnp.cumsum(group_sizes) - group_sizes          # exclusive
+    rank_sorted = jnp.arange(TK) - starts[sorted_e]
+
+    C = _round_up(max(1, int(TK / E * cfg.moe.capacity_factor)), 256)
+    keep = rank_sorted < C
+
+    token_sorted = (order // K).astype(jnp.int32)
+    dt = x.dtype
+    xd = jnp.zeros((E, C, D), dt)
+    xd = xd.at[sorted_e, jnp.where(keep, rank_sorted, 0)].add(
+        jnp.where(keep[:, None], xf[token_sorted], 0)
+    )
+    xd = partition.constrain(
+        xd, lambda axes: _ecd_spec(axes, C, D, hidden=False)
+    )
+
+    wg = p["w_gate"].astype(dt)
+    wu = p["w_up"].astype(dt)
+    wd = p["w_down"].astype(dt)
+    h = jnp.einsum("ecd,edf->ecf", xd, wg)
+    h = partition.constrain(h, lambda axes: _ecd_spec(axes, C, h.shape[-1], hidden=True))
+    u = jnp.einsum("ecd,edf->ecf", xd, wu)
+    act = jax.nn.silu(h) * u
+    yd = jnp.einsum("ecf,efd->ecd", act, wd)                # (E, C, D)
+    yd = partition.constrain(
+        yd, lambda axes: _ecd_spec(axes, C, D, hidden=False)
+    )
+
+    # Combine back: gather each copy's expert output (dropped copies get 0).
+    ys = jnp.where(
+        keep[:, None],
+        yd[sorted_e, jnp.where(keep, rank_sorted, 0)],
+        0,
+    )
+    inv_order = jnp.argsort(order)
+    y = ys[inv_order].reshape(T, K, D)
+    out = jnp.sum(y * top_w[..., None].astype(dt), axis=1)
+    return partition.shard_tokens(out.reshape(B, S, D)), aux
+
+
+def _ecd_spec(axes, C, last, hidden):
+    """(E, C, last): capacity over the batch axes, last dim over model."""
+    from jax.sharding import PartitionSpec as P
+
+    ba = tuple(a for a in ("pod", "data") if a in axes)
+    total = 1
+    for a in ba:
+        total *= axes[a]
+    c_ax = ba if (ba and C % total == 0) else None
+    m_ax = "model" if ("model" in axes and last % axes["model"] == 0) else None
+    if c_ax is None and m_ax is None:
+        return None
+    return P(None, c_ax, m_ax)
+
+
+def moe_ffn_dispatch(p: dict, x: jnp.ndarray, cfg):
+    """Select implementation by cfg.moe.impl."""
+    if cfg.moe.impl == "dense":
+        return moe_ffn_dense(p, x, cfg)
+    return moe_ffn(p, x, cfg)

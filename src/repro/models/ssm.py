@@ -1,0 +1,419 @@
+"""State-space and linear-recurrence blocks: Mamba2 (SSD) and RWKV-6 (WKV).
+
+Both are implemented in the *chunked* formulation — quadratic within a small
+chunk (MXU matmuls), linear state passing between chunks (a lax.scan over the
+chunk axis) — which is the TPU-native shape of these recurrences: the per-step
+recurrence that GPU kernels fuse into registers becomes, on TPU, a sequence of
+dense (chunk x chunk) and (chunk x state) contractions.
+
+References: SSD / Mamba-2 (Dao & Gu 2024, arXiv:2405.21060); RWKV-6 "Finch"
+(Peng et al. 2024, arXiv:2404.05892). Naive per-token scans in
+``*_reference`` serve as test oracles and as the decode-step semantics.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import partition
+
+
+# ===========================================================================
+# Mamba2 / SSD
+# ===========================================================================
+def init_mamba(key, cfg, d_model: int) -> dict:
+    s = cfg.ssm
+    d_in = s.d_inner(d_model)
+    H = s.n_heads(d_model)
+    N = s.d_state
+    keys = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    scale = 1.0 / math.sqrt(d_model)
+    # in_proj emits [z (d_in), x (d_in), B (N), C (N), dt (H)]
+    return {
+        "in_proj": (jax.random.normal(keys[0], (d_model, 2 * d_in + 2 * N + H))
+                    * scale).astype(dt),
+        "conv": (jax.random.normal(keys[1], (s.conv_kernel, d_in))
+                 * (1.0 / math.sqrt(s.conv_kernel))).astype(dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones(H, jnp.float32),
+        "dt_bias": jnp.zeros(H, jnp.float32),
+        "norm": jnp.zeros(d_in, jnp.float32),     # gated RMSNorm scale
+        "out_proj": (jax.random.normal(keys[2], (d_in, d_model))
+                     * (1.0 / math.sqrt(d_in))).astype(dt),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over time. x: (B, S, C), w: (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out
+
+
+def _split_proj(p, u, cfg, d_model):
+    s = cfg.ssm
+    d_in = s.d_inner(d_model)
+    H = s.n_heads(d_model)
+    N = s.d_state
+    zxbcdt = partition.shard_ff(u @ p["in_proj"].astype(u.dtype))
+    z, xs, Bm, Cm, dt_raw = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1
+    )
+    return z, xs, Bm, Cm, dt_raw, d_in, H, N
+
+
+def mamba_forward(p: dict, u: jnp.ndarray, cfg, d_model: int) -> jnp.ndarray:
+    """Chunked SSD over a full sequence. u: (B, S, D) -> (B, S, D)."""
+    s = cfg.ssm
+    B_, S, _ = u.shape
+    z, xs, Bm, Cm, dt_raw, d_in, H, N = _split_proj(p, u, cfg, d_model)
+    xs = jax.nn.silu(_causal_conv(xs, p["conv"].astype(xs.dtype)))
+
+    P = s.head_dim
+    L = min(s.chunk, S)
+    assert S % L == 0, f"seq {S} must be a multiple of ssm chunk {L}"
+    nc = S // L
+
+    xh = xs.reshape(B_, nc, L, H, P).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    dt = dt.reshape(B_, nc, L, H)
+    A = -jnp.exp(p["A_log"])                                          # (H,)
+    dA = dt * A                                                       # (B,nc,L,H)
+    Bc = Bm.reshape(B_, nc, L, N).astype(jnp.float32)
+    Cc = Cm.reshape(B_, nc, L, N).astype(jnp.float32)
+
+    cs = jnp.cumsum(dA, axis=2)                                       # (B,nc,L,H)
+    # Intra-chunk: y_i = sum_{j<=i} (C_i . B_j) exp(cs_i - cs_j) dt_j x_j
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                        # (B,nc,L,L)
+    tri = jnp.tril(jnp.ones((L, L), bool))[None, None, :, :, None]
+    # Mask the exponent BEFORE exp: the upper triangle holds cs_i - cs_j > 0
+    # which overflows, and inf * 0 in the VJP of a post-hoc mask is NaN.
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]                # (B,nc,L,L,H)
+    decay = jnp.exp(jnp.where(tri, diff, -jnp.inf))
+    scores = cb[..., None] * decay
+    y = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", scores, dt, xh)
+
+    # Chunk-final states and inter-chunk scan.
+    seg = jnp.exp(cs[:, :, -1:, :] - cs)                              # (B,nc,L,H)
+    states = jnp.einsum("bcjh,bcjh,bcjn,bcjhp->bchnp", seg, dt, Bc, xh)
+    total = jnp.exp(cs[:, :, -1, :])                                  # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        st, tot = inp   # (B,H,N,P), (B,H)
+        out = carry
+        new = carry * tot[:, :, None, None] + st
+        return new, out
+
+    init = jnp.zeros((B_, H, N, P), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        scan_fn,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+    )  # (nc, B, H, N, P) — state entering each chunk
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)
+
+    y = y + jnp.einsum(
+        "bcin,bcih,bchnp->bcihp", Cc, jnp.exp(cs), prev_states
+    )
+    y = y + p["D"][None, None, None, :, None] * xh                    # skip
+    y = y.reshape(B_, S, d_in).astype(u.dtype)
+
+    from repro.models import layers
+
+    y = y * jax.nn.silu(z)
+    y = layers.rms_norm(y, p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(y.dtype)
+
+
+def mamba_reference(p: dict, u: jnp.ndarray, cfg, d_model: int) -> jnp.ndarray:
+    """Per-token recurrence (oracle + decode semantics)."""
+    s = cfg.ssm
+    B_, S, _ = u.shape
+    z, xs, Bm, Cm, dt_raw, d_in, H, N = _split_proj(p, u, cfg, d_model)
+    xs = jax.nn.silu(_causal_conv(xs, p["conv"].astype(xs.dtype)))
+    P = s.head_dim
+    xh = xs.reshape(B_, S, H, P).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    Bc = Bm.astype(jnp.float32)
+    Cc = Cm.astype(jnp.float32)
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dt_t * A)[..., None, None]       # (B,H,1,1)
+        upd = jnp.einsum("bh,bn,bhp->bhnp", dt_t, b_t, x_t)
+        state = state * decay + upd
+        y_t = jnp.einsum("bn,bhnp->bhp", c_t, state)
+        return state, y_t
+
+    init = jnp.zeros((B_, H, N, P), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, init,
+        (xh.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+         Bc.transpose(1, 0, 2), Cc.transpose(1, 0, 2)),
+    )
+    y = ys.transpose(1, 0, 2, 3) + p["D"][None, None, :, None] * xh
+    y = y.reshape(B_, S, d_in).astype(u.dtype)
+
+    from repro.models import layers
+
+    y = y * jax.nn.silu(z)
+    y = layers.rms_norm(y, p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(y.dtype)
+
+
+def init_mamba_cache(cfg, batch: int, d_model: int) -> dict:
+    s = cfg.ssm
+    H = s.n_heads(d_model)
+    return {
+        "state": jnp.zeros((batch, H, s.d_state, s.head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, s.d_inner(d_model)),
+                          jnp.float32),
+    }
+
+
+def mamba_decode(p: dict, u: jnp.ndarray, cache: dict, cfg, d_model: int):
+    """One-token step. u: (B, 1, D) -> ((B, 1, D), new_cache)."""
+    s = cfg.ssm
+    B_ = u.shape[0]
+    z, xs, Bm, Cm, dt_raw, d_in, H, N = _split_proj(p, u, cfg, d_model)
+    # causal conv over [cached K-1 inputs, current]
+    conv_in = jnp.concatenate([cache["conv"], xs.astype(jnp.float32)], axis=1)
+    w = p["conv"].astype(jnp.float32)
+    xt = jnp.einsum("bkc,kc->bc", conv_in, w)[:, None, :]
+    xt = jax.nn.silu(xt)
+    new_conv = conv_in[:, 1:, :]
+
+    P = s.head_dim
+    xh = xt.reshape(B_, H, P).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    b_t = Bm[:, 0].astype(jnp.float32)
+    c_t = Cm[:, 0].astype(jnp.float32)
+
+    decay = jnp.exp(dt * A)[..., None, None]
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt, b_t, xh)
+    state = cache["state"] * decay + upd
+    y = jnp.einsum("bn,bhnp->bhp", c_t, state) + p["D"][None, :, None] * xh
+    y = y.reshape(B_, 1, d_in).astype(u.dtype)
+
+    from repro.models import layers
+
+    y = y * jax.nn.silu(z)
+    y = layers.rms_norm(y, p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(y.dtype), {"state": state, "conv": new_conv}
+
+
+# ===========================================================================
+# RWKV-6 (Finch)
+# ===========================================================================
+def init_rwkv(key, cfg, d_model: int) -> dict:
+    r = cfg.rwkv
+    H = d_model // r.head_dim
+    keys = jax.random.split(key, 10)
+    dt = jnp.dtype(cfg.param_dtype)
+    s = 1.0 / math.sqrt(d_model)
+    lora = r.decay_lora
+    return {
+        # token-shift interpolation weights (mu) for r, k, v, w, g
+        "mu": jnp.full((5, d_model), 0.5, jnp.float32),
+        "wr": (jax.random.normal(keys[0], (d_model, d_model)) * s).astype(dt),
+        "wk": (jax.random.normal(keys[1], (d_model, d_model)) * s).astype(dt),
+        "wv": (jax.random.normal(keys[2], (d_model, d_model)) * s).astype(dt),
+        "wg": (jax.random.normal(keys[3], (d_model, d_model)) * s).astype(dt),
+        "wo": (jax.random.normal(keys[4], (d_model, d_model)) * s).astype(dt),
+        # data-dependent decay: w_t = exp(-exp(w0 + tanh(x A) B))  [arXiv:2404.05892]
+        "w0": jnp.full((d_model,), -1.0, jnp.float32),
+        "wA": (jax.random.normal(keys[5], (d_model, lora)) * s).astype(jnp.float32),
+        "wB": (jax.random.normal(keys[6], (lora, d_model))
+               * (1.0 / math.sqrt(lora))).astype(jnp.float32),
+        "u": (jax.random.normal(keys[7], (d_model,)) * 0.1).astype(jnp.float32),
+        "ln_scale": jnp.ones(d_model, jnp.float32),   # per-head groupnorm
+        "ln_bias": jnp.zeros(d_model, jnp.float32),
+    }
+
+
+def _rwkv_inputs(p, x, cfg, x_prev=None):
+    """Token-shifted projections. x: (B, S, D)."""
+    if x_prev is None:
+        shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+    else:
+        shifted = jnp.concatenate([x_prev, x[:, :-1, :]], axis=1)
+    mu = p["mu"].astype(x.dtype)
+    mix = lambda i: x + mu[i] * (shifted - x)
+    r = partition.shard_ff(mix(0) @ p["wr"].astype(x.dtype))
+    k = partition.shard_ff(mix(1) @ p["wk"].astype(x.dtype))
+    v = partition.shard_ff(mix(2) @ p["wv"].astype(x.dtype))
+    logw = -jnp.exp(
+        jnp.clip(
+            p["w0"]
+            + jnp.tanh(mix(3).astype(jnp.float32) @ p["wA"]) @ p["wB"],
+            -8.0, 1.0,
+        )
+    )  # (B,S,D), in (-e, 0)
+    g = jax.nn.silu(mix(4) @ p["wg"].astype(x.dtype))
+    return r, k, v, logw, g
+
+
+def _group_norm(y: jnp.ndarray, scale, bias, H: int, eps: float) -> jnp.ndarray:
+    """Per-head LayerNorm (RWKV's GroupNorm over heads)."""
+    B_, S, D = y.shape
+    yh = y.reshape(B_, S, H, D // H).astype(jnp.float32)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(B_, S, D) * scale + bias).astype(y.dtype)
+
+
+def rwkv_forward(p: dict, x: jnp.ndarray, cfg, d_model: int) -> jnp.ndarray:
+    """Chunked WKV-6 over a full sequence. x: (B, S, D)."""
+    r_cfg = cfg.rwkv
+    B_, S, D = x.shape
+    H = D // r_cfg.head_dim
+    K = r_cfg.head_dim
+    L = min(r_cfg.chunk, S)
+    assert S % L == 0, f"seq {S} must be a multiple of rwkv chunk {L}"
+    nc = S // L
+
+    r, k, v, logw, g = _rwkv_inputs(p, x, cfg)
+    shp = (B_, nc, L, H, K)
+    rr = r.reshape(shp).astype(jnp.float32)
+    kk = k.reshape(shp).astype(jnp.float32)
+    vv = v.reshape(shp).astype(jnp.float32)
+    lw = logw.reshape(shp)                        # (B,nc,L,H,K), <= 0
+    u = p["u"].reshape(H, K)
+
+    # cls_i = sum_{t<=i} logw_t (inclusive); decay j->i uses cls_{i-1} - cls_j.
+    cls = jnp.cumsum(lw, axis=2)
+    cls_prev = cls - lw                            # exclusive cumsum
+    a = rr * jnp.exp(cls_prev)                     # (B,nc,L,H,K)
+    b = kk * jnp.exp(-cls)
+    scores = jnp.einsum("bclhk,bcmhk->bchlm", a, b)
+    tri = jnp.tril(jnp.ones((L, L), bool), k=-1)   # strictly lower: j < i
+    scores = jnp.where(tri[None, None, None], scores, 0.0)
+    y = jnp.einsum("bchlm,bcmhk->bclhk", scores, vv)
+    # bonus term at j == i: y_i += (r_i . (u * k_i)) v_i
+    bonus = jnp.einsum("bclhk,hk,bclhk->bclh", rr, u, kk)
+    y = y + bonus[..., None] * vv
+
+    # Inter-chunk state passing: S (B,H,K,V)
+    seg = jnp.exp(cls[:, :, -1:, :, :] - cls)      # decay from j to chunk end
+    states = jnp.einsum("bcjhk,bcjhk,bcjhv->bchkv", seg, kk, vv)
+    total = jnp.exp(cls[:, :, -1])                 # (B,nc,H,K)
+
+    def scan_fn(carry, inp):
+        st, tot = inp
+        out = carry
+        new = carry * tot[..., None] + st
+        return new, out
+
+    init = jnp.zeros((B_, H, K, K), jnp.float32)
+    _, prev = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2, 3)),
+    )
+    prev = prev.transpose(1, 0, 2, 3, 4)           # (B,nc,H,K,V)
+    y = y + jnp.einsum("bclhk,bchkv->bclhv", a, prev)
+
+    y = y.reshape(B_, S, D).astype(x.dtype)
+    y = _group_norm(y, p["ln_scale"], p["ln_bias"], H, cfg.norm_eps)
+    return (y * g) @ p["wo"].astype(y.dtype)
+
+
+def rwkv_reference(p: dict, x: jnp.ndarray, cfg, d_model: int) -> jnp.ndarray:
+    """Naive per-token WKV recurrence (oracle + decode semantics)."""
+    r_cfg = cfg.rwkv
+    B_, S, D = x.shape
+    H = D // r_cfg.head_dim
+    K = r_cfg.head_dim
+    r, k, v, logw, g = _rwkv_inputs(p, x, cfg)
+    rr = r.reshape(B_, S, H, K).astype(jnp.float32)
+    kk = k.reshape(B_, S, H, K).astype(jnp.float32)
+    vv = v.reshape(B_, S, H, K).astype(jnp.float32)
+    lw = logw.reshape(B_, S, H, K)
+    u = p["u"].reshape(H, K)
+
+    def step(state, inp):
+        r_t, k_t, v_t, lw_t = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y_t = jnp.einsum("bhk,bhkv->bhv", r_t, state + u[None, :, :, None] * kv)
+        state = state * jnp.exp(lw_t)[..., None] + kv
+        return state, y_t
+
+    init = jnp.zeros((B_, H, K, K), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, init,
+        (rr.transpose(1, 0, 2, 3), kk.transpose(1, 0, 2, 3),
+         vv.transpose(1, 0, 2, 3), lw.transpose(1, 0, 2, 3)),
+    )
+    y = ys.transpose(1, 0, 2, 3).reshape(B_, S, D).astype(x.dtype)
+    y = _group_norm(y, p["ln_scale"], p["ln_bias"], H, cfg.norm_eps)
+    return (y * g) @ p["wo"].astype(y.dtype)
+
+
+def init_rwkv_cache(cfg, batch: int, d_model: int) -> dict:
+    K = cfg.rwkv.head_dim
+    H = d_model // K
+    return {
+        "state": jnp.zeros((batch, H, K, K), jnp.float32),
+        "x_prev": jnp.zeros((batch, 1, d_model), jnp.float32),
+    }
+
+
+def rwkv_decode(p: dict, x: jnp.ndarray, cache: dict, cfg, d_model: int):
+    """One-token step. x: (B, 1, D)."""
+    r_cfg = cfg.rwkv
+    B_, _, D = x.shape
+    H = D // r_cfg.head_dim
+    K = r_cfg.head_dim
+    r, k, v, logw, g = _rwkv_inputs(p, x, cfg, x_prev=cache["x_prev"].astype(x.dtype))
+    r_t = r.reshape(B_, H, K).astype(jnp.float32)
+    k_t = k.reshape(B_, H, K).astype(jnp.float32)
+    v_t = v.reshape(B_, H, K).astype(jnp.float32)
+    lw_t = logw.reshape(B_, H, K)
+    u = p["u"].reshape(H, K)
+
+    kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+    y = jnp.einsum("bhk,bhkv->bhv", r_t, cache["state"] + u[None, :, :, None] * kv)
+    state = cache["state"] * jnp.exp(lw_t)[..., None] + kv
+
+    y = y.reshape(B_, 1, D).astype(x.dtype)
+    y = _group_norm(y, p["ln_scale"], p["ln_bias"], H, cfg.norm_eps)
+    out = (y * g) @ p["wo"].astype(y.dtype)
+    return out, {"state": state, "x_prev": x.astype(jnp.float32)}
+
+
+def init_rwkv_channel(key, cfg, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    s = 1.0 / math.sqrt(d_model)
+    return {
+        "mu": jnp.full((2, d_model), 0.5, jnp.float32),
+        "w_in": (jax.random.normal(k1, (d_model, d_ff)) * s).astype(dt),
+        "w_out": (jax.random.normal(k2, (d_ff, d_model))
+                  * (1.0 / math.sqrt(d_ff))).astype(dt),
+        "w_recept": (jax.random.normal(k3, (d_model, d_model)) * s).astype(dt),
+    }
+
+
+def rwkv_channel_mix(p: dict, x: jnp.ndarray, x_prev=None):
+    """RWKV channel mixing (the FFN analogue): relu^2 with receptance gate.
+    Returns (out, last_x) so decode can carry the token shift."""
+    if x_prev is None:
+        shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+    else:
+        shifted = jnp.concatenate([x_prev, x[:, :-1, :]], axis=1)
+    mu = p["mu"].astype(x.dtype)
+    xk = x + mu[0] * (shifted - x)
+    xr = x + mu[1] * (shifted - x)
+    k = jnp.square(jax.nn.relu(partition.shard_ff(xk @ p["w_in"].astype(x.dtype))))
+    out = jax.nn.sigmoid(xr @ p["w_recept"].astype(x.dtype)) * (
+        k @ p["w_out"].astype(x.dtype))
+    return out, x[:, -1:, :]

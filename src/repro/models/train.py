@@ -1,0 +1,54 @@
+"""Training step factory for the LM substrate (used by smoke tests, the
+end-to-end driver, and the dry-run's train shapes)."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_mod
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init, adamw_update, cosine_lr
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: object        # AdamWState
+
+
+def init_train_state(key: jax.Array, cfg: ModelConfig) -> TrainState:
+    params = model_mod.init_params(key, cfg)
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+def make_train_step(cfg: ModelConfig, *, peak_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10_000):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def train_step(state: TrainState, batch: dict):
+        (loss, parts), grads = jax.value_and_grad(
+            model_mod.loss_fn, has_aux=True
+        )(state.params, batch, cfg)
+        lr = cosine_lr(state.opt.step + 1, peak=peak_lr, warmup=warmup,
+                       total=total_steps)
+        params, opt = adamw_update(grads, state.opt, state.params, lr)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads))
+        )
+        metrics = {"loss": loss, "ce": parts["ce"], "aux": parts["aux"],
+                   "lr": lr, "grad_norm": gnorm}
+        return TrainState(params=params, opt=opt), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params: dict, batch: dict):
+        loss, parts = model_mod.loss_fn(params, batch, cfg)
+        return {"loss": loss, **parts}
+
+    return eval_step

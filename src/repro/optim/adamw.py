@@ -1,0 +1,64 @@
+"""Functional AdamW + cosine LR schedule (no external optimizer deps).
+
+Moments are stored in the parameter dtype by default so the optimizer-state
+footprint is controllable per-architecture (big bf16 models keep bf16 moments
+— the trade-off recorded in DESIGN.md hardware-adaptation notes).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jax.tree.map(jnp.zeros_like, p)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros(params), v=zeros(params))
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    lr: jnp.ndarray,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        p_new = p.astype(jnp.float32) - lr * (update + weight_decay * p.astype(jnp.float32))
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    flat = jax.tree.map(upd, grads, state.m, state.v, params)
+    params_new = jax.tree.map(lambda x: x[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    m_new = jax.tree.map(lambda x: x[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    v_new = jax.tree.map(lambda x: x[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return params_new, AdamWState(step=step, m=m_new, v=v_new)
+
+
+def cosine_lr(step, *, peak: float, warmup: int, total: int, floor: float = 0.0):
+    t = step.astype(jnp.float32)
+    warm = peak * t / max(warmup, 1)
+    frac = jnp.clip((t - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(math.pi * frac))
+    return jnp.where(t < warmup, warm, cos)

@@ -1,0 +1,117 @@
+"""Inject the roofline tables into EXPERIMENTS.md from reports/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.tools.update_experiments
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+DRYRUN = os.path.join(REPO, "reports", "dryrun")
+EXP = os.path.join(REPO, "EXPERIMENTS.md")
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def load():
+    out = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def is_variant(r):
+    return r["tag"].count("__") >= 3
+
+
+def fmt(r):
+    roof = r["roofline"]
+    peak = r["memory"].get("peak_bytes_per_device") or 0
+    return (
+        f"| {r['arch']} | {r['shape']} | {roof['compute_s']*1e3:,.1f} "
+        f"| {roof['memory_s']*1e3:,.1f} | {roof['collective_s']*1e3:,.1f} "
+        f"| {roof['dominant']} | {roof['useful_ratio']:.2f} "
+        f"| {peak/2**30:.2f} |"
+    )
+
+
+def baseline_table(reports):
+    head = [
+        "| arch | shape | compute ms | memory ms | collective ms | dominant "
+        "| useful | peak GiB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    rows, skips = [], []
+    sel = [r for r in reports
+           if not is_variant(r) and r.get("mesh") == "16x16"]
+    sel.sort(key=lambda r: (r.get("arch", ""), SHAPE_ORDER.get(r.get("shape"), 9)))
+    for r in sel:
+        if r["status"] == "ok":
+            rows.append(fmt(r))
+        elif r["status"] == "skipped":
+            skips.append(f"| {r['tag'].split('__')[0]} | "
+                         f"{r['tag'].split('__')[1]} | — | — | — | skipped | — | — |")
+    note = (f"\n*(multi-pod 2×16×16: every non-skipped pair also lowers and "
+            f"compiles — JSONs in reports/dryrun/ with the `2x16x16` tag; "
+            f"the roofline table is single-pod per the brief.)*")
+    return "\n".join(head + rows + skips) + note
+
+
+def optimized_table(reports):
+    head = [
+        "| arch | shape | variant | compute ms | memory ms | collective ms "
+        "| dominant | useful |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    rows = []
+    base = {(r["arch"], r["shape"]): r for r in reports
+            if not is_variant(r) and r.get("mesh") == "16x16"
+            and r["status"] == "ok"}
+    sel = [r for r in reports if is_variant(r) and r["status"] == "ok"
+           and r["tag"].endswith("__optimized")]
+    sel.sort(key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 9)))
+    for r in sel:
+        roof = r["roofline"]
+        b = base.get((r["arch"], r["shape"]))
+        delta = ""
+        if b:
+            br = b["roofline"]
+            dom = br["dominant"] + "_s"
+            if br[dom] > 0:
+                delta = f" ({roof[dom]/br[dom]-1:+.0%} vs baseline dominant)"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | optimized "
+            f"| {roof['compute_s']*1e3:,.1f} | {roof['memory_s']*1e3:,.1f} "
+            f"| {roof['collective_s']*1e3:,.1f} | {roof['dominant']}{delta} "
+            f"| {roof['useful_ratio']:.2f} |"
+        )
+    return "\n".join(head + rows)
+
+
+def main():
+    reports = load()
+    with open(EXP) as f:
+        text = f.read()
+    text = re.sub(
+        r"<!-- ROOFLINE_TABLE -->.*?(?=\n\nReading of the table)",
+        "<!-- ROOFLINE_TABLE -->\n" + baseline_table(reports),
+        text, flags=re.S,
+    )
+    text = re.sub(
+        r"<!-- OPTIMIZED_TABLE -->.*?(?=\n\n## §Bench harness)",
+        "<!-- OPTIMIZED_TABLE -->\n" + optimized_table(reports),
+        text, flags=re.S,
+    )
+    with open(EXP, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md tables updated")
+
+
+if __name__ == "__main__":
+    main()

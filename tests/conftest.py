@@ -1,0 +1,20 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count forcing here — smoke
+tests and benches must see the real single CPU device; multi-device tests
+(federation, dry-run) shell out to subprocess entry points that set
+XLA_FLAGS themselves (see tests/test_federation.py, tests/test_dryrun.py)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def small_credit():
+    """A small credit-like dataset shared across core tests."""
+    from repro.data import synthetic
+
+    return synthetic.load("default_credit_card", n=4000)

@@ -1,0 +1,132 @@
+"""Explainability utilities + remaining substrate coverage (metrics oracle,
+token pipeline, serving loop, runtime-model algebra)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import boosting, explain, metrics, runtime_model
+from repro.core.types import FedGBFConfig, TreeConfig
+from repro.data import synthetic, tabular, tokens
+
+
+def _tiny_model(n=800, d=6, rounds=4):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    # only features 0 and 1 carry signal
+    y = ((x[:, 0] + 0.5 * x[:, 1] + rng.normal(0, 0.3, n)) > 0).astype(np.float32)
+    cfg = FedGBFConfig(rounds=rounds, n_trees_max=3, n_trees_min=3,
+                       rho_id_min=0.8, rho_id_max=0.8,
+                       tree=TreeConfig(max_depth=3, num_bins=16))
+    model, _ = boosting.train_fedgbf(
+        jnp.asarray(x), jnp.asarray(y), cfg, jax.random.PRNGKey(0)
+    )
+    return model, d
+
+
+def test_feature_importance_finds_signal():
+    model, d = _tiny_model()
+    imp = explain.feature_importance(model, d)
+    assert imp.shape == (d,)
+    assert imp.sum() == pytest.approx(1.0)
+    # the two informative features dominate
+    assert imp[0] + imp[1] > 0.6
+    assert np.argmax(imp) in (0, 1)
+
+
+def test_party_importance_partitions_to_one():
+    model, d = _tiny_model()
+    part = tabular.partition_from_dims([2, 4])
+    pi = explain.party_importance(model, part)
+    assert set(pi) == {"party_0", "party_1"}
+    assert sum(pi.values()) == pytest.approx(1.0)
+    assert pi["party_0"] > 0.5  # signal features live in party 0's slice
+
+
+def test_dump_tree_renders():
+    model, _ = _tiny_model(rounds=1)
+    text = explain.dump_tree(model, 0, 0)
+    assert "leaf[" in text and ("if f" in text or "pass-through" in text)
+
+
+def test_auc_against_bruteforce():
+    rng = np.random.default_rng(1)
+    y = jnp.asarray(rng.integers(0, 2, 200), jnp.float32)
+    s = jnp.asarray(rng.normal(size=200), jnp.float32)
+    # brute-force pairwise AUC
+    yn, sn = np.asarray(y), np.asarray(s)
+    pos, neg = sn[yn == 1], sn[yn == 0]
+    wins = (pos[:, None] > neg[None, :]).sum() + 0.5 * (
+        pos[:, None] == neg[None, :]
+    ).sum()
+    expected = wins / (len(pos) * len(neg))
+    assert float(metrics.auc(y, s)) == pytest.approx(expected, abs=1e-5)
+
+
+def test_f1_and_accuracy_edges():
+    y = jnp.asarray([1, 1, 0, 0], jnp.float32)
+    p = jnp.asarray([0.9, 0.2, 0.8, 0.1], jnp.float32)
+    assert float(metrics.accuracy(y, p)) == pytest.approx(0.5)
+    # tp=1 fp=1 fn=1 -> f1 = 2/(2+1+1)
+    assert float(metrics.f1_score(y, p)) == pytest.approx(0.5)
+
+
+def test_token_pipeline_shapes_and_determinism():
+    it = tokens.batches(vocab=512, batch_size=4, seq_len=64, seed=3,
+                        num_batches=2)
+    b1 = next(it)
+    assert b1["tokens"].shape == (4, 64) and b1["labels"].shape == (4, 64)
+    assert b1["tokens"].max() < 512 and b1["tokens"].min() >= 0
+    # next-token alignment
+    it2 = tokens.batches(vocab=512, batch_size=4, seq_len=64, seed=3,
+                         num_batches=1)
+    b1b = next(it2)
+    np.testing.assert_array_equal(b1["tokens"], b1b["tokens"])
+
+
+def test_serve_generate_loop():
+    from repro.configs import get_smoke_config
+    from repro.launch.serve import generate
+    from repro.models import model as model_mod
+
+    cfg = get_smoke_config("smollm-135m")
+    params = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab, (2, 8)), jnp.int32
+    )
+    out = generate(params, cfg, prompts, gen_len=6)
+    assert out.shape == (2, 14)
+    assert int(out.max()) < cfg.vocab and int(out.min()) >= 0
+
+
+def test_runtime_model_degenerate_equals_secureboost():
+    """FedGBF with 1 tree/round and alpha=1 must cost exactly T_S."""
+    cfg = FedGBFConfig(rounds=13, n_trees_max=1, n_trees_min=1,
+                       rho_id_min=1.0, rho_id_max=1.0)
+    est = runtime_model.estimate_fedgbf_runtime(cfg, t_unit_s=2.0, t0_s=5.0)
+    ts = runtime_model.estimate_secureboost_runtime(13, 2.0, t0_s=5.0)
+    assert est.lower_s == pytest.approx(ts)
+    assert est.upper_s == pytest.approx(ts)
+
+
+def test_runtime_model_paper_ratio():
+    """The paper's §4.3 headline: ideal-parallel FedGBF ~22-26% of T_S."""
+    cfg = boosting.dynamic_fedgbf_config(rounds=20)
+    est = runtime_model.estimate_fedgbf_runtime(cfg, t_unit_s=1.0)
+    ts = runtime_model.estimate_secureboost_runtime(20, 1.0)
+    ratio = est.lower_s / ts
+    assert 0.20 <= ratio <= 0.28, ratio
+    # worst case still cheaper than SecureBoost. Pure schedule arithmetic
+    # gives ~18% saving; the paper reports 6-9% because its estimates carry
+    # the measured setup offset T_0 and FATE-side rounding of the schedules.
+    assert est.upper_s < ts
+    assert 0.10 <= 1 - est.upper_s / ts <= 0.25
+
+
+def test_vertical_partition_roundtrip():
+    part = tabular.partition_from_dims([5, 5])
+    assert part.num_parties == 2 and part.num_features == 10
+    for f in range(10):
+        p = part.owner_of(f)
+        assert part.columns(p).start <= f < part.columns(p).stop

@@ -1,0 +1,144 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import binning, dynamic
+from repro.core.histogram import compute_histogram
+from repro.core.types import FedGBFConfig
+from repro.federation import protocol
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(10, 300),
+    d=st.integers(1, 8),
+    num_bins=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_binning_bounds_and_monotonicity(n, d, num_bins, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)) * rng.lognormal(size=(1, d)), jnp.float32)
+    b, edges = binning.fit_bin(x, num_bins)
+    # bounds
+    assert int(b.min()) >= 0 and int(b.max()) < num_bins
+    # monotone: larger value -> bin id not smaller (per feature)
+    xa = np.asarray(x)
+    ba = np.asarray(b)
+    for f in range(d):
+        order = np.argsort(xa[:, f], kind="stable")
+        assert np.all(np.diff(ba[order, f]) >= 0)
+    # edges non-decreasing
+    assert np.all(np.diff(np.asarray(edges), axis=1) >= 0)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(16, 400),
+    d=st.integers(1, 6),
+    nodes=st.sampled_from([1, 2, 4]),
+    parts=st.integers(1, 5),
+    seed=st.integers(0, 2**16),
+)
+def test_histogram_additivity_under_partition(n, d, nodes, parts, seed):
+    """sum of per-part histograms == whole histogram, for ANY sample partition
+    (the invariant that makes both the data-axis psum and VFL exact)."""
+    rng = np.random.default_rng(seed)
+    B = 8
+    binned = jnp.asarray(rng.integers(0, B, (n, d)), jnp.int32)
+    g = jnp.asarray(rng.normal(size=n), jnp.float32)
+    h = jnp.asarray(rng.random(n), jnp.float32)
+    w = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+    assign = jnp.asarray(rng.integers(0, nodes, n), jnp.int32)
+
+    whole = compute_histogram(binned, g, h, w, assign, nodes, B)
+    labels = rng.integers(0, parts, n)
+    acc = jnp.zeros_like(whole)
+    for p in range(parts):
+        m = jnp.asarray((labels == p).astype(np.float32))
+        acc = acc + compute_histogram(binned, g, h, w * m, assign, nodes, B)
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(whole), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(16, 400),
+    seed=st.integers(0, 2**16),
+)
+def test_histogram_totals_match_sums(n, seed):
+    """Row 'count'/'sum_g' marginals equal direct sums regardless of binning."""
+    rng = np.random.default_rng(seed)
+    B, d = 16, 3
+    binned = jnp.asarray(rng.integers(0, B, (n, d)), jnp.int32)
+    g = jnp.asarray(rng.normal(size=n), jnp.float32)
+    h = jnp.asarray(rng.random(n), jnp.float32)
+    w = jnp.asarray((rng.random(n) < 0.7).astype(np.float32))
+    hist = compute_histogram(binned, g, h, w, jnp.zeros(n, jnp.int32), 1, B)
+    # every feature's bin-marginal is the same masked total
+    for f in range(d):
+        np.testing.assert_allclose(
+            float(hist[0, f, :, 0].sum()), float((g * w).sum()), rtol=1e-4, atol=1e-4
+        )
+        np.testing.assert_allclose(
+            float(hist[0, f, :, 2].sum()), float(w.sum()), rtol=1e-6
+        )
+
+
+@settings(**SETTINGS)
+@given(
+    rounds=st.integers(1, 60),
+    v_min=st.floats(0.05, 0.5),
+    span=st.floats(0.01, 0.5),
+    k=st.sampled_from([0.25, 0.5, 0.75, 1.0]),
+)
+def test_dynamic_schedules_bounded_and_monotone(rounds, v_min, span, k):
+    v_max = v_min + span
+    dec = [dynamic.dynamic_decay(m, rounds, v_min, v_max, k) for m in range(1, rounds + 1)]
+    inc = [dynamic.dynamic_increase(m, rounds, v_min, v_max, k) for m in range(1, rounds + 1)]
+    eps = 1e-9
+    assert all(v_min - eps <= v <= v_max + eps for v in dec + inc)
+    assert all(a >= b - eps for a, b in zip(dec, dec[1:]))  # decay monotone down
+    assert all(a <= b + eps for a, b in zip(inc, inc[1:]))  # increase monotone up
+    # endpoints (k = 1 completes exactly at the last round)
+    assert dec[0] == v_max and inc[0] == (v_min if rounds > 1 else v_max)
+    if k == 1.0 and rounds > 1:
+        assert abs(dec[-1] - v_min) < 1e-6 and abs(inc[-1] - v_max) < 1e-6
+
+
+def test_dynamic_paper_worked_example():
+    """§3.2.2: 11 rounds, 50 -> 15 trees. k=1 ends at 15 in round 11;
+    k=0.5 reaches 15 at round 6 and holds through round 11."""
+    k1 = [dynamic.dynamic_decay(m, 11, 15, 50, 1.0) for m in range(1, 12)]
+    assert abs(k1[0] - 50) < 1e-9 and abs(k1[-1] - 15) < 1e-6
+    k05 = [dynamic.dynamic_decay(m, 11, 15, 50, 0.5) for m in range(1, 12)]
+    assert abs(k05[5] - 15) < 1e-6  # round 6
+    assert all(abs(v - 15) < 1e-6 for v in k05[5:])
+
+
+@settings(**SETTINGS)
+@given(
+    rounds=st.integers(1, 30),
+    n=st.integers(100, 10_000),
+    bins=st.sampled_from([16, 32]),
+)
+def test_protocol_argmax_never_costlier_than_histogram(rounds, n, bins):
+    cfg = FedGBFConfig(rounds=rounds, n_trees_max=5, n_trees_min=2,
+                       rho_id_min=0.1, rho_id_max=0.3)
+    base = dict(n_samples=n, party_dims=(5, 5), num_bins=bins)
+    hist = protocol.run_cost(protocol.ProtocolSpec(**base, aggregation="histogram"), cfg)
+    argm = protocol.run_cost(protocol.ProtocolSpec(**base, aggregation="argmax"), cfg)
+    assert argm.histograms <= hist.histograms
+    assert argm.total <= hist.total
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), parties=st.integers(2, 6))
+def test_secure_masks_cancel(seed, parties):
+    from repro.federation import secure
+
+    masks = secure.pairwise_masks(seed, parties, (17,))
+    np.testing.assert_allclose(np.asarray(masks.sum(0)), np.zeros(17), atol=1e-5)

@@ -19,6 +19,7 @@ def main() -> None:
         figures,
         kernel_bench,
         paper_tables,
+        predict_bench,
         roofline_report,
         runtime_model,
     )
@@ -26,6 +27,7 @@ def main() -> None:
     modules = [
         ("communication", communication),
         ("kernel_bench", kernel_bench),
+        ("predict_bench", predict_bench),
         ("runtime_model", runtime_model),
         ("paper_tables", paper_tables),
         ("figures", figures),

@@ -48,12 +48,10 @@ tree_cfg = TreeConfig(max_depth=3, num_bins=32)
 cfg = boosting.dynamic_fedgbf_config(rounds=8, tree=tree_cfg)
 
 for aggregation in ("histogram", "argmax"):
-    forest_fn = vfl.make_federated_forest_fn(
-        mesh, tree_cfg, aggregation=aggregation
-    )
+    backend = vfl.make_vfl_backend(mesh, tree_cfg, aggregation=aggregation)
     model, _ = boosting.train_fedgbf(
         jnp.asarray(x_train), jnp.asarray(ds.y_train), cfg,
-        jax.random.PRNGKey(0), forest_fn=forest_fn,
+        jax.random.PRNGKey(0), backend=backend,
     )
     rep = metrics.classification_report(
         jnp.asarray(ds.y_test), boosting.predict(model, jnp.asarray(x_test))

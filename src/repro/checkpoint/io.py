@@ -2,7 +2,13 @@
 
 Flattens any pytree of arrays to an .npz plus a json structure descriptor;
 round-trips dtypes (incl. bfloat16 via a uint16 view) and python scalars.
-Used for both LM TrainStates and FedGBF EnsembleModels.
+Used for both LM TrainStates and FedGBF ensembles.
+
+FedGBF models persist in the *packed* layout (``save_ensemble`` /
+``load_ensemble``): the static metadata (round offsets, learning rate, loss)
+goes into the json sidecar, so loading needs no example pytree and the
+serving entrypoint can mmap a checkpoint straight into the packed predictor
+(DESIGN.md §3).
 """
 
 from __future__ import annotations
@@ -35,17 +41,23 @@ def save_pytree(path: str, tree) -> None:
         json.dump(meta, f)
 
 
-def load_pytree(path: str, like) -> object:
-    """Load into the structure of ``like`` (an example pytree)."""
+def _load_leaves(path: str, meta: dict) -> list:
+    """Load the npz leaves with dtype restoration (incl. the bf16 view)."""
     npz = np.load(path + ".npz" if not path.endswith(".npz") else path)
-    with open(_meta_path(path)) as f:
-        meta = json.load(f)
     leaves = []
     for i, entry in enumerate(meta["leaves"]):
         arr = npz[f"leaf_{i}"]
         if entry["dtype"] == _BF16:
             arr = arr.view(jnp.bfloat16)
         leaves.append(jnp.asarray(arr))
+    return leaves
+
+
+def load_pytree(path: str, like) -> object:
+    """Load into the structure of ``like`` (an example pytree)."""
+    with open(_meta_path(path)) as f:
+        meta = json.load(f)
+    leaves = _load_leaves(path, meta)
     _, treedef = jax.tree.flatten(like)
     return jax.tree.unflatten(treedef, leaves)
 
@@ -53,3 +65,51 @@ def load_pytree(path: str, like) -> object:
 def _meta_path(path: str) -> str:
     base = path[:-4] if path.endswith(".npz") else path
     return base + ".meta.json"
+
+
+def save_ensemble(path: str, model) -> None:
+    """Persist a FedGBF model (EnsembleModel or PackedEnsemble) packed.
+
+    Array leaves go to the npz; the pytree's static aux data (round offsets,
+    learning rate, base score, loss, max_depth) goes into the json sidecar
+    under ``"packed_ensemble"`` so ``load_ensemble`` is self-describing.
+    """
+    from repro.core.types import EnsembleModel, PackedEnsemble, pack_ensemble
+
+    if isinstance(model, EnsembleModel):
+        model = pack_ensemble(model)
+    if not isinstance(model, PackedEnsemble):
+        raise TypeError(f"expected EnsembleModel or PackedEnsemble, got {model!r}")
+    leaves, aux = model.tree_flatten()
+    save_pytree(path, list(leaves))
+    round_offsets, lr, base, loss, max_depth = aux
+    meta_path = _meta_path(path)
+    with open(meta_path) as f:
+        meta = json.load(f)
+    meta["packed_ensemble"] = {
+        "round_offsets": list(round_offsets),
+        "learning_rate": lr,
+        "base_score": base,
+        "loss": loss,
+        "max_depth": max_depth,
+    }
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+
+
+def load_ensemble(path: str):
+    """Load a packed FedGBF checkpoint; returns a PackedEnsemble."""
+    from repro.core.types import PackedEnsemble
+
+    with open(_meta_path(path)) as f:
+        meta = json.load(f)
+    if "packed_ensemble" not in meta:
+        raise ValueError(
+            f"{path} is not a packed-ensemble checkpoint (missing "
+            "'packed_ensemble' metadata); use load_pytree with an example tree"
+        )
+    pe = meta["packed_ensemble"]
+    leaves = _load_leaves(path, meta)
+    aux = (tuple(pe["round_offsets"]), pe["learning_rate"], pe["base_score"],
+           pe["loss"], pe["max_depth"])
+    return PackedEnsemble.tree_unflatten(aux, tuple(leaves))

@@ -1,0 +1,63 @@
+"""JAX version-compatibility shims (DESIGN.md §0).
+
+The codebase targets the current JAX APIs (``jax.shard_map``,
+``jax.sharding.get_abstract_mesh``, ``jax.set_mesh``); the pinned container
+image ships an older release where those names live elsewhere or do not
+exist.  Every module that needs one of these imports it from here so the
+fallback logic exists exactly once:
+
+  * ``shard_map``         — ``jax.shard_map`` or ``jax.experimental.shard_map``
+                            (mapping the ``check_vma`` kwarg to ``check_rep``);
+  * ``get_abstract_mesh`` — public API when present, else the ambient physical
+                            mesh from the thread-resource environment (which is
+                            what the ``use_mesh`` fallback below populates);
+  * ``use_mesh``          — ``jax.set_mesh`` context when present, else the
+                            legacy ``with mesh:`` resource-env context manager.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+try:  # current API (jax >= 0.6)
+    from jax import shard_map as _shard_map_new
+
+    def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _shard_map_new(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+
+except ImportError:  # legacy experimental API (jax 0.4.x)
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _shard_map_old(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma,
+        )
+
+
+try:  # current API
+    from jax.sharding import get_abstract_mesh  # noqa: F401
+except ImportError:  # legacy: the ambient mesh of the resource environment.
+    from jax._src import mesh as _mesh_lib
+
+    def get_abstract_mesh():
+        """Ambient mesh (``Mesh``/``AbstractMesh`` both expose .empty/.shape)."""
+        return _mesh_lib.thread_resources.env.physical_mesh
+
+
+if hasattr(jax, "set_mesh"):
+    use_mesh = jax.set_mesh
+else:
+
+    @contextlib.contextmanager
+    def use_mesh(mesh):
+        """Legacy resource-env context: ``with mesh:`` sets the ambient mesh
+        that both ``with_sharding_constraint(x, PartitionSpec(...))`` and the
+        ``get_abstract_mesh`` fallback above read."""
+        with mesh:
+            yield mesh

@@ -9,11 +9,14 @@ Public API:
   forest.build_forest                 vmap-parallel bagging layer (Alg. 1)
   boosting.train_fedgbf               (Dynamic) FedGBF training (Algs. 1, 3)
   boosting.secureboost_config         the paper's baseline as a degenerate config
+  backend.get_backend / TreeBackend   named execution backends (DESIGN.md §1)
+  types.pack_ensemble / PackedEnsemble  packed inference layout (DESIGN.md §3)
   dynamic.*                           cosine/sine schedules (eqs. 6-7)
   runtime_model.*                     eqs. 8-11 analytical runtime model
 """
 
 from repro.core import (  # noqa: F401
+    backend,
     binning,
     boosting,
     dynamic,
@@ -25,10 +28,20 @@ from repro.core import (  # noqa: F401
     split,
     tree,
 )
+from repro.core.backend import (  # noqa: F401
+    BackendDescriptor,
+    TreeBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+)
 from repro.core.types import (  # noqa: F401
     EnsembleModel,
     FedGBFConfig,
+    PackedEnsemble,
     TreeArrays,
     TreeConfig,
     forest_size,
+    pack_ensemble,
+    unpack_ensemble,
 )

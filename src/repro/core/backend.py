@@ -1,0 +1,169 @@
+"""TreeBackend: the execution seam of the tree library (DESIGN.md §1).
+
+Historically the histogram/split/route/leaf providers were four loose
+callables threaded ad-hoc through ``boosting -> forest -> tree``, and the
+federated path bypassed them with a fifth (``forest_fn``).  A ``TreeBackend``
+bundles all of them plus an execution descriptor (impl name, party/mesh
+configuration) into one hashable object that is threaded as a single jit
+static argument.  Named backends come from a registry:
+
+  ``"local"``         centralized execution, segment-sum histograms;
+  ``"local-pallas"``  centralized execution, Pallas TPU histogram kernel;
+  ``"vfl-histogram"`` shard_map VFL, paper-faithful full-histogram exchange;
+  ``"vfl-argmax"``    shard_map VFL, candidate-only exchange (beyond-paper);
+  ``"vfl-*-sharded"`` the above with samples additionally sharded over the
+                      data axes (multi-worker extension).
+
+The ``vfl-*`` factories need a device mesh and a ``TreeConfig``
+(``get_backend(name, mesh=..., tree=...)``); they are registered lazily by
+``federation/vfl.py`` on first request so ``core`` never imports
+``federation``.  Later scaling work (async rounds, multi-host execution,
+histogram caching) plugs in here by registering new factories.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+_REGISTRY: dict = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendDescriptor:
+    """Execution metadata of a TreeBackend (all fields hashable/static).
+
+    ``impl`` is the registry name; ``histogram_impl`` names the histogram
+    provider family (``"segment"`` | ``"onehot"`` | ``"pallas"``); the party/
+    data fields describe the SPMD decomposition for federated backends and
+    stay at their defaults for centralized ones.
+    """
+
+    impl: str
+    histogram_impl: str = "segment"
+    num_parties: int = 1
+    party_axis: Optional[str] = None
+    data_axes: tuple = ()
+    shard_samples: bool = False
+
+    @property
+    def is_federated(self) -> bool:
+        return self.party_axis is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeBackend:
+    """Bundled execution providers for tree/forest construction.
+
+    Provider semantics (all optional — None selects the centralized default):
+
+      histogram_fn  signature of ``core.histogram.compute_histogram``;
+      choose_fn     (hist, feature_mask) -> SplitDecision;
+      route_fn      (binned, assign, decision) -> new assign;
+      leaf_fn       histogram signature, used for the leaf-stats pass;
+      forest_builder  full override of ``core.forest.build_forest`` — the
+                    federated path uses this to wrap the whole per-round
+                    forest construction in one shard_map program with the
+                    other four providers baked in.
+
+    Frozen (hashable) so the whole object rides through ``jax.jit`` as one
+    static argument; reuse a backend instance across rounds/calls to reuse
+    the jit cache.
+    """
+
+    descriptor: BackendDescriptor
+    histogram_fn: Optional[Callable] = None
+    choose_fn: Optional[Callable] = None
+    route_fn: Optional[Callable] = None
+    leaf_fn: Optional[Callable] = None
+    forest_builder: Optional[Callable] = None
+
+    @property
+    def name(self) -> str:
+        return self.descriptor.impl
+
+    def build_forest(self, binned, g, h, sample_mask, feature_mask, cfg=None):
+        """Build one forest layer (drop-in for ``core.forest.build_forest``).
+
+        ``cfg`` may be omitted for backends whose ``forest_builder`` bakes
+        the tree config into a pre-built program (the shard_map VFL path).
+        """
+        if self.forest_builder is not None:
+            return self.forest_builder(binned, g, h, sample_mask, feature_mask, cfg)
+        if cfg is None:
+            raise ValueError(f"backend {self.name!r} needs an explicit TreeConfig")
+        from repro.core import forest as forest_mod  # local to avoid cycle
+
+        return forest_mod.build_forest(
+            binned, g, h, sample_mask, feature_mask, cfg, backend=self
+        )
+
+    def build_tree(self, binned, g, h, sample_mask, feature_mask, cfg):
+        """Build one tree (drop-in for ``core.tree.build_tree``)."""
+        from repro.core import tree as tree_mod  # local to avoid cycle
+
+        return tree_mod.build_tree(
+            binned, g, h, sample_mask, feature_mask, cfg, backend=self
+        )
+
+
+def register_backend(name: str, factory: Callable[..., TreeBackend]) -> None:
+    """Register a named backend factory: ``factory(**kwargs) -> TreeBackend``."""
+    _REGISTRY[name] = factory
+
+
+def available_backends() -> tuple:
+    """Registered backend names (triggers the lazy vfl registration)."""
+    _ensure_vfl_registered()
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(name: str, **kwargs) -> TreeBackend:
+    """Construct a named backend. ``vfl-*`` names need ``mesh=``/``tree=``."""
+    if name not in _REGISTRY and name.startswith("vfl"):
+        _ensure_vfl_registered()
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {available_backends()}"
+        )
+    return _REGISTRY[name](**kwargs)
+
+
+def resolve_backend(backend, **kwargs) -> TreeBackend:
+    """Accept None | name | TreeBackend and return a TreeBackend."""
+    if backend is None:
+        return get_backend("local")
+    if isinstance(backend, str):
+        return get_backend(backend, **kwargs)
+    if isinstance(backend, TreeBackend):
+        return backend
+    raise TypeError(f"backend must be None, str, or TreeBackend; got {backend!r}")
+
+
+def _ensure_vfl_registered() -> None:
+    try:
+        import repro.federation.vfl  # noqa: F401  (registers vfl-* factories)
+    except ImportError as e:
+        # Only a genuinely absent federation package degrades to local-only;
+        # any other ImportError (e.g. a broken transitive dep) must surface
+        # rather than masquerade as "unknown backend".
+        if e.name and e.name.startswith("repro.federation"):
+            return
+        raise
+
+
+def _local_factory(**_kw) -> TreeBackend:
+    return TreeBackend(BackendDescriptor(impl="local"))
+
+
+def _local_pallas_factory(**_kw) -> TreeBackend:
+    from repro.core.histogram import histogram_dispatch
+
+    return TreeBackend(
+        BackendDescriptor(impl="local-pallas", histogram_impl="pallas"),
+        histogram_fn=histogram_dispatch("pallas"),
+    )
+
+
+register_backend("local", _local_factory)
+register_backend("local-pallas", _local_pallas_factory)

@@ -9,14 +9,23 @@ paper's 5 -> 2 schedule that is at most 4 programs.
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import binning, dynamic, forest, losses, metrics
-from repro.core.types import EnsembleModel, FedGBFConfig, forest_size
+from repro.core import backend as backend_mod
+from repro.core import binning, dynamic, losses, metrics
+from repro.core import forest as forest_mod
+from repro.core.types import (
+    EnsembleModel,
+    FedGBFConfig,
+    PackedEnsemble,
+    forest_size,
+    pack_ensemble,
+)
 
 
 @dataclass
@@ -45,20 +54,20 @@ def train_fedgbf(
     rng: jax.Array,
     x_valid: Optional[jnp.ndarray] = None,
     y_valid: Optional[jnp.ndarray] = None,
-    histogram_fn: Optional[Callable] = None,
-    choose_fn: Optional[Callable] = None,
-    route_fn: Optional[Callable] = None,
-    leaf_fn: Optional[Callable] = None,
-    forest_fn: Optional[Callable] = None,
+    backend: Union[str, "backend_mod.TreeBackend", None] = None,
     eval_every: int = 1,
     verbose: bool = False,
 ) -> tuple[EnsembleModel, TrainHistory]:
     """Train (Dynamic) FedGBF. Set min == max on both schedules for static FedGBF.
 
-    ``histogram_fn`` / ``choose_fn`` inject the federated (shard_map) providers;
-    None means centralized-local execution, which the paper itself argues (and
-    SecureBoost's losslessness guarantees) is metric-equivalent (§4.2.1).
+    ``backend`` selects the execution layer (DESIGN.md §1): a registry name
+    (``"local"``, ``"local-pallas"``; ``"vfl-*"`` names need a constructed
+    backend since they bind a mesh) or a ``TreeBackend`` instance from
+    ``core.backend.get_backend`` / ``federation.vfl.make_vfl_backend``.
+    None means centralized-local execution, which the paper itself argues
+    (and SecureBoost's losslessness guarantees) is metric-equivalent (§4.2.1).
     """
+    bk = backend_mod.resolve_backend(backend)
     n, d = x.shape
     binned, edges = binning.fit_bin(x, cfg.tree.num_bins)
     y = y.astype(jnp.float32)
@@ -81,21 +90,18 @@ def train_fedgbf(
         rho_id = dynamic.rho_id_schedule(cfg, m)
 
         rng, k_sample = jax.random.split(rng)
-        smask, fmask = forest.sample_masks(
+        smask, fmask = forest_mod.sample_masks(
             k_sample, n, d, n_trees, rho_id, cfg.rho_feat
         )
         g, h = losses.grad_hess(cfg.loss, y, y_hat)
-        builder = forest_fn if forest_fn is not None else forest.build_forest
-        trees, train_pred = builder(
-            binned, g, h, smask, fmask, cfg.tree,
-            histogram_fn=histogram_fn, choose_fn=choose_fn, route_fn=route_fn,
-            leaf_fn=leaf_fn,
-        )
+        trees, train_pred = bk.build_forest(binned, g, h, smask, fmask, cfg.tree)
         y_hat = y_hat + cfg.learning_rate * train_pred
         forests.append(jax.block_until_ready(trees))
         dt = time.perf_counter() - t0
 
         if x_valid is not None:
+            # predict_forest = the shared packed traversal (tree.predict_trees)
+            # + per-round mean, applied incrementally to the newest round.
             vpred = tree_mod.predict_forest(trees, binned_valid, cfg.tree.max_depth)
             y_hat_valid = y_hat_valid + cfg.learning_rate * vpred
 
@@ -166,10 +172,74 @@ def federated_forest_config(n_trees: int = 20, rho_id: float = 0.6, **kw) -> Fed
     )
 
 
-def predict(model: EnsembleModel, x: jnp.ndarray) -> jnp.ndarray:
-    """Raw-margin prediction F(x) = base + lr * sum_m mean_j T_mj(x) (Alg. 1 l.10)."""
+_PACK_CACHE: "OrderedDict" = OrderedDict()  # id(model) -> (model, packed)
+
+
+def _packed_for(model: EnsembleModel) -> PackedEnsemble:
+    """Memoized pack_ensemble so repeated predict calls on the same model
+    (metric sweeps, eval loops) do not re-concatenate the tree stacks.
+    Bounded and identity-keyed (keeps the last few models alive — long-lived
+    multi-model callers should pre-pack and pass PackedEnsemble directly)."""
+    if isinstance(model.bin_edges, jax.core.Tracer):
+        return pack_ensemble(model)  # under jit tracing: never cache tracers
+    key = id(model)
+    hit = _PACK_CACHE.get(key)
+    if hit is not None and hit[0] is model:
+        return hit[1]
+    packed = pack_ensemble(model)
+    _PACK_CACHE[key] = (model, packed)
+    while len(_PACK_CACHE) > 4:
+        _PACK_CACHE.popitem(last=False)
+    return packed
+
+
+def predict(
+    model: Union[EnsembleModel, PackedEnsemble],
+    x: jnp.ndarray,
+    impl: str = "packed",
+) -> jnp.ndarray:
+    """Raw-margin prediction F(x) = base + lr * sum_m mean_j T_mj(x) (Alg. 1 l.10).
+
+    Routed through the ``PackedEnsemble`` layout (DESIGN.md §3): one
+    traversal of all trees instead of an O(rounds) Python loop.  ``impl``:
+
+      ``"packed"``    single vmapped traversal, exact per-round combiner
+                      (bit-for-bit equal to the legacy loop) — the default;
+      ``"weighted"``  single-pass tree_scale combiner (serving fast path);
+      ``"pallas"``    the fused Pallas ``ensemble_predict`` kernel;
+      ``"loop"``      the legacy per-round loop (kept for benchmarks).
+    """
     from repro.core import tree as tree_mod
 
+    if impl == "loop":
+        return predict_loop(model, x)
+    packed = model if isinstance(model, PackedEnsemble) else _packed_for(model)
+    binned = binning.bin_data(x, packed.bin_edges)
+    if impl == "packed":
+        return tree_mod.predict_packed(packed, binned)
+    if impl == "weighted":
+        return tree_mod.predict_packed_weighted(packed, binned)
+    if impl == "pallas":
+        from repro.kernels.ensemble_predict.ops import predict_packed_pallas
+
+        return predict_packed_pallas(packed, binned)
+    raise ValueError(f"unknown predict impl {impl!r}")
+
+
+def predict_loop(
+    model: Union[EnsembleModel, PackedEnsemble], x: jnp.ndarray
+) -> jnp.ndarray:
+    """Legacy O(rounds) per-round prediction loop.
+
+    Superseded by the packed path; kept as the reference the packed path is
+    asserted bit-for-bit equal to (tests/test_packed.py) and as the baseline
+    in benchmarks/predict_bench.py.
+    """
+    from repro.core import tree as tree_mod
+    from repro.core.types import unpack_ensemble
+
+    if isinstance(model, PackedEnsemble):
+        model = unpack_ensemble(model)
     binned = binning.bin_data(x, model.bin_edges)
     out = jnp.full((x.shape[0],), model.base_score, dtype=jnp.float32)
     for trees in model.forests:
@@ -179,5 +249,9 @@ def predict(model: EnsembleModel, x: jnp.ndarray) -> jnp.ndarray:
     return out
 
 
-def predict_proba(model: EnsembleModel, x: jnp.ndarray) -> jnp.ndarray:
-    return jax.nn.sigmoid(predict(model, x))
+def predict_proba(
+    model: Union[EnsembleModel, PackedEnsemble],
+    x: jnp.ndarray,
+    impl: str = "packed",
+) -> jnp.ndarray:
+    return jax.nn.sigmoid(predict(model, x, impl=impl))

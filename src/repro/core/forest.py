@@ -10,7 +10,6 @@ layer, and the sampling matrices become boolean masks so shapes stay static.
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +43,7 @@ def sample_masks(
     return jax.vmap(one)(keys)
 
 
-@partial(jax.jit, static_argnames=("cfg", "histogram_fn", "choose_fn", "route_fn", "leaf_fn"))
+@partial(jax.jit, static_argnames=("cfg", "backend"))
 def build_forest(
     binned: jnp.ndarray,
     g: jnp.ndarray,
@@ -52,10 +51,7 @@ def build_forest(
     sample_mask: jnp.ndarray,
     feature_mask: jnp.ndarray,
     cfg: TreeConfig,
-    histogram_fn: Optional[Callable] = None,
-    choose_fn: Optional[Callable] = None,
-    route_fn: Optional[Callable] = None,
-    leaf_fn: Optional[Callable] = None,
+    backend=None,
 ) -> tuple[TreeArrays, jnp.ndarray]:
     """Build all trees of one forest layer in parallel (vmap over trees).
 
@@ -63,6 +59,9 @@ def build_forest(
       binned: (n, d) shared binned features.
       g, h: (n,) shared derivatives (all trees of round m fit y_hat^(m-1)).
       sample_mask: (n_trees, n); feature_mask: (n_trees, d).
+      backend: ``core.backend.TreeBackend`` execution providers (hashable,
+        rides through jit as one static argument); None = centralized-local.
+        Reuse one backend instance across rounds to reuse the jit cache.
 
     Returns:
       (trees, train_pred): trees is a stacked TreeArrays (leading axis
@@ -73,9 +72,7 @@ def build_forest(
 
     def one(smask, fmask):
         tr, assign = tree_mod.build_tree(
-            binned, g, h, smask, fmask, cfg,
-            histogram_fn=histogram_fn, choose_fn=choose_fn, route_fn=route_fn,
-            leaf_fn=leaf_fn,
+            binned, g, h, smask, fmask, cfg, backend=backend,
         )
         return tr, tr.leaf_weight[assign]
 

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.core import histogram as hist_mod
 from repro.core import split as split_mod
-from repro.core.types import TreeArrays, TreeConfig
+from repro.core.types import PackedEnsemble, TreeArrays, TreeConfig
 
 HistogramFn = Callable[..., jnp.ndarray]
 
@@ -49,6 +49,7 @@ def build_tree(
     sample_mask: jnp.ndarray,
     feature_mask: jnp.ndarray,
     cfg: TreeConfig,
+    backend=None,
     histogram_fn: Optional[HistogramFn] = None,
     choose_fn: Optional[Callable] = None,
     route_fn: Optional[Callable] = None,
@@ -66,13 +67,20 @@ def build_tree(
       g, h: (n,) float32 derivatives w.r.t. y_hat^(m-1).
       sample_mask: (n,) float32 0/1 — P_m(j) of eq. 4.
       feature_mask: (d,) bool — Q_m(j) of eq. 4 (local slice when federated).
-      histogram_fn: signature of ``core.histogram.compute_histogram``.
-      choose_fn: signature of ``core.split.choose_splits`` (minus cfg);
-        the federated path overrides this to run the party-wise argmax.
-      route_fn: (binned, assign, decision) -> new assign. The federated path
-        overrides this with the ownership-masked psum that mirrors Alg. 2
-        step 3 ("the passive party returns the divided ID space").
+      backend: a ``core.backend.TreeBackend`` bundling the execution
+        providers (DESIGN.md §1); None = centralized-local defaults.  The
+        federated backends override the providers with the shard_map
+        collectives of Alg. 2 ("the passive party returns the divided ID
+        space", etc. — see federation/aggregator.py).
+      histogram_fn / choose_fn / route_fn / leaf_fn: DEPRECATED per-provider
+        overrides, kept as a shim for direct kernel tests; prefer passing a
+        backend.  An explicit fn wins over the backend's provider.
     """
+    if backend is not None:
+        histogram_fn = histogram_fn or backend.histogram_fn
+        choose_fn = choose_fn or backend.choose_fn
+        route_fn = route_fn or backend.route_fn
+        leaf_fn = leaf_fn or backend.leaf_fn
     if histogram_fn is None:
         histogram_fn = hist_mod.compute_histogram
     if choose_fn is None:
@@ -140,7 +148,64 @@ def predict_tree(tree: TreeArrays, binned: jnp.ndarray, max_depth: int) -> jnp.n
     return tree.leaf_weight[idx]
 
 
+def predict_trees(trees: TreeArrays, binned: jnp.ndarray, max_depth: int) -> jnp.ndarray:
+    """Per-tree margins of a stacked forest: (n_trees, n) float32.
+
+    The single vmapped traversal shared by forest prediction, training-time
+    validation, and ``PackedEnsemble`` inference (DESIGN.md §3) — every
+    prediction consumer funnels through this one program.
+    """
+    return jax.vmap(lambda tr: predict_tree(tr, binned, max_depth))(trees)
+
+
 def predict_forest(trees: TreeArrays, binned: jnp.ndarray, max_depth: int) -> jnp.ndarray:
     """Mean over a stacked forest (bagging combiner g of Alg. 1 line 7)."""
-    per_tree = jax.vmap(lambda tr: predict_tree(tr, binned, max_depth))(trees)
-    return jnp.mean(per_tree, axis=0)
+    return jnp.mean(predict_trees(trees, binned, max_depth), axis=0)
+
+
+def predict_packed(packed: PackedEnsemble, binned: jnp.ndarray) -> jnp.ndarray:
+    """Raw-margin prediction from the packed layout: ONE traversal of all
+    ``total_trees`` trees, then the exact per-round bagging-mean combiner.
+
+    Bit-for-bit equal to the legacy per-round loop (asserted in
+    tests/test_packed.py): the traversal is elementwise per tree, and the
+    static ``round_offsets`` reproduce the identical mean/accumulate order —
+    the combiner costs O(rounds) trivial vector adds, not O(rounds)
+    traversals.
+    """
+    per_tree = predict_trees(packed.trees(), binned, packed.max_depth)
+    out = jnp.full((binned.shape[0],), packed.base_score, dtype=jnp.float32)
+    for r in range(packed.rounds):
+        s, e = packed.round_offsets[r], packed.round_offsets[r + 1]
+        out = out + packed.learning_rate * jnp.mean(per_tree[s:e], axis=0)
+    return out
+
+
+def predict_packed_weighted(packed: PackedEnsemble, binned: jnp.ndarray) -> jnp.ndarray:
+    """Single-pass combiner: ``base + sum_t tree_scale[t] * tree_t(x)``.
+
+    Algebraically identical to ``predict_packed`` (scale = lr / n_trees per
+    round) but implemented as a ``lax.scan`` over the packed tree axis with a
+    running accumulator: one compiled tree body regardless of ensemble size,
+    and the (total_trees, n) per-tree matrix is never materialised — the
+    scan's streaming accumulation is the jnp analogue of what the Pallas
+    ``ensemble_predict`` kernel does across its tree grid axis.  Prefer this
+    for serving; use ``predict_packed`` when bit-exact parity with the
+    training-time per-round evaluation matters.
+    """
+    n = binned.shape[0]
+
+    def body(out, xs):
+        feature, threshold, leaf_weight, scale = xs
+        tr = TreeArrays(feature=feature, threshold=threshold,
+                        gain=jnp.zeros_like(leaf_weight[:0]),
+                        leaf_weight=leaf_weight)
+        return out + scale * predict_tree(tr, binned, packed.max_depth), None
+
+    out, _ = jax.lax.scan(
+        body,
+        jnp.full((n,), packed.base_score, dtype=jnp.float32),
+        (packed.feature, packed.threshold, packed.leaf_weight,
+         packed.tree_scale),
+    )
+    return out

@@ -16,6 +16,7 @@ from __future__ import annotations
 import dataclasses
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 
@@ -101,3 +102,112 @@ class EnsembleModel(NamedTuple):
     @property
     def total_trees(self) -> int:
         return sum(forest_size(f) for f in self.forests)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PackedEnsemble:
+    """Inference-optimal ensemble layout (DESIGN.md §3).
+
+    All rounds' stacked ``TreeArrays`` are flattened into one contiguous
+    ``(total_trees, ...)`` pytree so prediction is a *single* vmapped (or
+    Pallas ``ensemble_predict``) traversal instead of an O(rounds) Python
+    loop.  Round structure survives as static metadata:
+
+      * ``round_offsets`` — tree-index boundaries (len rounds+1); round ``r``
+        owns trees ``[round_offsets[r], round_offsets[r+1])``.  Static so the
+        exact per-round bagging-mean combiner stays shape-static under jit.
+      * ``tree_scale`` — per-tree contribution ``lr / n_trees(round)``; the
+        weighted single-pass combiner ``margin = base + tree_scale @ per_tree``
+        is algebraically identical to the per-round means and is what the
+        Pallas kernel accumulates.
+
+    Registered as a pytree: array fields are leaves, everything else is
+    static aux data — so a PackedEnsemble can be passed straight through
+    ``jax.jit`` (serving) and ``checkpoint.io`` (persistence).
+    """
+
+    feature: jnp.ndarray      # (total_trees, num_internal) int32
+    threshold: jnp.ndarray    # (total_trees, num_internal) int32
+    gain: jnp.ndarray         # (total_trees, num_internal) float32
+    leaf_weight: jnp.ndarray  # (total_trees, num_leaves) float32
+    tree_scale: jnp.ndarray   # (total_trees,) float32 = lr / n_trees(round)
+    bin_edges: jnp.ndarray    # (d, num_bins - 1) training quantile edges
+    round_offsets: tuple      # static: (rounds + 1,) tree-index boundaries
+    learning_rate: float
+    base_score: float
+    loss: str
+    max_depth: int
+
+    @property
+    def rounds(self) -> int:
+        return len(self.round_offsets) - 1
+
+    @property
+    def total_trees(self) -> int:
+        return int(self.round_offsets[-1])
+
+    def trees(self) -> TreeArrays:
+        """The flat (total_trees, ...) stack as a TreeArrays view."""
+        return TreeArrays(
+            feature=self.feature, threshold=self.threshold,
+            gain=self.gain, leaf_weight=self.leaf_weight,
+        )
+
+    def round_trees(self, r: int) -> TreeArrays:
+        """Round ``r``'s stacked TreeArrays (for explain/debug tooling)."""
+        s, e = self.round_offsets[r], self.round_offsets[r + 1]
+        return TreeArrays(
+            feature=self.feature[s:e], threshold=self.threshold[s:e],
+            gain=self.gain[s:e], leaf_weight=self.leaf_weight[s:e],
+        )
+
+    # -- pytree protocol: arrays are leaves, the rest is static aux ---------
+    def tree_flatten(self):
+        leaves = (self.feature, self.threshold, self.gain,
+                  self.leaf_weight, self.tree_scale, self.bin_edges)
+        aux = (self.round_offsets, self.learning_rate, self.base_score,
+               self.loss, self.max_depth)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+
+def pack_ensemble(model: EnsembleModel) -> PackedEnsemble:
+    """Flatten an EnsembleModel into the packed inference layout."""
+    offsets = [0]
+    for f in model.forests:
+        offsets.append(offsets[-1] + forest_size(f))
+    scales = jnp.concatenate([
+        jnp.full((forest_size(f),), model.learning_rate / forest_size(f),
+                 jnp.float32)
+        for f in model.forests
+    ])
+    cat = lambda field: jnp.concatenate([getattr(f, field) for f in model.forests])
+    return PackedEnsemble(
+        feature=cat("feature"),
+        threshold=cat("threshold"),
+        gain=cat("gain"),
+        leaf_weight=cat("leaf_weight"),
+        tree_scale=scales,
+        bin_edges=model.bin_edges,
+        round_offsets=tuple(offsets),
+        learning_rate=model.learning_rate,
+        base_score=model.base_score,
+        loss=model.loss,
+        max_depth=model.max_depth,
+    )
+
+
+def unpack_ensemble(packed: PackedEnsemble) -> EnsembleModel:
+    """Inverse of ``pack_ensemble`` (lossless round-trip)."""
+    return EnsembleModel(
+        forests=tuple(packed.round_trees(r) for r in range(packed.rounds)),
+        learning_rate=packed.learning_rate,
+        base_score=packed.base_score,
+        bin_edges=packed.bin_edges,
+        loss=packed.loss,
+        max_depth=packed.max_depth,
+    )

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import use_mesh
 from repro.core import binning, forest, losses
 from repro.core.types import TreeConfig
 from repro.federation import vfl
@@ -40,11 +41,11 @@ def check(num_parties: int, aggregation: str, shard_samples: bool) -> None:
 
     trees_c, pred_c = forest.build_forest(binned, g, h, smask, fmask, cfg)
 
-    fed_fn = vfl.make_federated_forest_fn(
+    backend = vfl.make_vfl_backend(
         mesh, cfg, aggregation=aggregation, shard_samples=shard_samples
     )
-    with jax.set_mesh(mesh):
-        trees_f, pred_f = fed_fn(binned, g, h, smask, fmask)
+    with use_mesh(mesh):
+        trees_f, pred_f = backend.build_forest(binned, g, h, smask, fmask, cfg)
 
     np.testing.assert_array_equal(
         np.asarray(trees_c.feature), np.asarray(trees_f.feature),

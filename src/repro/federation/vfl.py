@@ -14,40 +14,41 @@ federated models locally.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map
 from repro.core import forest as forest_mod
+from repro.core.backend import BackendDescriptor, TreeBackend, register_backend
 from repro.core.types import TreeConfig
 from repro.federation import aggregator, mesh_roles
 
 
-def make_federated_forest_fn(
+def make_vfl_backend(
     mesh: Mesh,
-    cfg: TreeConfig,
+    tree: TreeConfig,
     aggregation: str = "histogram",
     party_axis: str = mesh_roles.PARTY_AXIS,
     shard_samples: bool = False,
-):
-    """Build a drop-in replacement for ``core.forest.build_forest``.
+) -> TreeBackend:
+    """Construct the vertically-federated TreeBackend (DESIGN.md §1).
+
+    The per-party providers (federated histogram / choose / route / leaf
+    collectives from aggregator.py) form an *inner* backend that runs inside
+    the shard_map body; the returned backend's ``forest_builder`` wraps the
+    whole per-round forest construction in that one SPMD program, so the
+    boosting loop threads a single object either way.
 
     Args:
       mesh: mesh containing ``party_axis`` (and optionally data axes).
+      tree: static tree config baked into the shard_map program.
       aggregation: "histogram" (paper-faithful full-histogram exchange) or
         "argmax" (beyond-paper candidate-only exchange; see aggregator.py).
       shard_samples: also shard the sample axis over the data axes (the
         multi-worker extension; histograms/leaf stats psum over those axes).
-
-    Returns:
-      forest_fn(binned, g, h, sample_mask, feature_mask, cfg, **_) matching
-      the ``boosting.train_fedgbf(forest_fn=...)`` hook. Inputs are global
-      (unsharded) arrays; sharding is applied via shard_map specs.
     """
+    cfg = tree
     num_parties = mesh.shape[party_axis]
     data_axes = mesh_roles.data_axes(mesh) if shard_samples else ()
 
@@ -62,15 +63,26 @@ def make_federated_forest_fn(
     route_fn = aggregator.federated_route_fn(party_axis)
     leaf_fn = aggregator.local_histogram_fn(party_axis="", data_axes=data_axes)
 
+    descriptor = BackendDescriptor(
+        impl=f"vfl-{aggregation}" + ("-sharded" if shard_samples else ""),
+        num_parties=num_parties,
+        party_axis=party_axis,
+        data_axes=data_axes,
+        shard_samples=shard_samples,
+    )
+    inner = TreeBackend(
+        descriptor=descriptor,
+        histogram_fn=histogram_fn,
+        choose_fn=choose_fn,
+        route_fn=route_fn,
+        leaf_fn=leaf_fn,
+    )
+
     sample_spec = P(data_axes) if data_axes else P()
 
     def _forest_body(binned_shard, g, h, smask, fmask_shard):
         return forest_mod.build_forest.__wrapped__(  # un-jitted inner
-            binned_shard, g, h, smask, fmask_shard, cfg,
-            histogram_fn=histogram_fn,
-            choose_fn=choose_fn,
-            route_fn=route_fn,
-            leaf_fn=leaf_fn,
+            binned_shard, g, h, smask, fmask_shard, cfg, backend=inner,
         )
 
     sharded = shard_map(
@@ -91,9 +103,16 @@ def make_federated_forest_fn(
     def _run(binned, g, h, sample_mask, feature_mask):
         return sharded(binned, g, h, sample_mask, feature_mask)
 
-    def forest_fn(binned, g, h, sample_mask, feature_mask, _cfg=None, **_ignored):
-        """Drop-in for core.forest.build_forest (extra kwargs absorbed —
-        the federated providers are baked in at construction)."""
+    def forest_builder(binned, g, h, sample_mask, feature_mask, _cfg=None):
+        """Full-forest override: the tree config is baked into the shard_map
+        program, so a caller-passed cfg must match ``tree`` (a silent
+        mismatch would build trees at one depth and traverse at another)."""
+        if _cfg is not None and _cfg != cfg:
+            raise ValueError(
+                f"backend {descriptor.impl!r} was built with {cfg}, but the "
+                f"caller passed {_cfg}; construct the backend with the same "
+                "TreeConfig as FedGBFConfig.tree"
+            )
         d = binned.shape[1]
         if d % num_parties != 0:
             raise ValueError(
@@ -102,7 +121,56 @@ def make_federated_forest_fn(
             )
         return _run(binned, g, h, sample_mask.astype(jnp.float32), feature_mask)
 
+    # The per-node collectives live only on the INNER backend consumed inside
+    # the shard_map body; exposing them here would invite generic callers
+    # (forest.build_forest(backend=...), backend.build_tree) to run them
+    # outside shard_map, where the axis names are unbound.  The public
+    # surface of a VFL backend is build_forest -> forest_builder.
+    return TreeBackend(descriptor=descriptor, forest_builder=forest_builder)
+
+
+def make_federated_forest_fn(
+    mesh: Mesh,
+    cfg: TreeConfig,
+    aggregation: str = "histogram",
+    party_axis: str = mesh_roles.PARTY_AXIS,
+    shard_samples: bool = False,
+):
+    """DEPRECATED shim: returns ``make_vfl_backend(...).build_forest`` with
+    the legacy hook kwargs (histogram_fn= etc.) absorbed for drop-in use.
+
+    Prefer passing the backend object itself to ``boosting.train_fedgbf``.
+    """
+    backend = make_vfl_backend(
+        mesh, cfg, aggregation=aggregation, party_axis=party_axis,
+        shard_samples=shard_samples,
+    )
+
+    def forest_fn(binned, g, h, sample_mask, feature_mask, _cfg=None, **_ignored):
+        return backend.build_forest(binned, g, h, sample_mask, feature_mask, _cfg)
+
     return forest_fn
+
+
+# Registry entries: vfl backends bind a mesh + tree config at construction,
+# e.g. ``get_backend("vfl-argmax", mesh=mesh, tree=TreeConfig(...))``.
+def _vfl_factory(aggregation: str, shard_samples: bool):
+    def factory(mesh=None, tree=None, **kw):
+        if mesh is None or tree is None:
+            raise ValueError(
+                "vfl backends need mesh= and tree= (a TreeConfig), e.g. "
+                "get_backend('vfl-histogram', mesh=mesh, tree=TreeConfig())"
+            )
+        return make_vfl_backend(
+            mesh, tree, aggregation=aggregation, shard_samples=shard_samples, **kw
+        )
+
+    return factory
+
+
+for _agg in ("histogram", "argmax"):
+    register_backend(f"vfl-{_agg}", _vfl_factory(_agg, shard_samples=False))
+    register_backend(f"vfl-{_agg}-sharded", _vfl_factory(_agg, shard_samples=True))
 
 
 def party_shardings(mesh: Mesh, party_axis: str = mesh_roles.PARTY_AXIS):

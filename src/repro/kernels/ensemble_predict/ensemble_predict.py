@@ -9,9 +9,12 @@ small dense contraction:
   * leaf lookup  — one-hot(idx over leaves) @ leaf_weight
 
 The depth loop is unrolled (max_depth static, paper uses 3), the whole tree's
-arrays live in VMEM (a depth-3 tree is < 1 KiB), and the bagging mean
+arrays live in VMEM (a depth-3 tree is < 1 KiB), and a per-tree *scale*
 accumulates across the tree grid axis (sequential on TPU) — one kernel
 evaluates the entire forest without materialising per-tree outputs in HBM.
+Scale = 1/num_trees reproduces the bagging mean of a single forest layer;
+scale = lr/n_trees(round) evaluates a whole PackedEnsemble — every boosting
+round of every forest — in the same single sweep (DESIGN.md §3).
 
 VMEM per step (tile_n=256, d<=64, leaves=8, f32): binned 64 KiB, one-hots
 <= 256*64*4 = 64 KiB, tree params ~1 KiB.
@@ -26,14 +29,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _predict_kernel(binned_ref, feat_ref, thr_ref, leaf_ref, out_ref,
-                    *, max_depth: int, num_trees: int):
+def _predict_kernel(binned_ref, feat_ref, thr_ref, leaf_ref, scale_ref, out_ref,
+                    *, max_depth: int):
     """Grid step: one sample tile (axis 0) x one tree (axis 1).
 
     binned_ref: (tile_n, d) int32
     feat_ref/thr_ref: (1, num_internal) int32 — this tree's nodes
     leaf_ref: (1, num_leaves) float32
-    out_ref: (tile_n,) float32 — accumulated bagging mean
+    scale_ref: (1, 1) float32 — this tree's contribution weight
+    out_ref: (tile_n,) float32 — accumulated scale-weighted ensemble margin
     """
 
     @pl.when(pl.program_id(1) == 0)
@@ -62,7 +66,7 @@ def _predict_kernel(binned_ref, feat_ref, thr_ref, leaf_ref, out_ref,
     lsel = (idx[:, None] == jax.lax.broadcasted_iota(
         jnp.int32, (tile_n, leaves.shape[0]), 1)).astype(jnp.float32)
     pred = lsel @ leaves
-    out_ref[...] += pred / num_trees
+    out_ref[...] += pred * scale_ref[0, 0]
 
 
 def predict_forest_pallas_call(
@@ -70,6 +74,7 @@ def predict_forest_pallas_call(
     feature: jnp.ndarray,    # (n_trees, num_internal) int32
     threshold: jnp.ndarray,  # (n_trees, num_internal) int32
     leaf: jnp.ndarray,       # (n_trees, num_leaves) float32
+    scale: jnp.ndarray,      # (n_trees,) float32 per-tree contribution
     *,
     max_depth: int,
     tile_n: int = 256,
@@ -80,17 +85,16 @@ def predict_forest_pallas_call(
     num_leaves = leaf.shape[1]
     grid = (n_pad // tile_n, n_trees)
     return pl.pallas_call(
-        functools.partial(
-            _predict_kernel, max_depth=max_depth, num_trees=n_trees
-        ),
+        functools.partial(_predict_kernel, max_depth=max_depth),
         grid=grid,
         in_specs=[
             pl.BlockSpec((tile_n, d), lambda i, j: (i, 0)),
             pl.BlockSpec((1, num_internal), lambda i, j: (j, 0)),
             pl.BlockSpec((1, num_internal), lambda i, j: (j, 0)),
             pl.BlockSpec((1, num_leaves), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((tile_n,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
         interpret=interpret,
-    )(binned, feature, threshold, leaf)
+    )(binned, feature, threshold, leaf, scale.reshape(n_trees, 1))

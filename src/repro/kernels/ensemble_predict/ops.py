@@ -1,4 +1,6 @@
-"""Jitted wrapper: drop-in for ``core.tree.predict_forest``."""
+"""Jitted wrappers: drop-ins for ``core.tree.predict_forest`` (bagging mean
+of one forest layer) and ``core.tree.predict_packed_weighted`` (whole packed
+ensemble in one kernel sweep)."""
 
 from __future__ import annotations
 
@@ -7,7 +9,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import TreeArrays
+from repro.core.types import PackedEnsemble, TreeArrays
 from repro.kernels.ensemble_predict.ensemble_predict import (
     predict_forest_pallas_call,
 )
@@ -18,6 +20,32 @@ def _on_tpu() -> bool:
 
 
 @partial(jax.jit, static_argnames=("max_depth", "tile_n", "interpret"))
+def _scaled_ensemble_pallas(
+    feature: jnp.ndarray,    # (n_trees, num_internal)
+    threshold: jnp.ndarray,
+    leaf: jnp.ndarray,       # (n_trees, num_leaves)
+    scale: jnp.ndarray,      # (n_trees,)
+    binned: jnp.ndarray,     # (n, d) int32
+    max_depth: int,
+    tile_n: int,
+    interpret: bool,
+) -> jnp.ndarray:
+    n, _ = binned.shape
+    n_pad = ((n + tile_n - 1) // tile_n) * tile_n
+    binned_p = jnp.pad(binned, ((0, n_pad - n), (0, 0)))
+    out = predict_forest_pallas_call(
+        binned_p,
+        feature.astype(jnp.int32),
+        threshold.astype(jnp.int32),
+        leaf.astype(jnp.float32),
+        scale.astype(jnp.float32),
+        max_depth=max_depth,
+        tile_n=tile_n,
+        interpret=interpret,
+    )
+    return out[:n]
+
+
 def predict_forest_pallas(
     trees: TreeArrays,       # stacked: leading axis n_trees
     binned: jnp.ndarray,     # (n, d) int32
@@ -29,16 +57,31 @@ def predict_forest_pallas(
     """Bagging-mean forest prediction, (n,) float32."""
     if interpret is None:
         interpret = not _on_tpu()
-    n, d = binned.shape
-    n_pad = ((n + tile_n - 1) // tile_n) * tile_n
-    binned_p = jnp.pad(binned, ((0, n_pad - n), (0, 0)))
-    out = predict_forest_pallas_call(
-        binned_p,
-        trees.feature.astype(jnp.int32),
-        trees.threshold.astype(jnp.int32),
-        trees.leaf_weight.astype(jnp.float32),
-        max_depth=max_depth,
-        tile_n=tile_n,
-        interpret=interpret,
+    n_trees = trees.feature.shape[0]
+    scale = jnp.full((n_trees,), 1.0 / n_trees, jnp.float32)
+    return _scaled_ensemble_pallas(
+        trees.feature, trees.threshold, trees.leaf_weight, scale, binned,
+        max_depth, tile_n, interpret,
     )
-    return out[:n]
+
+
+def predict_packed_pallas(
+    packed: PackedEnsemble,
+    binned: jnp.ndarray,     # (n, d) int32
+    *,
+    tile_n: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Whole-ensemble raw margin in ONE kernel sweep, (n,) float32.
+
+    The per-tree ``tree_scale`` (= lr / n_trees of the tree's round) folds
+    the boosting learning rate and every round's bagging mean into the
+    kernel's accumulation, so all ``total_trees`` trees ride a single grid.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    margin = _scaled_ensemble_pallas(
+        packed.feature, packed.threshold, packed.leaf_weight,
+        packed.tree_scale, binned, packed.max_depth, tile_n, interpret,
+    )
+    return packed.base_score + margin

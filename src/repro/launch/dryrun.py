@@ -26,6 +26,7 @@ import traceback
 
 import jax
 
+from repro.compat import use_mesh
 from repro.configs import ARCH_IDS, get_config
 from repro.launch import costmodel
 from repro.launch import shapes as shapes_mod
@@ -122,7 +123,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     t0 = time.time()
     try:
         fn, args, in_sh = build_step(cfg, spec, mesh)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
             t_lower = time.time() - t0
             compiled = lowered.compile()

@@ -21,6 +21,7 @@ import sys
 import jax
 import jax.numpy as jnp
 
+from repro.compat import use_mesh
 from repro.core import forest as forest_mod
 from repro.core.types import TreeConfig
 from repro.federation import vfl
@@ -40,7 +41,7 @@ def run(aggregation: str, n=150_000, d=16, n_trees=5, multi_pod=False) -> dict:
             shards *= mesh.shape[a]
     n = ((n + shards - 1) // shards) * shards
     cfg = TreeConfig(max_depth=3, num_bins=32)
-    fed_fn = vfl.make_federated_forest_fn(
+    backend = vfl.make_vfl_backend(
         mesh, cfg, aggregation=aggregation, shard_samples=True
     )
 
@@ -50,10 +51,10 @@ def run(aggregation: str, n=150_000, d=16, n_trees=5, multi_pod=False) -> dict:
     smask = jax.ShapeDtypeStruct((n_trees, n), jnp.float32)
     fmask = jax.ShapeDtypeStruct((n_trees, d), bool)
 
-    with jax.set_mesh(mesh):
-        # fed_fn wraps a jit; lower via the underlying jitted callable
+    with use_mesh(mesh):
+        # the backend's forest_builder wraps a jit; lower via a fresh jit
         lowered = jax.jit(
-            lambda b, gg, hh, sm, fm: fed_fn(b, gg, hh, sm, fm)
+            lambda b, gg, hh, sm, fm: backend.build_forest(b, gg, hh, sm, fm)
         ).lower(binned, g, h, smask, fmask)
         compiled = lowered.compile()
 

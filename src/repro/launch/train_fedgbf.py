@@ -1,12 +1,15 @@
 """FedGBF training driver — the paper's workload under the real VFL runtime.
 
+Execution is selected by a named ``TreeBackend`` from the registry
+(DESIGN.md §1):
+
     # centralized-local (paper's evaluation mode, §4.2)
     PYTHONPATH=src python -m repro.launch.train_fedgbf --dataset default_credit_card
 
     # federated on a device mesh (parties = model-axis shards)
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.train_fedgbf \
-        --dataset default_credit_card --federated --parties 4 --aggregation argmax
+        --dataset default_credit_card --backend vfl-argmax --parties 4
 """
 
 from __future__ import annotations
@@ -17,10 +20,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backend as backend_mod
 from repro.core import boosting, metrics
 from repro.core.types import TreeConfig
 from repro.data import synthetic, tabular
-from repro.federation import protocol, vfl
+from repro.federation import protocol, vfl  # noqa: F401  (registers vfl-*)
+
+VFL_BACKENDS = ("vfl-histogram", "vfl-argmax",
+                "vfl-histogram-sharded", "vfl-argmax-sharded")
 
 
 def main() -> None:
@@ -33,10 +40,11 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--n", type=int, default=0, help="subsample dataset")
     ap.add_argument("--max-depth", type=int, default=3)
-    ap.add_argument("--federated", action="store_true")
-    ap.add_argument("--parties", type=int, default=2)
-    ap.add_argument("--aggregation", choices=["histogram", "argmax"],
-                    default="histogram")
+    ap.add_argument("--backend", default="local",
+                    choices=("local", "local-pallas") + VFL_BACKENDS,
+                    help="named TreeBackend from the registry")
+    ap.add_argument("--parties", type=int, default=2,
+                    help="party count for vfl-* backends")
     args = ap.parse_args()
 
     ds = synthetic.load(args.dataset, n=args.n or None)
@@ -52,8 +60,9 @@ def main() -> None:
     }[args.model]()
 
     x_train, y_train = ds.x_train, ds.y_train
-    forest_fn = None
-    if args.federated:
+    federated = args.backend in VFL_BACKENDS
+    if federated:
+        aggregation = "argmax" if "argmax" in args.backend else "histogram"
         n_dev = len(jax.devices())
         if n_dev < args.parties:
             raise SystemExit(
@@ -63,26 +72,38 @@ def main() -> None:
         x_train, d_pad = tabular.pad_features(x_train, args.parties)
         mesh = jax.make_mesh((n_dev // args.parties, args.parties),
                              ("data", "model"))
-        forest_fn = vfl.make_federated_forest_fn(
-            mesh, tree, aggregation=args.aggregation
-        )
-        print(f"federated: {args.parties} parties, aggregation={args.aggregation}")
+        if args.backend.endswith("-sharded"):
+            # shard_map needs n divisible by the data-axis size; truncate to
+            # the shard granularity (padding rows would perturb the exact-
+            # count subsampling masks, so dropping a remainder is the
+            # semantics-preserving option for training).
+            shards = n_dev // args.parties
+            n_keep = (x_train.shape[0] // shards) * shards
+            if n_keep != x_train.shape[0]:
+                print(f"sharded backend: truncating n {x_train.shape[0]} -> "
+                      f"{n_keep} (multiple of {shards} sample shards)")
+                x_train, y_train = x_train[:n_keep], y_train[:n_keep]
+        backend = backend_mod.get_backend(args.backend, mesh=mesh, tree=tree)
+        print(f"backend={backend.name}: {args.parties} parties, "
+              f"aggregation={aggregation}")
         spec = protocol.ProtocolSpec(
             n_samples=x_train.shape[0],
             party_dims=tuple([d_pad // args.parties] * args.parties),
             num_bins=32, max_depth=args.max_depth,
-            aggregation=args.aggregation,
+            aggregation=aggregation,
         )
         cost = protocol.run_cost(spec, cfg)
         print(f"protocol bytes (ledger): {cost.total/1e6:.1f} MB "
               f"{cost.breakdown()}")
+    else:
+        backend = backend_mod.get_backend(args.backend)
 
     model, hist = boosting.train_fedgbf(
         jnp.asarray(x_train), jnp.asarray(y_train), cfg, jax.random.PRNGKey(0),
-        forest_fn=forest_fn, verbose=True,
+        backend=backend, verbose=True,
     )
     x_test = ds.x_test
-    if args.federated:
+    if federated:
         x_test, _ = tabular.pad_features(x_test, args.parties)
     margin = boosting.predict(model, jnp.asarray(x_test))
     rep = metrics.classification_report(jnp.asarray(ds.y_test), margin)

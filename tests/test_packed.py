@@ -1,0 +1,188 @@
+"""PackedEnsemble inference path + TreeBackend registry coverage.
+
+The load-bearing guarantee: ``PackedEnsemble`` prediction is bit-for-bit
+equal to the legacy per-round loop — including dynamic schedules where
+rounds have different n_trees — so the packed path can replace the loop
+everywhere (boosting.predict, validation eval, serving) without any
+numerical drift.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backend as backend_mod
+from repro.core import boosting
+from repro.core.types import (
+    FedGBFConfig,
+    PackedEnsemble,
+    TreeConfig,
+    pack_ensemble,
+    unpack_ensemble,
+)
+
+
+def _train(loss: str, dynamic: bool, rounds: int = 5, n: int = 700, d: int = 7,
+           seed: int = 0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    signal = x[:, 0] - 0.7 * x[:, 1] + rng.normal(0, 0.4, n)
+    y = (signal > 0).astype(np.float32) if loss == "logistic" else signal
+    if dynamic:  # 5 -> 2 trees across rounds: ragged per-round tree counts
+        cfg = FedGBFConfig(rounds=rounds, loss=loss, n_trees_max=5,
+                           n_trees_min=2, rho_id_min=0.3, rho_id_max=0.7,
+                           tree=TreeConfig(max_depth=3, num_bins=16))
+    else:
+        cfg = FedGBFConfig(rounds=rounds, loss=loss, n_trees_max=3,
+                           n_trees_min=3, rho_id_min=0.8, rho_id_max=0.8,
+                           tree=TreeConfig(max_depth=2, num_bins=16))
+    model, _ = boosting.train_fedgbf(
+        jnp.asarray(x), jnp.asarray(y), cfg, jax.random.PRNGKey(seed)
+    )
+    x_test = jnp.asarray(rng.normal(size=(311, d)), jnp.float32)
+    return model, x_test
+
+
+@pytest.mark.parametrize("loss", ["logistic", "squared"])
+@pytest.mark.parametrize("dynamic", [False, True])
+def test_packed_predict_bitwise_equals_loop(loss, dynamic):
+    """Satellite guarantee: packed == legacy loop, bit for bit."""
+    model, x_test = _train(loss, dynamic)
+    loop = boosting.predict(model, x_test, impl="loop")
+    packed = boosting.predict(model, x_test, impl="packed")
+    np.testing.assert_array_equal(np.asarray(loop), np.asarray(packed))
+    # and through an explicitly packed model object
+    pe = pack_ensemble(model)
+    np.testing.assert_array_equal(
+        np.asarray(loop), np.asarray(boosting.predict(pe, x_test))
+    )
+
+
+@pytest.mark.parametrize("impl", ["weighted", "pallas"])
+def test_packed_fast_combiners_match(impl):
+    """The single-pass scale combiner and the Pallas kernel agree to fp tol."""
+    model, x_test = _train("logistic", dynamic=True)
+    ref = boosting.predict(model, x_test, impl="packed")
+    out = boosting.predict(model, x_test, impl=impl)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_pack_unpack_roundtrip_lossless():
+    model, _ = _train("squared", dynamic=True)
+    pe = pack_ensemble(model)
+    assert pe.total_trees == model.total_trees and pe.rounds == model.rounds
+    # ragged rounds recorded in the offsets
+    sizes = [pe.round_offsets[r + 1] - pe.round_offsets[r]
+             for r in range(pe.rounds)]
+    assert len(set(sizes)) > 1
+    back = unpack_ensemble(pe)
+    for f_orig, f_back in zip(model.forests, back.forests):
+        for a, b in zip(f_orig, f_back):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_packed_is_a_jittable_pytree():
+    model, x_test = _train("logistic", dynamic=False, rounds=3)
+    pe = pack_ensemble(model)
+    leaves, treedef = jax.tree.flatten(pe)
+    assert len(leaves) == 6  # arrays only; static aux carries the rest
+    from repro.core import binning, tree as tree_mod
+
+    fn = jax.jit(lambda p, x: tree_mod.predict_packed(
+        p, binning.bin_data(x, p.bin_edges)))
+    out = fn(pe, x_test)
+    # under jit XLA may fuse the combiner arithmetic (1-ulp reassociation),
+    # so the jitted program is compared at tight tolerance; the bit-for-bit
+    # guarantee is for the un-jitted path boosting.predict uses.
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(boosting.predict(model, x_test, impl="loop")),
+        rtol=1e-6, atol=1e-7,
+    )
+
+
+def test_ensemble_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import io as ckpt_io
+
+    model, x_test = _train("logistic", dynamic=True, rounds=4)
+    path = str(tmp_path / "ckpt")
+    ckpt_io.save_ensemble(path, model)  # accepts the unpacked model too
+    loaded = ckpt_io.load_ensemble(path)
+    assert isinstance(loaded, PackedEnsemble)
+    assert loaded.round_offsets == pack_ensemble(model).round_offsets
+    assert loaded.loss == model.loss
+    np.testing.assert_array_equal(
+        np.asarray(boosting.predict(model, x_test, impl="loop")),
+        np.asarray(boosting.predict(loaded, x_test)),
+    )
+
+
+def test_serve_stream_matches_direct_predict():
+    """The serving microbatch loop (with ragged last-batch padding) scores
+    exactly like a direct full-batch packed predict."""
+    from repro.launch.serve_fedgbf import score_stream
+
+    model, x_test = _train("logistic", dynamic=True, rounds=4)
+    pe = pack_ensemble(model)
+    x_np = np.asarray(x_test)  # 311 rows: 2 full batches of 128 + ragged 55
+    scores, lat = score_stream(pe, x_np, batch_size=128, impl="packed")
+    direct = jax.nn.sigmoid(boosting.predict(pe, x_test))
+    np.testing.assert_allclose(scores, np.asarray(direct), rtol=1e-6, atol=1e-7)
+    assert len(lat) == 3
+
+
+# ---------------------------------------------------------------------------
+# TreeBackend registry
+# ---------------------------------------------------------------------------
+def test_backend_registry_names():
+    names = backend_mod.available_backends()
+    for expected in ("local", "local-pallas", "vfl-histogram", "vfl-argmax"):
+        assert expected in names
+    with pytest.raises(ValueError, match="unknown backend"):
+        backend_mod.get_backend("no-such-backend")
+    with pytest.raises(ValueError, match="mesh"):
+        backend_mod.get_backend("vfl-histogram")  # vfl names need a mesh
+
+
+def test_named_backend_matches_default():
+    """train_fedgbf(backend="local") == train_fedgbf() bit for bit."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(400, 5)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 2, 400), jnp.float32)
+    cfg = FedGBFConfig(rounds=3, n_trees_max=2, n_trees_min=2,
+                       tree=TreeConfig(max_depth=2, num_bins=8))
+    m_default, _ = boosting.train_fedgbf(x, y, cfg, jax.random.PRNGKey(1))
+    m_named, _ = boosting.train_fedgbf(x, y, cfg, jax.random.PRNGKey(1),
+                                       backend="local")
+    for f1, f2 in zip(m_default.forests, m_named.forests):
+        for a, b in zip(f1, f2):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_local_pallas_backend_builds_identical_trees():
+    """The Pallas histogram backend is lossless vs segment-sum (interpret
+    mode on CPU): same split structure, same predictions."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(512, 6)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 2, 512), jnp.float32)
+    cfg = FedGBFConfig(rounds=2, n_trees_max=2, n_trees_min=2,
+                       tree=TreeConfig(max_depth=2, num_bins=16))
+    m_seg, _ = boosting.train_fedgbf(x, y, cfg, jax.random.PRNGKey(2))
+    m_pal, _ = boosting.train_fedgbf(x, y, cfg, jax.random.PRNGKey(2),
+                                     backend="local-pallas")
+    for f1, f2 in zip(m_seg.forests, m_pal.forests):
+        np.testing.assert_array_equal(np.asarray(f1.feature), np.asarray(f2.feature))
+        np.testing.assert_array_equal(np.asarray(f1.threshold), np.asarray(f2.threshold))
+        np.testing.assert_allclose(np.asarray(f1.leaf_weight),
+                                   np.asarray(f2.leaf_weight),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_backend_descriptor_metadata():
+    bk = backend_mod.get_backend("local-pallas")
+    assert bk.name == "local-pallas"
+    assert bk.descriptor.histogram_impl == "pallas"
+    assert not bk.descriptor.is_federated

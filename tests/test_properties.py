@@ -1,9 +1,16 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+Skips cleanly when hypothesis is not installed (it is a dev-only dependency,
+declared in requirements-dev.txt / pyproject's ``test`` extra); the non-random
+invariant coverage lives in the plain pytest modules."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import binning, dynamic
 from repro.core.histogram import compute_histogram
@@ -142,3 +149,37 @@ def test_secure_masks_cancel(seed, parties):
 
     masks = secure.pairwise_masks(seed, parties, (17,))
     np.testing.assert_allclose(np.asarray(masks.sum(0)), np.zeros(17), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    loss=st.sampled_from(["logistic", "squared"]),
+    rounds=st.integers(1, 4),
+    t_max=st.integers(1, 4),
+    t_span=st.integers(0, 3),
+    seed=st.integers(0, 2**16),
+)
+def test_packed_predict_bitwise_equals_loop_property(loss, rounds, t_max,
+                                                     t_span, seed):
+    """PackedEnsemble.predict == legacy per-round loop, bit for bit, for any
+    loss and any (dynamic) tree-count schedule (DESIGN.md §3)."""
+    from repro.core import boosting
+    from repro.core.types import FedGBFConfig, TreeConfig, pack_ensemble
+
+    rng = np.random.default_rng(seed)
+    n, d = 200, 4
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    y_raw = rng.normal(size=n).astype(np.float32)
+    y = jnp.asarray((y_raw > 0).astype(np.float32) if loss == "logistic"
+                    else y_raw)
+    cfg = FedGBFConfig(
+        rounds=rounds, loss=loss,
+        n_trees_max=t_max + t_span, n_trees_min=t_max,
+        rho_id_min=0.5, rho_id_max=0.9,
+        tree=TreeConfig(max_depth=2, num_bins=8),
+    )
+    model, _ = boosting.train_fedgbf(x, y, cfg, jax.random.PRNGKey(seed % 97))
+    x_test = jnp.asarray(rng.normal(size=(83, d)), jnp.float32)
+    loop = boosting.predict(model, x_test, impl="loop")
+    packed = boosting.predict(pack_ensemble(model), x_test, impl="packed")
+    np.testing.assert_array_equal(np.asarray(loop), np.asarray(packed))

@@ -5,9 +5,11 @@ Measures the serving hot path (DESIGN.md §3) on a dynamic-schedule model
 
   * ``loop``    — legacy O(rounds) per-round loop (jitted, pre-binned input,
                   same as the others — only the traversal structure differs);
-  * ``packed``  — one vmapped traversal of all trees + exact per-round
-                  combiner (bit-for-bit equal to loop; materialises the
-                  (total_trees, n) per-tree matrix);
+  * ``packed``  — per-round segmented accumulation over the static
+                  round_offsets (bit-for-bit equal to loop; each round's
+                  (n_trees_r, n) block is a transient — the historical
+                  all-trees vmap materialised the full (total_trees, n)
+                  matrix and measured 0.34x of loop);
   * ``weighted``— lax.scan over the packed tree axis with a streaming
                   accumulator (one compiled tree body, O(1) compile cost in
                   ensemble size, no per-tree matrix);
@@ -105,12 +107,13 @@ def main() -> list:
     results["rows_per_s_packed"] = n_serve / t_packed
     results["rows_per_s_weighted"] = n_serve / t_weighted
     results["interpretation"] = (
-        "on CPU XLA the jitted unrolled loop is the fastest traversal; the "
-        "scan-based weighted combiner matches it within ~25% with O(1) "
-        "compile cost in ensemble size, while the bit-exact vmapped packed "
-        "path pays for materialising the (total_trees, n) per-tree matrix. "
-        "The packed layout's wins are uniform serving/checkpointing and the "
-        "fused Pallas kernel path on TPU."
+        "the default packed path now accumulates per-round sums over the "
+        "static round_offsets segments (no (total_trees, n) matrix), "
+        "restoring parity with the jitted unrolled loop while staying "
+        "bit-exact; the scan-based weighted combiner trades ~10-25% for "
+        "O(1) compile cost in ensemble size. The packed layout additionally "
+        "buys uniform serving/checkpointing and the fused Pallas kernel "
+        "path on TPU."
     )
 
     save_report("predict_bench", results)

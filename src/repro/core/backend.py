@@ -65,6 +65,10 @@ class TreeBackend:
                     federated path uses this to wrap the whole per-round
                     forest construction in one shard_map program with the
                     other four providers baked in.
+      forest_builder_per_tree  full override of
+                    ``core.forest.build_forest_per_tree`` (same wrapping, but
+                    returning per-tree predictions) — consumed by the scanned
+                    training engine, which owns the bagging combine.
 
     Frozen (hashable) so the whole object rides through ``jax.jit`` as one
     static argument; reuse a backend instance across rounds/calls to reuse
@@ -77,6 +81,7 @@ class TreeBackend:
     route_fn: Optional[Callable] = None
     leaf_fn: Optional[Callable] = None
     forest_builder: Optional[Callable] = None
+    forest_builder_per_tree: Optional[Callable] = None
 
     @property
     def name(self) -> str:
@@ -95,6 +100,31 @@ class TreeBackend:
         from repro.core import forest as forest_mod  # local to avoid cycle
 
         return forest_mod.build_forest(
+            binned, g, h, sample_mask, feature_mask, cfg, backend=self
+        )
+
+    def build_forest_per_tree(self, binned, g, h, sample_mask, feature_mask,
+                              cfg=None):
+        """Build one forest layer, returning (trees, per_tree_pred (T, n)).
+
+        The scanned training engine's entry point (DESIGN.md §4): the caller
+        owns the bagging combine so it can mask out inactive tree slots.
+        """
+        if self.forest_builder_per_tree is not None:
+            return self.forest_builder_per_tree(
+                binned, g, h, sample_mask, feature_mask, cfg
+            )
+        if self.forest_builder is not None:
+            raise ValueError(
+                f"backend {self.name!r} overrides forest_builder but provides "
+                "no forest_builder_per_tree; the scanned engine needs the "
+                "per-tree variant (see federation/vfl.py for the template)"
+            )
+        if cfg is None:
+            raise ValueError(f"backend {self.name!r} needs an explicit TreeConfig")
+        from repro.core import forest as forest_mod  # local to avoid cycle
+
+        return forest_mod.build_forest_per_tree(
             binned, g, h, sample_mask, feature_mask, cfg, backend=self
         )
 
@@ -157,11 +187,13 @@ def _local_factory(**_kw) -> TreeBackend:
 
 
 def _local_pallas_factory(**_kw) -> TreeBackend:
+    # The fused training-side kernel: id/stats staging happens inside the
+    # kernel (kernels/histogram/train_histogram.py), not in XLA.
     from repro.core.histogram import histogram_dispatch
 
     return TreeBackend(
         BackendDescriptor(impl="local-pallas", histogram_impl="pallas"),
-        histogram_fn=histogram_dispatch("pallas"),
+        histogram_fn=histogram_dispatch("pallas-fused"),
     )
 
 

@@ -4,6 +4,14 @@ Each party bins its own feature columns against L quantile points
 ``S_k = {s_k1, ..., s_kL}``; the binned representation is what histogram
 accumulation consumes. Binning is a one-off preprocessing step, so it is
 implemented in plain jnp (no kernel needed).
+
+Missing values: real credit-scoring tables (the paper's datasets) carry
+NaNs.  Edges are fit with ``nanquantile`` so missing entries never poison
+the quantile grid, and ``bin_data`` routes NaNs to the deterministic
+missing-value bin ``NAN_BIN`` (= 0).  Bin 0 satisfies ``bin <= threshold``
+for every split threshold, so missing values always route LEFT — a fixed,
+platform-independent default direction (XGBoost learns the direction per
+split; a fixed one keeps the VFL parties trivially consistent).
 """
 
 from __future__ import annotations
@@ -11,19 +19,24 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+NAN_BIN = 0  # deterministic bin for missing values (routes left at any split)
+
 
 def quantile_bin_edges(x: jnp.ndarray, num_bins: int) -> jnp.ndarray:
-    """Per-feature quantile edges.
+    """Per-feature quantile edges, NaN-safe.
 
     Args:
-      x: (n, d) float features.
+      x: (n, d) float features; NaN entries are ignored per feature.
       num_bins: number of bins B; returns B-1 interior edges per feature.
 
     Returns:
-      (d, num_bins - 1) float32 edges, non-decreasing along axis 1.
+      (d, num_bins - 1) float32 edges, non-decreasing along axis 1, always
+      finite: an all-NaN feature column degrades to constant-0 edges (every
+      sample then lands in one bin, so the feature is simply unsplittable).
     """
     qs = jnp.linspace(0.0, 1.0, num_bins + 1)[1:-1]  # B-1 interior quantiles
-    edges = jnp.quantile(x.astype(jnp.float32), qs, axis=0)  # (B-1, d)
+    edges = jnp.nanquantile(x.astype(jnp.float32), qs, axis=0)  # (B-1, d)
+    edges = jnp.where(jnp.isnan(edges), 0.0, edges)  # all-NaN column guard
     return edges.T  # (d, B-1)
 
 
@@ -31,10 +44,13 @@ def bin_data(x: jnp.ndarray, edges: jnp.ndarray) -> jnp.ndarray:
     """Digitise features into bin ids.
 
     ``bin = #edges strictly below value`` so bins are in [0, B-1] and the
-    split predicate "bin <= t" corresponds to "value <= edges[t]".
+    split predicate "bin <= t" corresponds to "value <= edges[t]".  NaN
+    values map to ``NAN_BIN`` (missing-values contract in the module
+    docstring) instead of the platform-dependent garbage ``searchsorted``
+    returns for unordered comparisons.
 
     Args:
-      x: (n, d) float features.
+      x: (n, d) float features (NaNs allowed).
       edges: (d, B-1) per-feature edges.
 
     Returns:
@@ -42,7 +58,8 @@ def bin_data(x: jnp.ndarray, edges: jnp.ndarray) -> jnp.ndarray:
     """
 
     def per_feature(col: jnp.ndarray, e: jnp.ndarray) -> jnp.ndarray:
-        return jnp.searchsorted(e, col, side="left").astype(jnp.int32)
+        b = jnp.searchsorted(e, col, side="left").astype(jnp.int32)
+        return jnp.where(jnp.isnan(col), jnp.int32(NAN_BIN), b)
 
     return jax.vmap(per_feature, in_axes=(1, 0), out_axes=1)(
         x.astype(jnp.float32), edges

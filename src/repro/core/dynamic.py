@@ -21,6 +21,9 @@ rounds 7..11 hold 15 — exactly the paper's description.
 from __future__ import annotations
 
 import math
+from typing import NamedTuple
+
+import numpy as np
 
 
 def dynamic_decay(
@@ -65,3 +68,64 @@ def rho_id_schedule(cfg, round_idx: int) -> float:
             round_idx, cfg.rounds, cfg.rho_id_min, cfg.rho_id_max, cfg.rho_id_speed
         )
     )
+
+
+class ScheduleArrays(NamedTuple):
+    """Mask-form schedules (DESIGN.md §4): the whole dynamic schedule as
+    static-shape per-round arrays — the schedule flips activity bits in a
+    fixed ``(rounds, n_trees_max)`` grid instead of changing shapes.
+
+    All arrays are host numpy (the schedule is config, not data).
+    """
+
+    n_trees: np.ndarray      # (M,) int32   — scheduled tree count per round
+    rho_id: np.ndarray       # (M,) float32 — scheduled sample rate per round
+    tree_active: np.ndarray  # (M, n_trees_max) float32 0/1 activity mask
+
+
+class FlatSchedule(NamedTuple):
+    """The schedule flattened to one entry per *scheduled tree build*
+    (DESIGN.md §4).
+
+    Derived from ``ScheduleArrays.tree_active``: entry ``s`` is tree slot
+    ``tree_in_round[s]`` of round ``round_of_step[s]`` (0-based), in the
+    exact order the legacy loop builds trees.  The scanned training engine
+    derives every tree's prefix-stable key and its exact-count masks from
+    this enumeration in one batched draw, so it does exactly the scheduled
+    work — no masked-slot waste.
+    """
+
+    round_of_step: np.ndarray   # (S,) int32 — 0-based round index
+    tree_in_round: np.ndarray   # (S,) int32 — tree slot within its round
+
+
+def schedule_arrays(cfg) -> ScheduleArrays:
+    """Materialise the (n_trees, rho_id) schedules for all rounds 1..M.
+
+    ``tree_active[m, t] = 1`` iff tree slot ``t`` participates in round
+    ``m + 1`` — the first ``n_trees_schedule(m+1)`` slots, so that with
+    prefix-stable per-tree keys (``forest.sample_masks``) the active slots
+    draw exactly the masks the legacy per-round loop draws.
+    """
+    rounds = np.arange(1, cfg.rounds + 1)
+    n_trees = np.array([n_trees_schedule(cfg, int(m)) for m in rounds], np.int32)
+    rho = np.array([rho_id_schedule(cfg, int(m)) for m in rounds], np.float32)
+    active = (
+        np.arange(cfg.n_trees_max)[None, :] < n_trees[:, None]
+    ).astype(np.float32)
+    return ScheduleArrays(n_trees=n_trees, rho_id=rho, tree_active=active)
+
+
+def flat_schedule(cfg) -> tuple[ScheduleArrays, FlatSchedule]:
+    """Flatten the mask-form schedule to per-tree-build scan steps.
+
+    Row-major nonzeros of ``tree_active`` enumerate (round, slot) pairs in
+    exactly the order the legacy loop builds them.
+    """
+    sched = schedule_arrays(cfg)
+    round_idx, tree_idx = np.nonzero(sched.tree_active)
+    flat = FlatSchedule(
+        round_of_step=round_idx.astype(np.int32),
+        tree_in_round=tree_idx.astype(np.int32),
+    )
+    return sched, flat

@@ -19,7 +19,7 @@ from repro.core.types import TreeArrays, TreeConfig
 
 
 def sample_masks(
-    rng: jax.Array, n: int, d: int, n_trees: int, rho_id: float, rho_feat: float
+    rng: jax.Array, n: int, d: int, n_trees: int, rho_id, rho_feat: float
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Exact-count subsampling masks per tree.
 
@@ -27,20 +27,72 @@ def sample_masks(
     features without replacement (eq. 4); ``random.permutation(n) < k`` places
     exactly k ones uniformly at random.
 
+    ``rho_id`` may be a python float (host path) — the keep-count is then
+    rounded on the host exactly as the legacy loop always did.
+
     Returns:
       sample_mask: (n_trees, n) float32 in {0, 1}
       feature_mask: (n_trees, d) bool
     """
     n_keep = max(1, int(round(n * rho_id)))
     d_keep = max(1, int(round(d * rho_feat)))
-    keys = jax.random.split(rng, 2 * n_trees).reshape(n_trees, 2, 2)
+    return sample_masks_counts(rng, n, d, n_trees, n_keep, d_keep)
 
-    def one(k):
-        smask = (jax.random.permutation(k[0], n) < n_keep).astype(jnp.float32)
-        fmask = jax.random.permutation(k[1], d) < d_keep
+
+def masks_from_keys(
+    keys: jnp.ndarray, n: int, d: int, n_keep, d_keep
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact-count masks from pre-derived per-tree keys (batched).
+
+    ``keys`` is (K, 2) uint32; ``n_keep`` is a scalar or a (K,) vector of
+    keep-counts (may be traced).  One batched draw for any number of trees —
+    the scanned engine precomputes ALL its steps' masks through this in a
+    single vmap (a batched sort is far cheaper than per-step sorts).
+    """
+    n_keep = jnp.broadcast_to(jnp.asarray(n_keep), keys.shape[:1])
+
+    def one(k, nk):
+        ks, kf = jax.random.split(k)
+        smask = (jax.random.permutation(ks, n) < nk).astype(jnp.float32)
+        fmask = jax.random.permutation(kf, d) < d_keep
         return smask, fmask
 
-    return jax.vmap(one)(keys)
+    return jax.vmap(one)(keys, n_keep)
+
+
+def fold_in_keys(rng: jax.Array, indices: jnp.ndarray) -> jnp.ndarray:
+    """Per-tree keys via ``random.fold_in(rng, t)`` — *prefix-stable* in the
+    tree count (unlike ``random.split(rng, k)``, whose keys depend on k), so
+    any subset of tree slots draws exactly the masks a full-round draw
+    produces.  The scanned training engine (DESIGN.md §4) relies on this to
+    stay mask-for-mask equivalent to the legacy per-round loop."""
+    return jax.vmap(lambda t: jax.random.fold_in(rng, t))(indices)
+
+
+def sample_masks_counts(
+    rng: jax.Array, n: int, d: int, n_trees: int, n_keep, d_keep
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """``sample_masks`` with explicit keep-counts; counts may be traced."""
+    return masks_from_keys(
+        fold_in_keys(rng, jnp.arange(n_trees)), n, d, n_keep, d_keep
+    )
+
+
+def _forest_per_tree(binned, g, h, sample_mask, feature_mask, cfg, backend=None):
+    """Un-jitted core: build all trees, return per-tree train predictions.
+
+    Returns (trees, per_tree_pred) with per_tree_pred (n_trees, n) — the raw
+    leaf outputs of every tree on the full training set, *before* any
+    bagging combiner, so the caller owns the combine.
+    """
+
+    def one(smask, fmask):
+        tr, assign = tree_mod.build_tree(
+            binned, g, h, smask, fmask, cfg, backend=backend,
+        )
+        return tr, tr.leaf_weight[assign]
+
+    return jax.vmap(one)(sample_mask, feature_mask)
 
 
 @partial(jax.jit, static_argnames=("cfg", "backend"))
@@ -69,13 +121,27 @@ def build_forest(
       full training set, ready for the boosting update
       y_hat^(m) = y_hat^(m-1) + lr * train_pred (Alg. 1 line 8).
     """
-
-    def one(smask, fmask):
-        tr, assign = tree_mod.build_tree(
-            binned, g, h, smask, fmask, cfg, backend=backend,
-        )
-        return tr, tr.leaf_weight[assign]
-
-    trees, per_tree_pred = jax.vmap(one)(sample_mask, feature_mask)
+    trees, per_tree_pred = _forest_per_tree(
+        binned, g, h, sample_mask, feature_mask, cfg, backend
+    )
     train_pred = jnp.mean(per_tree_pred, axis=0)
     return trees, train_pred
+
+
+@partial(jax.jit, static_argnames=("cfg", "backend"))
+def build_forest_per_tree(
+    binned: jnp.ndarray,
+    g: jnp.ndarray,
+    h: jnp.ndarray,
+    sample_mask: jnp.ndarray,
+    feature_mask: jnp.ndarray,
+    cfg: TreeConfig,
+    backend=None,
+) -> tuple[TreeArrays, jnp.ndarray]:
+    """Like ``build_forest`` but returns *per-tree* predictions (n_trees, n).
+
+    The scanned training engine consumes this: it owns the bagging combine
+    (and the validation-set prediction reuses the same tree stack), so the
+    builder must not reduce over the tree axis itself.
+    """
+    return _forest_per_tree(binned, g, h, sample_mask, feature_mask, cfg, backend)

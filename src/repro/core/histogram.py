@@ -80,7 +80,12 @@ def compute_histogram_onehot(
 
 
 def histogram_dispatch(impl: str = "segment"):
-    """Select a histogram implementation by name."""
+    """Select a histogram implementation by name.
+
+    ``"pallas"`` is the original kernel behind an XLA staging wrapper;
+    ``"pallas-fused"`` is the training-side kernel that fuses the id/stats
+    staging into the scatter-accumulate (what ``local-pallas`` runs).
+    """
     if impl == "segment":
         return compute_histogram
     if impl == "onehot":
@@ -89,4 +94,8 @@ def histogram_dispatch(impl: str = "segment"):
         from repro.kernels.histogram import ops as _ops
 
         return _ops.compute_histogram_pallas
+    if impl == "pallas-fused":
+        from repro.kernels.histogram import ops as _ops
+
+        return _ops.compute_histogram_pallas_fused
     raise ValueError(f"unknown histogram impl {impl!r}")

@@ -164,20 +164,30 @@ def predict_forest(trees: TreeArrays, binned: jnp.ndarray, max_depth: int) -> jn
 
 
 def predict_packed(packed: PackedEnsemble, binned: jnp.ndarray) -> jnp.ndarray:
-    """Raw-margin prediction from the packed layout: ONE traversal of all
-    ``total_trees`` trees, then the exact per-round bagging-mean combiner.
+    """Raw-margin prediction from the packed layout, bit-for-bit equal to the
+    legacy per-round loop (asserted in tests/test_packed.py).
 
-    Bit-for-bit equal to the legacy per-round loop (asserted in
-    tests/test_packed.py): the traversal is elementwise per tree, and the
-    static ``round_offsets`` reproduce the identical mean/accumulate order —
-    the combiner costs O(rounds) trivial vector adds, not O(rounds)
-    traversals.
+    Per-round sums are accumulated segment-by-segment over the *static*
+    ``round_offsets`` boundaries: each round's ``(n_trees_r, n)`` per-tree
+    block is a transient of that segment only — the full ``(total_trees, n)``
+    per-tree matrix of the original one-shot vmapped formulation is never
+    materialised.  That matrix is what made the packed path 0.34x the loop
+    on CPU (BENCH_predict.json history); the segmented accumulation restores
+    loop-parity while keeping the packed layout's uniform storage.  The
+    traversal-count trade-off lives in the combiner choice: this path is the
+    bit-exact one; ``predict_packed_weighted`` streams all trees through one
+    scanned body (O(1) compile cost), and the Pallas ``ensemble_predict``
+    kernel fuses the whole ensemble on TPU.
     """
-    per_tree = predict_trees(packed.trees(), binned, packed.max_depth)
     out = jnp.full((binned.shape[0],), packed.base_score, dtype=jnp.float32)
     for r in range(packed.rounds):
         s, e = packed.round_offsets[r], packed.round_offsets[r + 1]
-        out = out + packed.learning_rate * jnp.mean(per_tree[s:e], axis=0)
+        seg = TreeArrays(
+            feature=packed.feature[s:e], threshold=packed.threshold[s:e],
+            gain=packed.gain[s:e], leaf_weight=packed.leaf_weight[s:e],
+        )
+        per_tree = predict_trees(seg, binned, packed.max_depth)  # (k_r, n)
+        out = out + packed.learning_rate * jnp.mean(per_tree, axis=0)
     return out
 
 

@@ -67,6 +67,58 @@ def check(num_parties: int, aggregation: str, shard_samples: bool) -> None:
     )
 
 
+def check_no_valid_split(num_parties: int, aggregation: str, degenerate: str) -> None:
+    """Equivalence on the degenerate frontier: when NO valid split exists
+    anywhere (every gain <= 0, or min_child_weight filters every candidate),
+    the federated builders must still produce trees bit-identical to the
+    centralized one — all-(-1) features, threshold == B everywhere, and the
+    single populated leaf carrying the global weight.  This is the edge the
+    argmax aggregation is most exposed to (its per-party candidate exchange
+    must agree on "no split" without exchanging histograms)."""
+    mesh = jax.make_mesh((1, num_parties), ("data", "model"))
+
+    rng = np.random.default_rng(13)
+    n, d = 256, num_parties * 2
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+    if degenerate == "gamma":
+        # every candidate's gain is pushed below zero
+        cfg = TreeConfig(max_depth=2, num_bins=8, gamma=1e9)
+    else:
+        # every candidate fails the child-weight filter -> gain = -inf
+        cfg = TreeConfig(max_depth=2, num_bins=8, min_child_weight=1e9)
+
+    binned, _ = binning.fit_bin(x, cfg.num_bins)
+    g, h = losses.grad_hess("logistic", y, jnp.zeros(n))
+    smask, fmask = forest.sample_masks(jax.random.PRNGKey(3), n, d, 3, 0.9, 1.0)
+
+    trees_c, pred_c = forest.build_forest(binned, g, h, smask, fmask, cfg)
+    assert np.all(np.asarray(trees_c.feature) == -1), "expected a split-free tree"
+
+    backend = vfl.make_vfl_backend(mesh, cfg, aggregation=aggregation)
+    with use_mesh(mesh):
+        trees_f, pred_f = backend.build_forest(binned, g, h, smask, fmask, cfg)
+
+    np.testing.assert_array_equal(
+        np.asarray(trees_c.feature), np.asarray(trees_f.feature),
+        err_msg=f"no-valid-split feature mismatch ({aggregation}, {degenerate})",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(trees_c.threshold), np.asarray(trees_f.threshold)
+    )
+    np.testing.assert_allclose(
+        np.asarray(trees_c.leaf_weight), np.asarray(trees_f.leaf_weight),
+        rtol=1e-5, atol=1e-6,
+    )
+    np.testing.assert_allclose(
+        np.asarray(pred_c), np.asarray(pred_f), rtol=1e-5, atol=1e-6
+    )
+    print(
+        f"OK no-valid-split lossless: parties={num_parties} "
+        f"aggregation={aggregation} degenerate={degenerate}"
+    )
+
+
 def main() -> int:
     n_dev = len(jax.devices())
     if n_dev < 4:
@@ -76,6 +128,9 @@ def main() -> int:
         for shard_samples in (False, True):
             check(num_parties=4, aggregation=aggregation, shard_samples=shard_samples)
     check(num_parties=2, aggregation="histogram", shard_samples=True)
+    for aggregation in ("histogram", "argmax"):
+        for degenerate in ("gamma", "min_child_weight"):
+            check_no_valid_split(4, aggregation, degenerate)
     print("ALL FEDERATION SELF-TESTS PASSED")
     return 0
 

@@ -79,23 +79,39 @@ def make_vfl_backend(
     )
 
     sample_spec = P(data_axes) if data_axes else P()
+    in_specs = (
+        P(sample_spec[0] if data_axes else None, party_axis),  # binned (n, d)
+        sample_spec,                                           # g (n,)
+        sample_spec,                                           # h (n,)
+        P(None, sample_spec[0] if data_axes else None),        # smask (T, n)
+        P(None, party_axis),                                   # fmask (T, d)
+    )
 
     def _forest_body(binned_shard, g, h, smask, fmask_shard):
         return forest_mod.build_forest.__wrapped__(  # un-jitted inner
             binned_shard, g, h, smask, fmask_shard, cfg, backend=inner,
         )
 
+    def _forest_body_per_tree(binned_shard, g, h, smask, fmask_shard):
+        return forest_mod._forest_per_tree(  # un-jitted per-tree inner
+            binned_shard, g, h, smask, fmask_shard, cfg, backend=inner,
+        )
+
     sharded = shard_map(
         _forest_body,
         mesh=mesh,
-        in_specs=(
-            P(sample_spec[0] if data_axes else None, party_axis),  # binned (n, d)
-            sample_spec,                                           # g (n,)
-            sample_spec,                                           # h (n,)
-            P(None, sample_spec[0] if data_axes else None),        # smask (T, n)
-            P(None, party_axis),                                   # fmask (T, d)
-        ),
+        in_specs=in_specs,
         out_specs=(P(), sample_spec),  # (trees replicated, train_pred (n,))
+        check_vma=False,
+    )
+    # Per-tree variant: predictions keep the tree axis (T, n) — replicated on
+    # the party axis (each party computes the full routing via the psum'd
+    # bitmaps), sharded like the samples on the data axes.
+    sharded_per_tree = shard_map(
+        _forest_body_per_tree,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=(P(), P(None, sample_spec[0] if data_axes else None)),
         check_vma=False,
     )
 
@@ -103,10 +119,14 @@ def make_vfl_backend(
     def _run(binned, g, h, sample_mask, feature_mask):
         return sharded(binned, g, h, sample_mask, feature_mask)
 
-    def forest_builder(binned, g, h, sample_mask, feature_mask, _cfg=None):
-        """Full-forest override: the tree config is baked into the shard_map
-        program, so a caller-passed cfg must match ``tree`` (a silent
-        mismatch would build trees at one depth and traverse at another)."""
+    @jax.jit
+    def _run_per_tree(binned, g, h, sample_mask, feature_mask):
+        return sharded_per_tree(binned, g, h, sample_mask, feature_mask)
+
+    def _check(binned, _cfg):
+        """The tree config is baked into the shard_map program, so a
+        caller-passed cfg must match ``tree`` (a silent mismatch would build
+        trees at one depth and traverse at another)."""
         if _cfg is not None and _cfg != cfg:
             raise ValueError(
                 f"backend {descriptor.impl!r} was built with {cfg}, but the "
@@ -119,14 +139,29 @@ def make_vfl_backend(
                 f"d={d} must shard evenly over {num_parties} parties; "
                 "pad columns with data.tabular.pad_features"
             )
+
+    def forest_builder(binned, g, h, sample_mask, feature_mask, _cfg=None):
+        _check(binned, _cfg)
         return _run(binned, g, h, sample_mask.astype(jnp.float32), feature_mask)
+
+    def forest_builder_per_tree(binned, g, h, sample_mask, feature_mask,
+                                _cfg=None):
+        _check(binned, _cfg)
+        return _run_per_tree(
+            binned, g, h, sample_mask.astype(jnp.float32), feature_mask
+        )
 
     # The per-node collectives live only on the INNER backend consumed inside
     # the shard_map body; exposing them here would invite generic callers
     # (forest.build_forest(backend=...), backend.build_tree) to run them
     # outside shard_map, where the axis names are unbound.  The public
-    # surface of a VFL backend is build_forest -> forest_builder.
-    return TreeBackend(descriptor=descriptor, forest_builder=forest_builder)
+    # surface of a VFL backend is build_forest -> forest_builder (and the
+    # per-tree variant the scanned training engine consumes).
+    return TreeBackend(
+        descriptor=descriptor,
+        forest_builder=forest_builder,
+        forest_builder_per_tree=forest_builder_per_tree,
+    )
 
 
 def make_federated_forest_fn(

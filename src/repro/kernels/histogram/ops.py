@@ -1,9 +1,19 @@
-"""Jitted wrapper for the Pallas histogram kernel.
+"""Jitted wrappers for the Pallas histogram kernels.
 
-Drop-in replacement for ``core.histogram.compute_histogram`` (selected via
-``histogram_dispatch("pallas")``): handles id fusion, padding to tile
-boundaries, and un-padding of the result. ``interpret`` defaults to True off
-TPU so the same code path validates on CPU.
+Drop-in replacements for ``core.histogram.compute_histogram``:
+
+* ``compute_histogram_pallas``        — the original kernel; the wrapper
+  stages ``ids = assign * B + binned`` and ``data = stack([g*w, h*w, w])``
+  in XLA before the kernel (selected via ``histogram_dispatch("pallas")``);
+* ``compute_histogram_pallas_fused``  — the training-side fused kernel
+  (``train_histogram.py``): id fusion and stats staging happen *inside* the
+  kernel, so neither intermediate ever touches HBM (selected via
+  ``histogram_dispatch("pallas-fused")``; what the ``local-pallas`` backend
+  runs).
+
+Both handle padding to tile boundaries and un-padding of the result.
+``interpret`` defaults to True off TPU so the same code paths validate on
+CPU.
 """
 
 from __future__ import annotations
@@ -18,6 +28,7 @@ from repro.kernels.histogram.histogram import (
     STATS_PAD,
     histogram_pallas_call,
 )
+from repro.kernels.histogram.train_histogram import fused_histogram_pallas_call
 
 
 def _on_tpu() -> bool:
@@ -68,6 +79,52 @@ def compute_histogram_pallas(
 
     hist = histogram_pallas_call(
         ids, data, nb_pad,
+        tile_n=tile_n, feat_block=feat_block, interpret=interpret,
+    )  # (d_pad, nb_pad, STATS_PAD)
+
+    hist = hist[:d, :nb, :STATS]
+    return hist.reshape(d, num_nodes, num_bins, STATS).transpose(1, 0, 2, 3)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("num_nodes", "num_bins", "tile_n", "feat_block", "interpret"),
+)
+def compute_histogram_pallas_fused(
+    binned: jnp.ndarray,
+    g: jnp.ndarray,
+    h: jnp.ndarray,
+    weight: jnp.ndarray,
+    assign: jnp.ndarray,
+    num_nodes: int,
+    num_bins: int,
+    *,
+    tile_n: int = 512,
+    feat_block: int = 8,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Same contract as ``core.histogram.compute_histogram``, served by the
+    fused training-side kernel: no (n, d) fused-id array and no (n, 3) stats
+    stack are ever materialised — only tile-boundary zero padding happens in
+    XLA (padded rows carry weight 0, so they accumulate nothing).
+
+    Returns (num_nodes, d, num_bins, 3) float32.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, d = binned.shape
+    nb = num_nodes * num_bins
+    nb_pad = _round_up(nb, 128)  # MXU lane alignment (see kernel docstring)
+
+    n_pad = _round_up(n, tile_n)
+    d_pad = _round_up(d, feat_block)
+    pad_n = n_pad - n
+    binned_p = jnp.pad(binned, ((0, pad_n), (0, d_pad - d)))
+    col = lambda v: jnp.pad(v.astype(jnp.float32), (0, pad_n))[:, None]
+    assign_p = jnp.pad(assign, (0, pad_n))[:, None]
+
+    hist = fused_histogram_pallas_call(
+        binned_p, assign_p, col(g), col(h), col(weight), nb_pad, num_bins,
         tile_n=tile_n, feat_block=feat_block, interpret=interpret,
     )  # (d_pad, nb_pad, STATS_PAD)
 

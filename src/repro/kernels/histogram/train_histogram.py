@@ -1,0 +1,124 @@
+"""Fused Pallas training-side histogram kernel (DESIGN.md §2, §4).
+
+The original ``histogram.py`` kernel consumes *pre-staged* operands: the
+wrapper materialises ``ids = assign * B + binned`` (an (n, d) int32 array the
+size of the feature matrix) and ``data = stack([g*w, h*w, w])`` in XLA before
+the kernel ever runs — two extra HBM round-trips per level per tree that the
+training hot path pays at every histogram build.
+
+This kernel fuses that staging into the scatter-accumulate itself: it reads
+the raw level inputs (``binned``, ``assign``, ``g``, ``h``, ``w``) and forms
+both the fused node×bin ids and the ``[g*w, h*w, w]`` stats rows in
+VMEM/VREGs, so the only HBM traffic is the inputs once and the histogram
+out.  The accumulation is the same one-hot MXU contraction
+
+    hist[f, :, :] += onehot(assign * B + binned[:, f])^T @ [g*w, h*w, w, 0...]
+
+tiled over (sample tiles, feature blocks) with the standard sequential-grid
+revisiting-accumulator pattern on the output block.
+
+VMEM budget per step (tile_n=512, NB<=1024, feat_block=8, f32): binned
+512*8*4 = 16 KiB, per-sample vectors 3 * 512*4 = 6 KiB, onehot 512*1024*4 =
+2 MiB, out 8*1024*8*4 = 256 KiB — comfortably inside ~16 MiB/core VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.histogram.histogram import STATS_PAD
+
+
+def _fused_histogram_kernel(
+    binned_ref, assign_ref, g_ref, h_ref, w_ref, out_ref,
+    *, nb: int, num_bins: int, feat_block: int,
+):
+    """One grid step: accumulate ``feat_block`` features for one sample tile.
+
+    binned_ref: (tile_n, feat_block) int32 raw bin ids (NOT pre-fused);
+    assign_ref: (tile_n, 1) int32 node assignment at the current level;
+    g_ref/h_ref/w_ref: (tile_n, 1) float32 raw derivatives / sample mask —
+        padded rows carry w == 0 so they contribute nothing;
+    out_ref: (feat_block, nb, STATS_PAD) float32 accumulated histogram.
+    """
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tile_n = binned_ref.shape[0]
+    gv = g_ref[...]  # (T, 1)
+    hv = h_ref[...]
+    wv = w_ref[...]
+    # Fused stats staging: [g*w, h*w, w, 0...] built in registers, never HBM.
+    data = jnp.concatenate(
+        [gv * wv, hv * wv, wv,
+         jnp.zeros((tile_n, STATS_PAD - 3), jnp.float32)],
+        axis=1,
+    )  # (T, STATS_PAD)
+    node = assign_ref[...][:, 0]  # (T,)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tile_n, nb), 1)
+
+    def body(f, carry):
+        # Fused id staging: node * B + bin, per feature column, in registers.
+        ids_col = node * num_bins + binned_ref[:, f]  # (T,)
+        onehot = (ids_col[:, None] == iota).astype(jnp.float32)  # (T, NB)
+        acc = jax.lax.dot_general(
+            onehot, data,
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (NB, STATS_PAD) on the MXU
+        out_ref[f, :, :] += acc
+        return carry
+
+    jax.lax.fori_loop(0, feat_block, body, 0)
+
+
+def fused_histogram_pallas_call(
+    binned: jnp.ndarray,
+    assign: jnp.ndarray,
+    g: jnp.ndarray,
+    h: jnp.ndarray,
+    w: jnp.ndarray,
+    nb: int,
+    num_bins: int,
+    *,
+    tile_n: int = 512,
+    feat_block: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Raw pallas_call. Caller guarantees padding invariants (see ops.py):
+
+    binned (n_pad, d_pad) int32, n_pad % tile_n == 0, d_pad % feat_block == 0,
+           values in [0, num_bins); padded entries may hold any in-range bin
+           because their weight is 0.
+    assign (n_pad, 1) int32 in [0, nb // num_bins); g/h/w (n_pad, 1) float32
+           with zero rows where padded/masked.
+
+    Returns (d_pad, nb, STATS_PAD) float32.
+    """
+    n_pad, d_pad = binned.shape
+    grid = (n_pad // tile_n, d_pad // feat_block)
+    vec_spec = pl.BlockSpec((tile_n, 1), lambda i, j: (i, 0))
+
+    return pl.pallas_call(
+        functools.partial(
+            _fused_histogram_kernel,
+            nb=nb, num_bins=num_bins, feat_block=feat_block,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, feat_block), lambda i, j: (i, j)),
+            vec_spec,  # assign
+            vec_spec,  # g
+            vec_spec,  # h
+            vec_spec,  # w
+        ],
+        out_specs=pl.BlockSpec((feat_block, nb, STATS_PAD), lambda i, j: (j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d_pad, nb, STATS_PAD), jnp.float32),
+        interpret=interpret,
+    )(binned, assign, g, h, w)

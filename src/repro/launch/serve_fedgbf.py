@@ -113,15 +113,27 @@ def main() -> None:
     idx = rng.integers(0, ds.x_test.shape[0], args.requests)
     requests = np.asarray(ds.x_test)[idx]
 
-    # Warm-up compiles the single microbatch program.
-    score_stream(packed, requests[:args.batch_size], args.batch_size, args.impl)
+    # A stream smaller than one microbatch would otherwise pad (and score)
+    # mostly zeros — and the warm-up below would already score the whole
+    # stream.  Cap the microbatch at the stream size instead.
+    batch_size = min(args.batch_size, args.requests)
+    if batch_size != args.batch_size:
+        print(f"requests < batch-size: shrinking microbatch "
+              f"{args.batch_size} -> {batch_size}")
+
+    # Warm-up compiles the single microbatch program (ONE batch, not the
+    # whole stream).
+    score_stream(packed, requests[:batch_size], batch_size, args.impl)
     t0 = time.perf_counter()
-    scores, lat = score_stream(packed, requests, args.batch_size, args.impl)
+    scores, lat = score_stream(packed, requests, batch_size, args.impl)
     wall = time.perf_counter() - t0
-    lat_ms = np.sort(np.asarray(lat) * 1e3)
-    p50 = lat_ms[len(lat_ms) // 2]
-    p99 = lat_ms[min(len(lat_ms) - 1, int(len(lat_ms) * 0.99))]
-    print(f"impl={args.impl} batch={args.batch_size} "
+    # np.percentile interpolates between order statistics — correct for
+    # small / even-length latency streams, where hand-indexing the sorted
+    # list is biased (e.g. the "p50" of [1, 2] must be 1.5, not 2).
+    lat_ms = np.asarray(lat) * 1e3
+    p50 = float(np.percentile(lat_ms, 50))
+    p99 = float(np.percentile(lat_ms, 99))
+    print(f"impl={args.impl} batch={batch_size} "
           f"requests={args.requests}: {args.requests / wall:,.0f} rows/s, "
           f"batch latency p50={p50:.2f}ms p99={p99:.2f}ms")
     print(f"score head: {scores[:5]}")

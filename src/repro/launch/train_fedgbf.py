@@ -45,6 +45,13 @@ def main() -> None:
                     help="named TreeBackend from the registry")
     ap.add_argument("--parties", type=int, default=2,
                     help="party count for vfl-* backends")
+    ap.add_argument("--engine", default="scan", choices=("scan", "loop"),
+                    help="training engine: static-shape scanned (one XLA "
+                         "program for all rounds) or the legacy per-round "
+                         "loop (DESIGN.md §4)")
+    ap.add_argument("--eval-every", type=int, default=1,
+                    help="evaluate metrics every k rounds (schedule and "
+                         "timing are recorded every round regardless)")
     args = ap.parse_args()
 
     ds = synthetic.load(args.dataset, n=args.n or None)
@@ -100,8 +107,11 @@ def main() -> None:
 
     model, hist = boosting.train_fedgbf(
         jnp.asarray(x_train), jnp.asarray(y_train), cfg, jax.random.PRNGKey(0),
-        backend=backend, verbose=True,
+        backend=backend, verbose=True, engine=args.engine,
+        eval_every=args.eval_every,
     )
+    print(f"engine={hist.engine}: total train wall {hist.total_wall_time_s:.2f}s "
+          f"over {len(hist.n_trees)} rounds")
     x_test = ds.x_test
     if federated:
         x_test, _ = tabular.pad_features(x_test, args.parties)

@@ -7,7 +7,10 @@ import numpy as np
 import pytest
 
 from repro.kernels.histogram import ref
-from repro.kernels.histogram.ops import compute_histogram_pallas
+from repro.kernels.histogram.ops import (
+    compute_histogram_pallas,
+    compute_histogram_pallas_fused,
+)
 
 
 def _random_case(rng, n, d, B, nodes, g_dtype):
@@ -68,6 +71,65 @@ def test_histogram_kernel_tilings(tile_n, feat_block):
         binned, g, h, w, assign, 2, 32, tile_n=tile_n, feat_block=feat_block
     )
     expected = ref.histogram_ref(binned, g, h, w, assign, 2, 32)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(expected), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize(
+    "n,d,B,nodes",
+    [
+        (512, 8, 32, 1),       # exactly one tile, one feature block
+        (1000, 10, 32, 4),     # ragged n and d
+        (700, 23, 32, 4),      # default-credit width
+        (256, 5, 16, 2),       # NB = 32 << 128 lane pad
+        (130, 1, 8, 1),        # degenerate single feature (leaf-stats shape)
+        (513, 9, 32, 2),       # off-by-one over the tile boundary
+    ],
+)
+def test_fused_train_histogram_kernel_matches_ref(n, d, B, nodes):
+    """The training-side fused kernel (in-kernel id + stats staging) agrees
+    with the oracle on the same sweep as the staged kernel."""
+    rng = np.random.default_rng(1000 + n + d + B + nodes)
+    binned, g, h, w, assign = _random_case(rng, n, d, B, nodes, jnp.float32)
+    out = compute_histogram_pallas_fused(binned, g, h, w, assign, nodes, B)
+    expected = ref.histogram_ref(binned, g, h, w, assign, nodes, B)
+    assert out.shape == (nodes, d, B, 3)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(expected), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("tile_n,feat_block", [(256, 4), (512, 8)])
+def test_fused_train_histogram_kernel_tilings(tile_n, feat_block):
+    rng = np.random.default_rng(17)
+    binned, g, h, w, assign = _random_case(rng, 900, 11, 32, 2, jnp.float32)
+    out = compute_histogram_pallas_fused(
+        binned, g, h, w, assign, 2, 32, tile_n=tile_n, feat_block=feat_block
+    )
+    expected = ref.histogram_ref(binned, g, h, w, assign, 2, 32)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(expected), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_fused_kernel_vmaps_over_trees():
+    """The forest layer vmaps the histogram over per-tree (weight, assign) —
+    the fused kernel must batch exactly like the reference."""
+    rng = np.random.default_rng(23)
+    n, d, B, nodes, T = 600, 7, 16, 4, 3
+    binned = jnp.asarray(rng.integers(0, B, (n, d)), jnp.int32)
+    g = jnp.asarray(rng.normal(size=n), jnp.float32)
+    h = jnp.asarray(rng.random(n) + 0.05, jnp.float32)
+    w = jnp.asarray(rng.integers(0, 2, (T, n)), jnp.float32)
+    assign = jnp.asarray(rng.integers(0, nodes, (T, n)), jnp.int32)
+    out = jax.vmap(
+        lambda wt, at: compute_histogram_pallas_fused(
+            binned, g, h, wt, at, nodes, B)
+    )(w, assign)
+    expected = jax.vmap(
+        lambda wt, at: ref.histogram_ref(binned, g, h, wt, at, nodes, B)
+    )(w, assign)
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(expected), rtol=1e-5, atol=1e-5
     )

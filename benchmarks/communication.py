@@ -5,6 +5,11 @@ Compares, per training run: SecureBoost vs FedGBF vs Dynamic FedGBF under
 (a) the paper-faithful full-histogram exchange and (b) the beyond-paper
 argmax candidate exchange (aggregator.py) — the collective-term optimisation
 carried into §Perf.
+
+This module prices the *paper-world* Paillier protocol model only; the
+compressed-transport subsystem's **measured** wire bytes (q8/q16/top-k/GOSS,
+reconciled against the wire model) live in benchmarks/comm_bench.py ->
+BENCH_comm.json (DESIGN.md §7).
 """
 
 from __future__ import annotations

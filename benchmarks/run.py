@@ -15,6 +15,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        comm_bench,
         communication,
         figures,
         kernel_bench,
@@ -26,6 +27,7 @@ def main() -> None:
 
     modules = [
         ("communication", communication),
+        ("comm_bench", comm_bench),
         ("kernel_bench", kernel_bench),
         ("predict_bench", predict_bench),
         ("runtime_model", runtime_model),

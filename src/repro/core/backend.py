@@ -11,6 +11,11 @@ static argument.  Named backends come from a registry:
   ``"local-pallas"``  centralized execution, Pallas TPU histogram kernel;
   ``"vfl-histogram"`` shard_map VFL, paper-faithful full-histogram exchange;
   ``"vfl-argmax"``    shard_map VFL, candidate-only exchange (beyond-paper);
+  ``"vfl-histogram-q8"`` / ``"-q16"``  histogram exchange quantized to
+                      int8/int16 + per-(node, feature, channel) scales
+                      (lossy; federation/compress.py, DESIGN.md §7);
+  ``"vfl-argmax-topk"`` each party ships its k best candidates per node
+                      (lossless for any k >= 1);
   ``"vfl-*-sharded"`` the above with samples additionally sharded over the
                       data axes (multi-worker extension).
 
@@ -36,7 +41,13 @@ class BackendDescriptor:
     ``impl`` is the registry name; ``histogram_impl`` names the histogram
     provider family (``"segment"`` | ``"onehot"`` | ``"pallas"``); the party/
     data fields describe the SPMD decomposition for federated backends and
-    stay at their defaults for centralized ones.
+    stay at their defaults for centralized ones.  ``transport`` names the
+    wire format of the per-level party exchange (``"raw"`` | ``"q8"`` |
+    ``"q16"`` | ``"topk"``; federation/compress.py) and ``transport_spec``
+    carries the full (frozen, hashable) ``compress.TransportSpec`` for
+    non-raw formats — the tag alone cannot represent non-default parameters
+    (a custom top-k k or quantization seed), and byte accounting must never
+    guess them.
     """
 
     impl: str
@@ -45,6 +56,8 @@ class BackendDescriptor:
     party_axis: Optional[str] = None
     data_axes: tuple = ()
     shard_samples: bool = False
+    transport: str = "raw"
+    transport_spec: Optional[object] = None  # compress.TransportSpec (non-raw)
 
     @property
     def is_federated(self) -> bool:

@@ -121,6 +121,10 @@ def train_fedgbf(
     (static-shape scanned engine, the default) or ``"loop"`` (legacy
     per-round reference).  Both drive the same ``TreeBackend``.
     """
+    if cfg.sampling not in ("uniform", "goss"):
+        raise ValueError(
+            f"unknown sampling {cfg.sampling!r}; options: 'uniform', 'goss'"
+        )
     if engine == "scan":
         return _train_scanned(
             x, y, cfg, rng, x_valid, y_valid, backend, eval_every, verbose
@@ -159,10 +163,17 @@ def _train_loop(
         rho_id = dynamic.rho_id_schedule(cfg, m)
 
         rng, k_sample = jax.random.split(rng)
-        smask, fmask = forest_mod.sample_masks(
-            k_sample, n, d, n_trees, rho_id, cfg.rho_feat
-        )
         g, h = losses.grad_hess(cfg.loss, y, y_hat)
+        if cfg.sampling == "goss":
+            n_top, n_rand = forest_mod.goss_counts(n, rho_id, cfg.goss_top_share)
+            smask, fmask = forest_mod.goss_masks(
+                k_sample, g, d, n_trees, n_top, n_rand,
+                forest_mod.feature_keep_count(d, cfg.rho_feat)
+            )
+        else:
+            smask, fmask = forest_mod.sample_masks(
+                k_sample, n, d, n_trees, rho_id, cfg.rho_feat
+            )
         trees, train_pred = bk.build_forest(binned, g, h, smask, fmask, cfg.tree)
         y_hat = y_hat + cfg.learning_rate * train_pred
         forests.append(jax.block_until_ready(trees))
@@ -248,7 +259,7 @@ def _scan_train_program(
     from repro.core import tree as tree_mod  # local to avoid cycle at import
 
     n, d = binned.shape
-    d_keep = max(1, int(round(d * cfg.rho_feat)))
+    d_keep = forest_mod.feature_keep_count(d, cfg.rho_feat)
     loss = cfg.loss
     lr = cfg.learning_rate
     nan_vec = jnp.full((len(_METRIC_KEYS[loss]),), jnp.nan, jnp.float32)
@@ -256,6 +267,7 @@ def _scan_train_program(
     y32 = y.astype(jnp.float32)
 
     sched, flat = dynamic.flat_schedule(cfg)
+    use_goss = cfg.sampling == "goss"
     # Per-round keep counts via the exact host expression the legacy loop
     # evaluates (full float64 rho — schedule_arrays' float32 rho_id could
     # round a .5 boundary the other way and break mask equivalence).
@@ -265,10 +277,17 @@ def _scan_train_program(
         np.int32,
     )
     n_keep = n_keep_round[flat.round_of_step]  # (S,)
+    if use_goss:
+        goss_round = np.array(
+            [forest_mod.goss_counts(n, dynamic.rho_id_schedule(cfg, m),
+                                    cfg.goss_top_share)
+             for m in range(1, cfg.rounds + 1)],
+            np.int32,
+        )  # (M, 2): per-round (n_top, n_rand), same host arithmetic as loop
     rounds_idx = np.arange(1, cfg.rounds + 1)
     do_eval = (rounds_idx % eval_every == 0) | (rounds_idx == cfg.rounds)
 
-    # -- all masks up front, one batched draw --------------------------------
+    # -- all mask keys up front ----------------------------------------------
     round_keys = []
     for _ in range(cfg.rounds):  # the loop's exact stream: one split per round
         rng, k_round = jax.random.split(rng)
@@ -278,15 +297,25 @@ def _scan_train_program(
         round_keys[jnp.asarray(flat.round_of_step)],
         jnp.asarray(flat.tree_in_round),
     )  # (S, 2) — prefix-stable per-slot keys, identical to the loop's
-    smask_all, fmask_all = forest_mod.masks_from_keys(
-        step_keys, n, d, jnp.asarray(n_keep), d_keep
-    )  # (S, n) float32, (S, d) bool
+    if not use_goss:
+        # Uniform masks depend only on the keys: one batched draw up front.
+        # GOSS masks depend on the round's gradients, so they are drawn
+        # inside round_body from the same per-slot keys instead.
+        smask_all, fmask_all = forest_mod.masks_from_keys(
+            step_keys, n, d, jnp.asarray(n_keep), d_keep
+        )  # (S, n) float32, (S, d) bool
 
     def round_body(carry, xs):
         y_hat, y_hat_valid = carry
         g, h = losses.grad_hess(loss, y32, y_hat)
+        if use_goss:
+            smask, fmask = forest_mod.goss_masks_from_keys(
+                xs["keys"], g, d, xs["n_top"], xs["n_rand"], d_keep
+            )
+        else:
+            smask, fmask = xs["smask"], xs["fmask"]
         trees, per_pred = bk.build_forest_per_tree(
-            binned, g, h, xs["smask"], xs["fmask"], cfg.tree
+            binned, g, h, smask, fmask, cfg.tree
         )
         y_hat = y_hat + lr * jnp.mean(per_pred, axis=0)
         tr_vec = jax.lax.cond(
@@ -317,11 +346,14 @@ def _scan_train_program(
     trees_segs, tr_rows, va_rows = [], [], []
     for width, first, n_rounds in _schedule_segments(sched.n_trees):
         s, e = int(offsets[first]), int(offsets[first + n_rounds])
-        xs = {
-            "smask": smask_all[s:e].reshape(n_rounds, width, n),
-            "fmask": fmask_all[s:e].reshape(n_rounds, width, d),
-            "do_eval": jnp.asarray(do_eval[first:first + n_rounds]),
-        }
+        xs = {"do_eval": jnp.asarray(do_eval[first:first + n_rounds])}
+        if use_goss:
+            xs["keys"] = step_keys[s:e].reshape(n_rounds, width, 2)
+            xs["n_top"] = jnp.asarray(goss_round[first:first + n_rounds, 0])
+            xs["n_rand"] = jnp.asarray(goss_round[first:first + n_rounds, 1])
+        else:
+            xs["smask"] = smask_all[s:e].reshape(n_rounds, width, n)
+            xs["fmask"] = fmask_all[s:e].reshape(n_rounds, width, d)
         if n_rounds == 1:
             carry, ys = round_body(
                 carry, jax.tree_util.tree_map(lambda a: a[0], xs)

@@ -8,34 +8,50 @@ a VFL consortium actually negotiates over), and a text dump of any tree.
 
 from __future__ import annotations
 
+from typing import Union
+
 import numpy as np
 
-from repro.core.types import EnsembleModel, forest_size
+from repro.core.types import EnsembleModel, PackedEnsemble, forest_size
 from repro.data.tabular import VerticalPartition
 
 
-def feature_importance(model: EnsembleModel, num_features: int,
-                       kind: str = "gain") -> np.ndarray:
+def feature_importance(model: Union[EnsembleModel, PackedEnsemble],
+                       num_features: int, kind: str = "gain") -> np.ndarray:
     """Importance per feature. kind: 'gain' (sum of split gains) or 'count'.
 
     Bagging-aware: each tree's contribution is weighted 1/n_trees of its
     round, mirroring the forest-mean combiner.
+
+    Accepts either ensemble layout: the per-round ``EnsembleModel`` or the
+    packed serving layout (``PackedEnsemble``), so checkpoint-loaded models
+    (``checkpoint.io.load_ensemble``) are explainable without unpacking.
+    The packed path recovers the 1/n_trees round weight from ``tree_scale``
+    (= lr / n_trees of the tree's round); both paths agree to float
+    tolerance (tests/test_explain_and_misc.py).
     """
+    if isinstance(model, PackedEnsemble):
+        # per-tree bagging weight recovered from tree_scale = lr / n_trees
+        weights = np.asarray(model.tree_scale, np.float64) / model.learning_rate
+        per_tree = zip(np.asarray(model.feature), np.asarray(model.gain), weights)
+    else:
+        per_tree = (
+            (f, g, 1.0 / forest_size(trees))
+            for trees in model.forests
+            for f, g in zip(np.asarray(trees.feature), np.asarray(trees.gain))
+        )
     imp = np.zeros(num_features, np.float64)
-    for trees in model.forests:
-        n_trees = forest_size(trees)
-        feats = np.asarray(trees.feature)        # (n_trees, num_internal)
-        gains = np.asarray(trees.gain)
-        for j in range(n_trees):
-            valid = feats[j] >= 0
-            f = feats[j][valid]
-            w = gains[j][valid] if kind == "gain" else np.ones_like(f, float)
-            np.add.at(imp, f, w / n_trees)
+    for feats, gains, weight in per_tree:     # rows: (num_internal,) per tree
+        valid = feats >= 0
+        f = feats[valid]
+        w = gains[valid] if kind == "gain" else np.ones_like(f, float)
+        np.add.at(imp, f, w * weight)
     total = imp.sum()
     return imp / total if total > 0 else imp
 
 
-def party_importance(model: EnsembleModel, partition: VerticalPartition,
+def party_importance(model: Union[EnsembleModel, PackedEnsemble],
+                     partition: VerticalPartition,
                      kind: str = "gain") -> dict:
     """Share of model importance contributed by each party's feature slice."""
     imp = feature_importance(model, partition.num_features, kind)

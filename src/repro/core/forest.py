@@ -35,8 +35,17 @@ def sample_masks(
       feature_mask: (n_trees, d) bool
     """
     n_keep = max(1, int(round(n * rho_id)))
-    d_keep = max(1, int(round(d * rho_feat)))
-    return sample_masks_counts(rng, n, d, n_trees, n_keep, d_keep)
+    return sample_masks_counts(rng, n, d, n_trees, n_keep,
+                               feature_keep_count(d, rho_feat))
+
+
+def feature_keep_count(d: int, rho_feat: float) -> int:
+    """The ONE rounding rule for d_m(j) = d * rho_feat (eq. 4).
+
+    Loop/scan mask equivalence depends on every call site sharing this exact
+    expression — both engines and the GOSS path resolve d_keep through here.
+    """
+    return max(1, int(round(d * rho_feat)))
 
 
 def masks_from_keys(
@@ -75,6 +84,81 @@ def sample_masks_counts(
     """``sample_masks`` with explicit keep-counts; counts may be traced."""
     return masks_from_keys(
         fold_in_keys(rng, jnp.arange(n_trees)), n, d, n_keep, d_keep
+    )
+
+
+def goss_counts(n: int, rho_id: float, top_share: float) -> tuple[int, int]:
+    """Split the round's rho_id sample budget into GOSS (top, random) counts.
+
+    ``n_keep = round(n * rho_id)`` samples total (the exact host expression
+    the uniform path uses), of which ``round(n_keep * top_share)`` are the
+    largest-|g| samples and the rest are drawn uniformly from the remainder.
+    Clamped so at least one random sample is always drawn (the amplification
+    factor divides by it) and the top set never swallows the whole dataset.
+    """
+    n_keep = max(1, min(n, int(round(n * rho_id))))
+    n_top = max(0, min(int(round(n_keep * top_share)), n_keep - 1, n - 1))
+    n_rand = max(1, min(n_keep - n_top, n - n_top))
+    return n_top, n_rand
+
+
+def goss_masks_from_keys(
+    keys: jnp.ndarray, g: jnp.ndarray, d: int, n_top, n_rand, d_keep: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """GOSS weight masks from prefix-stable per-tree keys (DESIGN.md §7).
+
+    Gradient-based one-side sampling (LightGBM; the subsampling lever
+    SecureBoost+ carries into VFL): every tree keeps the ``n_top``
+    largest-|g| samples at weight 1 (ties broken toward the lower sample
+    index — ``argsort`` is stable), then draws exactly ``n_rand`` of the
+    remaining samples uniformly at weight ``(n - n_top) / n_rand``, which
+    keeps the histogram (g, h, count) sums unbiased estimates of the
+    full-data sums over the small-gradient region.
+
+    The returned ``smask`` is therefore a *weight* vector, not 0/1 — every
+    consumer already multiplies stats by the mask (``core/histogram.py``), so
+    the tree builders and both training engines run unchanged.  ``keys`` uses
+    the same ``fold_in`` per-slot discipline as ``masks_from_keys`` (and the
+    same (sample, feature) key split, so the feature masks are identical to
+    the uniform path's draw for the same keys); the top-|g| set is
+    deterministic in ``g`` and shared by all trees of the round.
+
+    Args:
+      keys: (K, 2) uint32 per-tree keys (``fold_in_keys``).
+      g: (n,) first-order gradients of the round.
+      n_top, n_rand: scalars or (K,) vectors; may be traced.
+      d_keep: static feature keep-count.
+    """
+    n = g.shape[0]
+    n_top = jnp.broadcast_to(jnp.asarray(n_top), keys.shape[:1])
+    n_rand = jnp.broadcast_to(jnp.asarray(n_rand), keys.shape[:1])
+    order = jnp.argsort(-jnp.abs(g))  # stable: ties toward lower index
+    rank = jnp.zeros(n, jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+
+    def one(k, nt, nr):
+        ks, kf = jax.random.split(k)
+        is_top = rank < nt
+        u = jax.random.uniform(ks, (n,))
+        u = jnp.where(is_top, 2.0, u)  # sentinel > any uniform: tops excluded
+        thr = jnp.sort(u)[jnp.clip(nr - 1, 0, n - 1)]  # nr-th smallest
+        is_rand = (~is_top) & (u <= thr)
+        amplify = (n - nt).astype(jnp.float32) / jnp.maximum(nr, 1).astype(
+            jnp.float32
+        )
+        smask = is_top.astype(jnp.float32) + is_rand.astype(jnp.float32) * amplify
+        fmask = jax.random.permutation(kf, d) < d_keep
+        return smask, fmask
+
+    return jax.vmap(one)(keys, n_top, n_rand)
+
+
+def goss_masks(
+    rng: jax.Array, g: jnp.ndarray, d: int, n_trees: int,
+    n_top: int, n_rand: int, d_keep: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """``goss_masks_from_keys`` over a round key (the legacy-loop entry)."""
+    return goss_masks_from_keys(
+        fold_in_keys(rng, jnp.arange(n_trees)), g, d, n_top, n_rand, d_keep
     )
 
 

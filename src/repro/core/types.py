@@ -80,6 +80,17 @@ class FedGBFConfig:
     rho_feat: float = 1.0             # feature sampling rate (static in the paper)
     base_score: float = 0.0           # initial prediction (paper: y_hat^(0) = 0)
 
+    # Sample-selection policy for the rho_id budget (DESIGN.md §7).
+    # "uniform" — the paper's P_m(j) (eq. 4): uniform without replacement;
+    # "goss"    — gradient-based one-side sampling (LightGBM / SecureBoost+):
+    #             the top-|g| share of the budget is kept deterministically,
+    #             the rest is drawn uniformly from the remaining samples and
+    #             amplified by (n - n_top) / n_rand so histogram stats stay
+    #             unbiased.  Same rho_id schedule, same prefix-stable keys
+    #             (core/forest.py: goss_masks_from_keys).
+    sampling: str = "uniform"
+    goss_top_share: float = 0.5       # fraction of the rho_id budget kept by |g|
+
 
 class EnsembleModel(NamedTuple):
     """A trained (Dynamic) FedGBF model: one forest per boosting round.

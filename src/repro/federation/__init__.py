@@ -1,1 +1,8 @@
-from repro.federation import aggregator, mesh_roles, protocol, secure, vfl  # noqa: F401
+from repro.federation import (  # noqa: F401
+    aggregator,
+    compress,
+    mesh_roles,
+    protocol,
+    secure,
+    vfl,
+)

@@ -17,7 +17,6 @@ Two aggregation modes (DESIGN.md §2, EXPERIMENTS.md §Perf):
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
@@ -25,7 +24,6 @@ import jax.numpy as jnp
 
 from repro.core import histogram as hist_mod
 from repro.core import split as split_mod
-from repro.core.split import SplitDecision
 from repro.core.types import TreeConfig
 from repro.federation import mesh_roles
 
@@ -34,6 +32,7 @@ def federated_histogram_fn(
     party_axis: str = mesh_roles.PARTY_AXIS,
     data_axes: tuple = (),
     base_fn: Callable = hist_mod.compute_histogram,
+    meter=None,
 ):
     """Histogram provider running *inside* shard_map.
 
@@ -41,12 +40,19 @@ def federated_histogram_fn(
     beyond-FATE multi-worker extension — histograms are additive), then
     all-gathers over parties so split selection sees the global histogram,
     mirroring "send summed ciphertext bins to the active party".
+
+    ``meter`` (a ``compress.MessageMeter``) records the actual payload each
+    party ships — the full local float32 (g, h, count) histogram.  Data-axis
+    psums are intra-party (multi-worker) traffic, not protocol bytes, and
+    are not metered.
     """
 
     def fn(binned_shard, g, h, weight, assign, num_nodes, num_bins):
         local = base_fn(binned_shard, g, h, weight, assign, num_nodes, num_bins)
         for ax in data_axes:
             local = jax.lax.psum(local, ax)
+        if meter is not None:
+            meter.record("histograms", local)
         return jax.lax.all_gather(local, party_axis, axis=1, tiled=True)
 
     return fn
@@ -69,40 +75,35 @@ def local_histogram_fn(
     return fn
 
 
-def federated_choose_fn(cfg: TreeConfig, party_axis: str = mesh_roles.PARTY_AXIS):
+def federated_choose_fn(cfg: TreeConfig, party_axis: str = mesh_roles.PARTY_AXIS,
+                        meter=None):
     """Split chooser for the ``argmax`` mode: local best, then global argmax.
 
     Receives the *party-local* histogram (nodes, d_party, B, 3); returns a
     SplitDecision with global feature ids, identical on every party.
+    ``meter`` records the candidate tuples each party ships (12 B per node).
+
+    This IS ``compress.topk_choose_fn`` at k = 1 (one candidate per node per
+    party); delegating keeps the lossless tie-break contract — party-major
+    merge reproducing the centralized first-occurrence rule — in exactly one
+    place.
     """
+    from repro.federation import compress  # local: compress builds on this module
 
-    def fn(hist_local, feature_mask_local):
-        d_party = hist_local.shape[1]
-        p = jax.lax.axis_index(party_axis)
-        local = split_mod.choose_splits(
-            hist_local, feature_mask_local, cfg,
-            feature_offset=p * d_party,
-        )
-        # Exchange only the candidate tuples (the small message).
-        gains = jax.lax.all_gather(local.gain, party_axis)       # (P, nodes)
-        feats = jax.lax.all_gather(local.feature, party_axis)    # (P, nodes)
-        thrs = jax.lax.all_gather(local.threshold, party_axis)   # (P, nodes)
-        best_party = jnp.argmax(gains, axis=0)                   # (nodes,)
-        take = lambda a: jnp.take_along_axis(a, best_party[None, :], axis=0)[0]
-        return SplitDecision(
-            feature=take(feats), threshold=take(thrs), gain=take(gains)
-        )
-
-    return fn
+    return compress.topk_choose_fn(cfg, 1, party_axis, meter)
 
 
-def centralized_choose_fn(cfg: TreeConfig, party_axis: str = mesh_roles.PARTY_AXIS):
+def centralized_choose_fn(cfg: TreeConfig, party_axis: str = mesh_roles.PARTY_AXIS,
+                          meter=None):
     """Split chooser for the ``histogram`` mode: the gathered global histogram
     is evaluated identically on every party (the active party's computation,
     replicated by SPMD). The feature mask arrives as the local slice and is
-    gathered to match the gathered histogram."""
+    gathered to match the gathered histogram. ``meter`` records each party's
+    mask-slice payload (1 B per local feature)."""
 
     def fn(hist_global, feature_mask_local):
+        if meter is not None:
+            meter.record("feature_mask", feature_mask_local)
         fmask = jax.lax.all_gather(
             feature_mask_local, party_axis, axis=0, tiled=True
         )
@@ -111,12 +112,14 @@ def centralized_choose_fn(cfg: TreeConfig, party_axis: str = mesh_roles.PARTY_AX
     return fn
 
 
-def federated_route_fn(party_axis: str = mesh_roles.PARTY_AXIS):
+def federated_route_fn(party_axis: str = mesh_roles.PARTY_AXIS, meter=None):
     """Ownership-masked routing (Alg. 2 step 3 / SecureBoost step 4).
 
     The winning feature belongs to exactly one party; that party computes the
     left/right partition of the frontier samples and the bitmap is shared —
-    in SPMD, a psum of the masked contribution.
+    in SPMD, a psum of the masked contribution.  ``meter`` records the
+    partition payload once per level (int32 (n,) — the owner's message; the
+    other parties' contributions are structurally zero).
     """
 
     def fn(binned_shard, assign, decision):
@@ -131,6 +134,8 @@ def federated_route_fn(party_axis: str = mesh_roles.PARTY_AXIS):
         go_right_local = jnp.where(
             owned & (f_global >= 0), (fv > thr).astype(jnp.int32), 0
         )
+        if meter is not None:
+            meter.record("id_partition", go_right_local)
         go_right = jax.lax.psum(go_right_local, party_axis)
         return assign * 2 + go_right
 

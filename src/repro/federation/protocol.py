@@ -2,9 +2,25 @@
 
 The paper motivates FedGBF by SecureBoost's "high interactive communication
 costs" but never quantifies them; this module does, from first principles, so
-the communication claim becomes measurable (benchmarks/communication.py) and
-so the dry-run's collective-roofline term for the tabular workload has a
-ground truth to compare against.
+the communication claim becomes measurable (benchmarks/comm_bench.py ->
+BENCH_comm.json) and so the dry-run's collective-roofline term for the
+tabular workload has a ground truth to compare against.
+
+Two cost models live here (DESIGN.md §7):
+
+* the **Paillier protocol model** (``tree_cost`` / ``run_cost``) — the
+  paper-world prediction: histogram entries priced as ciphertexts, id
+  partitions as bitmaps, sampling rates shrinking the messages;
+* the **wire model** (``wire_party_tree_cost`` / ``wire_run_cost``) — the
+  predicted *actual* payload of the SPMD implementation (plaintext float32/
+  int payloads, full shard width, the feature mask as its own message),
+  per transport format (raw / quantized / top-k).
+
+``ProtocolLedger`` reconciles the wire model against *measured* bytes — the
+payload sizes every collective in federation/{aggregator,compress,vfl}.py
+reports (``compress.MessageMeter`` / ``probe_tree_cost``).  For the lossless
+transports measured must equal predicted exactly; a mismatch means the
+implementation and the cost model drifted apart.
 
 Message inventory per *tree* (Alg. 2), with n = samples, d_p = party p's
 features, B = bins, L = levels (= max_depth), P = passive parties:
@@ -139,3 +155,198 @@ class Ledger:
         for e in self.entries:
             out[e["phase"]] = out.get(e["phase"], 0) + e["bytes"]
         return out
+
+
+# ---------------------------------------------------------------------------
+# Wire model: predicted ACTUAL payloads of the SPMD implementation
+# ---------------------------------------------------------------------------
+
+#: phases whose recorded payload is per *sending party* — the measured run
+#: cost multiplies them by the passive-party count (the active party's own
+#: contribution never traverses the wire).  ``id_partition`` is counted once
+#: per level: protocol-wise it is the owning party's single message (the
+#: other parties' psum contributions are structurally zero).
+PER_PASSIVE_PHASES = ("grad_broadcast", "histograms", "feature_mask",
+                      "split_candidates")
+
+WIRE_PHASES = ("grad_broadcast", "histograms", "feature_mask",
+               "split_candidates", "id_partition")
+
+
+def wire_party_tree_cost(
+    n_samples: int,
+    d_party: int,
+    num_bins: int,
+    max_depth: int,
+    aggregation: str = "histogram",
+    transport=None,
+) -> dict:
+    """Predicted actual bytes ONE party ships to build ONE tree, mirroring
+    the shard_map implementation payload-for-payload (the quantity
+    ``compress.probe_tree_cost`` measures from the traced program):
+
+      histogram mode   per level: the full local float32 (g, h, count)
+                       histogram ``nodes * d_party * B * 3 * 4`` — or, when
+                       quantized, ``nodes * d_party * (B * 2 * bits/8 +
+                       2 * 4)`` (int payload for the g/h channels + one
+                       float32 scale per (node, feature, channel)) — plus
+                       the bool feature-mask slice (``d_party`` bytes; the
+                       mask rides the wire, it does not shrink the
+                       histogram, unlike the Paillier model's ``rho_feat``);
+      argmax mode      per level: ``nodes * k * 12`` candidate bytes
+                       (gain f32 + feature i32 + threshold i32), k = 1 raw
+                       or ``transport.k`` for top-k;
+      id_partition     per level: the int32 routing vector ``n * 4`` — the
+                       SPMD psum operand covers every sample, masked or not
+                       (counted once, not per party).
+
+    ``transport`` is a ``compress.TransportSpec`` or None (raw).
+    """
+    kind = "raw" if transport is None else transport.kind
+    phases = dict.fromkeys(WIRE_PHASES, 0)
+    for level in range(max_depth):
+        nodes = 2 ** level
+        if aggregation == "histogram":
+            if kind == "quantized":
+                phases["histograms"] += nodes * d_party * (
+                    num_bins * 2 * transport.bits // 8 + 2 * 4
+                )
+            else:
+                phases["histograms"] += nodes * d_party * num_bins * 3 * 4
+            phases["feature_mask"] += d_party
+        else:  # argmax
+            k = transport.k if kind == "topk" else 1
+            k = min(k, d_party * num_bins)
+            phases["split_candidates"] += nodes * k * (4 + 4 + 4)
+        phases["id_partition"] += n_samples * 4
+    return phases
+
+
+def wire_run_cost(spec: ProtocolSpec, cfg: FedGBFConfig, transport=None) -> dict:
+    """Predicted actual bytes for a full training run under ``cfg``.
+
+    Per-passive-party phases scale by the passive count; ``party_dims`` must
+    be the *even shard* dims the implementation runs with (``d_global /
+    parties`` after ``data.tabular.pad_features``).  The (g, h) broadcast is
+    ``n * 2 * 4`` bytes per passive party per round — the arrays enter the
+    program replicated and full-length regardless of the sampling schedule
+    (the Paillier model's id-list shrinkage has no wire counterpart here).
+    """
+    d_party = spec.party_dims[-1]
+    per_tree = wire_party_tree_cost(
+        spec.n_samples, d_party, spec.num_bins, spec.max_depth,
+        spec.aggregation, transport,
+    )
+    grad_per_round = spec.n_samples * 2 * 4
+    return _assemble_run_cost(per_tree, grad_per_round,
+                              spec.passive_parties, cfg)
+
+
+def measured_run_cost(
+    per_tree: dict, grad_per_round: int, passive_parties: int,
+    cfg: FedGBFConfig,
+) -> dict:
+    """Scale ``compress.probe_tree_cost`` measurements up to a full run with
+    the exact schedule arithmetic of ``wire_run_cost`` — the two dicts must
+    match key-for-key for lossless AND quantized transports (payload sizes
+    are shape-determined either way).
+
+    Scope of the reconciliation: the *per-tree payloads* are the genuinely
+    independent cross-check (traced operands vs hand-derived formulas); the
+    schedule/passive-party scaling is deliberately shared between both
+    sides (``_assemble_run_cost``), so drift in that arithmetic moves
+    measured and predicted together and is covered by the protocol-model
+    tests instead, not by ``ProtocolLedger.matches()``."""
+    return _assemble_run_cost(per_tree, grad_per_round, passive_parties, cfg)
+
+
+def _assemble_run_cost(per_tree, grad_per_round, passive_parties, cfg) -> dict:
+    out = dict.fromkeys(WIRE_PHASES, 0)
+    for m in range(1, cfg.rounds + 1):
+        n_trees = dynamic.n_trees_schedule(cfg, m)
+        out["grad_broadcast"] += passive_parties * grad_per_round
+        for phase, nbytes in per_tree.items():
+            mult = passive_parties if phase in PER_PASSIVE_PHASES else 1
+            out[phase] = out.get(phase, 0) + mult * n_trees * nbytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclass
+class ProtocolLedger:
+    """Measured-vs-predicted accounting for one training run (DESIGN.md §7).
+
+    ``spec``/``cfg``/``transport`` fix the predicted wire model;
+    ``record_measured`` accumulates the measured side (from
+    ``compress.probe_tree_cost`` scaled by the schedule, or any driver
+    recording live).  ``reconcile`` diffs the two per phase — exact equality
+    is the contract for every transport (payload sizes are shape-determined
+    even when the *values* are lossy), asserted by ``federation/selftest.py``
+    and reported in BENCH_comm.json.
+    """
+
+    spec: ProtocolSpec
+    cfg: FedGBFConfig
+    transport: object = None     # compress.TransportSpec or None (raw)
+    measured: dict = field(default_factory=dict)
+
+    def record_measured(self, phase: str, nbytes: int) -> None:
+        self.measured[phase] = self.measured.get(phase, 0) + int(nbytes)
+
+    def record_run(self, per_tree: dict, grad_per_round: int) -> None:
+        """Accumulate a whole run's measured bytes from a per-tree probe."""
+        run = measured_run_cost(
+            per_tree, grad_per_round, self.spec.passive_parties, self.cfg
+        )
+        for phase, nbytes in run.items():
+            if phase != "total":
+                self.record_measured(phase, nbytes)
+
+    def predicted(self) -> dict:
+        """Wire-model prediction (actual plaintext payloads)."""
+        return wire_run_cost(self.spec, self.cfg, self.transport)
+
+    def predicted_paillier(self) -> ProtocolCosts:
+        """Paper-world protocol prediction (Paillier ciphertext rates)."""
+        return run_cost(self.spec, self.cfg)
+
+    def measured_total(self) -> int:
+        return sum(self.measured.values())
+
+    def reconcile(self) -> dict:
+        """Per-phase {predicted, measured, delta, match}; 'match' is exact."""
+        pred = self.predicted()
+        phases = [p for p in pred if p != "total"]
+        out = {}
+        for phase in phases:
+            p, m = pred[phase], self.measured.get(phase, 0)
+            out[phase] = {"predicted": p, "measured": m,
+                          "delta": m - p, "match": m == p}
+        out["total"] = {
+            "predicted": pred["total"], "measured": self.measured_total(),
+            "delta": self.measured_total() - pred["total"],
+            "match": self.measured_total() == pred["total"],
+        }
+        return out
+
+    def matches(self) -> bool:
+        return all(v["match"] for v in self.reconcile().values())
+
+    def breakdown(self) -> dict:
+        """Per-phase measured/predicted totals plus per-*mode* wire totals
+        (histogram vs argmax under this spec/cfg, raw transport), so
+        benchmarks diff the modes without re-deriving the schedule math."""
+        from dataclasses import replace
+
+        modes = {}
+        for agg in ("histogram", "argmax"):
+            modes[agg] = wire_run_cost(
+                replace(self.spec, aggregation=agg), self.cfg
+            )["total"]
+        return {
+            "measured": dict(self.measured),
+            "measured_total": self.measured_total(),
+            "predicted": self.predicted(),
+            "predicted_paillier": self.predicted_paillier().breakdown(),
+            "modes": modes,
+        }

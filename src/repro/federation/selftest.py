@@ -1,4 +1,20 @@
-"""Losslessness self-check: federated (shard_map) == centralized trees.
+"""Federated-vs-centralized self-checks: strict losslessness + tolerance.
+
+Two equivalence contracts (DESIGN.md §7):
+
+* **strict** (``check*``): lossless backends (raw transports, top-k
+  candidate pruning, GOSS masks over a lossless transport) must produce
+  trees *bit-identical* to the centralized builder — the SecureBoost
+  property the paper's §4.2.1 relies on.
+* **tolerance** (``check_tolerance``): lossy transports (quantized
+  histogram exchange) cannot be bit-identical by construction; the contract
+  is instead a bound on the end-metric delta of a full training run against
+  the centralized model (same config, same rng, same masks).
+
+Plus **reconciliation** (``check_reconciliation``): the bytes every
+collective actually ships (``compress.probe_tree_cost``) must equal the
+predicted wire model (``protocol.wire_run_cost``) *exactly*, for every
+transport — payload sizes are shape-determined even when values are lossy.
 
 Run in a subprocess with multiple CPU devices, e.g.:
 
@@ -18,9 +34,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import use_mesh
-from repro.core import binning, forest, losses
-from repro.core.types import TreeConfig
-from repro.federation import vfl
+from repro.core import binning, boosting, forest, losses, metrics
+from repro.core.types import FedGBFConfig, TreeConfig
+from repro.federation import compress, protocol, vfl
 
 
 def check(num_parties: int, aggregation: str, shard_samples: bool) -> None:
@@ -119,6 +135,154 @@ def check_no_valid_split(num_parties: int, aggregation: str, degenerate: str) ->
     )
 
 
+def check_topk_lossless(num_parties: int, k: int) -> None:
+    """Top-k candidate pruning is lossless for ANY k >= 1: every party's own
+    best candidate is in its top-k, and the party-major merge reproduces the
+    centralized first-occurrence tie-break (compress.topk_choose_fn)."""
+    mesh = jax.make_mesh((1, num_parties), ("data", "model"))
+    rng = np.random.default_rng(5)
+    n, d = 512, num_parties * 3
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+    cfg = TreeConfig(max_depth=3, num_bins=16)
+
+    binned, _ = binning.fit_bin(x, cfg.num_bins)
+    g, h = losses.grad_hess("logistic", y, jnp.zeros(n))
+    smask, fmask = forest.sample_masks(jax.random.PRNGKey(7), n, d, 4, 0.8, 1.0)
+
+    trees_c, pred_c = forest.build_forest(binned, g, h, smask, fmask, cfg)
+    backend = vfl.make_vfl_backend(
+        mesh, cfg, aggregation="argmax",
+        transport=compress.TransportSpec(kind="topk", k=k),
+    )
+    with use_mesh(mesh):
+        trees_f, pred_f = backend.build_forest(binned, g, h, smask, fmask, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(trees_c.feature), np.asarray(trees_f.feature),
+        err_msg=f"topk feature mismatch (k={k})",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(trees_c.threshold), np.asarray(trees_f.threshold)
+    )
+    np.testing.assert_allclose(
+        np.asarray(pred_c), np.asarray(pred_f), rtol=1e-5, atol=1e-6
+    )
+    print(f"OK topk lossless: parties={num_parties} k={k}")
+
+
+def check_goss_lossless(num_parties: int, aggregation: str) -> None:
+    """GOSS is a masking policy, not a transport: the same weighted masks
+    fed to the centralized and federated builders must yield bit-identical
+    trees (weights ride the existing sample_mask channel)."""
+    mesh = jax.make_mesh((1, num_parties), ("data", "model"))
+    rng = np.random.default_rng(11)
+    n, d = 512, num_parties * 2
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+    cfg = TreeConfig(max_depth=3, num_bins=16)
+
+    binned, _ = binning.fit_bin(x, cfg.num_bins)
+    g, h = losses.grad_hess("logistic", y, jnp.zeros(n))
+    n_top, n_rand = forest.goss_counts(n, 0.4, 0.5)
+    smask, fmask = forest.goss_masks(
+        jax.random.PRNGKey(9), g, d, 3, n_top, n_rand, d
+    )
+
+    trees_c, pred_c = forest.build_forest(binned, g, h, smask, fmask, cfg)
+    backend = vfl.make_vfl_backend(mesh, cfg, aggregation=aggregation)
+    with use_mesh(mesh):
+        trees_f, pred_f = backend.build_forest(binned, g, h, smask, fmask, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(trees_c.feature), np.asarray(trees_f.feature),
+        err_msg=f"goss feature mismatch ({aggregation})",
+    )
+    np.testing.assert_allclose(
+        np.asarray(trees_c.leaf_weight), np.asarray(trees_f.leaf_weight),
+        rtol=1e-5, atol=1e-6,
+    )
+    print(f"OK goss lossless: parties={num_parties} aggregation={aggregation}")
+
+
+def check_tolerance(
+    num_parties: int, aggregation: str, transport, bound: float = 5e-3
+) -> None:
+    """Tolerance-based equivalence for LOSSY transports (DESIGN.md §7).
+
+    A quantized exchange cannot reproduce centralized trees bit-for-bit;
+    the contract is a bound on the end-metric delta: train the same config
+    with the same rng centralized and federated-lossy, and require
+    |AUC_c - AUC_f| and |logloss_c - logloss_f| within ``bound``.
+    """
+    mesh = jax.make_mesh((1, num_parties), ("data", "model"))
+    rng = np.random.default_rng(17)
+    n, d = 2000, num_parties * 2
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    logit = x[:, 0] - 0.8 * x[:, 1] + 0.5 * x[:, 2] * x[:, 3]
+    y = (logit + rng.normal(0, 0.7, n) > 0).astype(np.float32)
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    cfg = FedGBFConfig(
+        rounds=4, n_trees_max=3, n_trees_min=2, rho_id_min=0.5, rho_id_max=0.8,
+        tree=TreeConfig(max_depth=3, num_bins=32),
+    )
+
+    model_c, _ = boosting.train_fedgbf(x, y, cfg, jax.random.PRNGKey(0))
+    backend = vfl.make_vfl_backend(
+        mesh, cfg.tree, aggregation=aggregation, transport=transport
+    )
+    with use_mesh(mesh):
+        model_f, _ = boosting.train_fedgbf(
+            x, y, cfg, jax.random.PRNGKey(0), backend=backend
+        )
+    deltas = {}
+    for name, fn in (
+        ("auc", lambda m: float(metrics.auc(y, boosting.predict(m, x)))),
+        ("logloss", lambda m: float(losses.loss_value(
+            "logistic", y, boosting.predict(m, x)))),
+    ):
+        deltas[name] = abs(fn(model_c) - fn(model_f))
+        assert deltas[name] <= bound, (
+            f"{name} delta {deltas[name]:.2e} exceeds tolerance {bound:.0e} "
+            f"({aggregation}, transport={transport.tag})"
+        )
+    print(
+        f"OK tolerance: parties={num_parties} transport={transport.tag} "
+        + " ".join(f"d_{k}={v:.1e}" for k, v in deltas.items())
+    )
+
+
+def check_reconciliation(num_parties: int, aggregation: str, transport,
+                         shard_samples: bool = False) -> None:
+    """Measured collective payloads == predicted wire model, exactly."""
+    data_dim = len(jax.devices()) // num_parties if shard_samples else 1
+    mesh = jax.make_mesh((data_dim, num_parties), ("data", "model"))
+    tree = TreeConfig(max_depth=3, num_bins=32)
+    n, d = 1536, num_parties * 2
+    per_tree, grad = compress.probe_tree_cost(
+        mesh, tree, aggregation=aggregation, transport=transport,
+        n_samples=n, num_features=d, shard_samples=shard_samples,
+    )
+    cfg = FedGBFConfig(rounds=3, n_trees_max=4, n_trees_min=2,
+                       rho_id_min=0.2, rho_id_max=0.5)
+    spec = protocol.ProtocolSpec(
+        n_samples=n, party_dims=(d // num_parties,) * num_parties,
+        num_bins=tree.num_bins, max_depth=tree.max_depth,
+        aggregation=aggregation,
+    )
+    ledger = protocol.ProtocolLedger(spec=spec, cfg=cfg, transport=transport)
+    ledger.record_run(per_tree, grad)
+    rec = ledger.reconcile()
+    assert ledger.matches(), (
+        f"measured != predicted for {aggregation}"
+        f"/{transport.tag if transport else 'raw'}: {rec}"
+    )
+    tag = transport.tag if transport else "raw"
+    print(
+        f"OK reconciliation: parties={num_parties} {aggregation}/{tag} "
+        f"shard_samples={shard_samples} "
+        f"total={rec['total']['measured']} bytes (exact match)"
+    )
+
+
 def main() -> int:
     n_dev = len(jax.devices())
     if n_dev < 4:
@@ -131,6 +295,25 @@ def main() -> int:
     for aggregation in ("histogram", "argmax"):
         for degenerate in ("gamma", "min_child_weight"):
             check_no_valid_split(4, aggregation, degenerate)
+    # Compression subsystem (DESIGN.md §7): strict for the lossless pieces,
+    # tolerance for the quantized transports, exact byte reconciliation for all.
+    for k in (1, 4):
+        check_topk_lossless(num_parties=4, k=k)
+    for aggregation in ("histogram", "argmax"):
+        check_goss_lossless(num_parties=4, aggregation=aggregation)
+    for transport in (compress.Q8, compress.Q16):
+        check_tolerance(num_parties=2, aggregation="histogram",
+                        transport=transport)
+    for aggregation, transport in (
+        ("histogram", None), ("histogram", compress.Q8),
+        ("histogram", compress.Q16), ("argmax", None),
+        ("argmax", compress.TOPK),
+    ):
+        check_reconciliation(4, aggregation, transport)
+    # sharded: the data-sharded routing psum must scale back to the global
+    # payload (per-shard slice x shard count)
+    check_reconciliation(4, "histogram", compress.Q8, shard_samples=True)
+    check_reconciliation(2, "argmax", None, shard_samples=True)
     print("ALL FEDERATION SELF-TESTS PASSED")
     return 0
 

@@ -22,7 +22,7 @@ from repro.compat import shard_map
 from repro.core import forest as forest_mod
 from repro.core.backend import BackendDescriptor, TreeBackend, register_backend
 from repro.core.types import TreeConfig
-from repro.federation import aggregator, mesh_roles
+from repro.federation import aggregator, compress, mesh_roles
 
 
 def make_vfl_backend(
@@ -31,6 +31,8 @@ def make_vfl_backend(
     aggregation: str = "histogram",
     party_axis: str = mesh_roles.PARTY_AXIS,
     shard_samples: bool = False,
+    transport=None,
+    meter=None,
 ) -> TreeBackend:
     """Construct the vertically-federated TreeBackend (DESIGN.md §1).
 
@@ -47,28 +49,65 @@ def make_vfl_backend(
         "argmax" (beyond-paper candidate-only exchange; see aggregator.py).
       shard_samples: also shard the sample axis over the data axes (the
         multi-worker extension; histograms/leaf stats psum over those axes).
+      transport: ``compress.TransportSpec`` selecting the wire format of the
+        per-level exchange (DESIGN.md §7): None/"raw" = full-precision
+        float32; "quantized" (histogram mode) = int8/int16 payloads +
+        per-(node, feature, channel) scales; "topk" (argmax mode) = k
+        candidates per node per party.
+      meter: ``compress.MessageMeter`` — when given, every party-axis
+        collective records its actual payload size at trace time (use via
+        ``compress.probe_tree_cost``; see MessageMeter for semantics).
     """
     cfg = tree
     num_parties = mesh.shape[party_axis]
     data_axes = mesh_roles.data_axes(mesh) if shard_samples else ()
+    if transport is None:
+        transport = compress.RAW
 
     if aggregation == "histogram":
-        histogram_fn = aggregator.federated_histogram_fn(party_axis, data_axes)
-        choose_fn = aggregator.centralized_choose_fn(cfg, party_axis)
+        if transport.kind == "quantized":
+            histogram_fn = compress.quantized_histogram_fn(
+                party_axis, data_axes, transport, meter=meter
+            )
+        elif transport.kind == "raw":
+            histogram_fn = aggregator.federated_histogram_fn(
+                party_axis, data_axes, meter=meter
+            )
+        else:
+            raise ValueError(
+                f"transport {transport.kind!r} does not apply to the "
+                "histogram aggregation (use 'raw' or 'quantized')"
+            )
+        choose_fn = aggregator.centralized_choose_fn(cfg, party_axis, meter=meter)
     elif aggregation == "argmax":
         histogram_fn = aggregator.local_histogram_fn(party_axis, data_axes)
-        choose_fn = aggregator.federated_choose_fn(cfg, party_axis)
+        if transport.kind == "topk":
+            choose_fn = compress.topk_choose_fn(
+                cfg, transport.k, party_axis, meter=meter
+            )
+        elif transport.kind == "raw":
+            choose_fn = aggregator.federated_choose_fn(cfg, party_axis, meter=meter)
+        else:
+            raise ValueError(
+                f"transport {transport.kind!r} does not apply to the "
+                "argmax aggregation (use 'raw' or 'topk')"
+            )
     else:
         raise ValueError(f"unknown aggregation {aggregation!r}")
-    route_fn = aggregator.federated_route_fn(party_axis)
+    route_fn = aggregator.federated_route_fn(party_axis, meter=meter)
     leaf_fn = aggregator.local_histogram_fn(party_axis="", data_axes=data_axes)
 
+    impl = f"vfl-{aggregation}"
+    if transport.kind != "raw":
+        impl += f"-{transport.tag}"
     descriptor = BackendDescriptor(
-        impl=f"vfl-{aggregation}" + ("-sharded" if shard_samples else ""),
+        impl=impl + ("-sharded" if shard_samples else ""),
         num_parties=num_parties,
         party_axis=party_axis,
         data_axes=data_axes,
         shard_samples=shard_samples,
+        transport=transport.tag,
+        transport_spec=None if transport.kind == "raw" else transport,
     )
     inner = TreeBackend(
         descriptor=descriptor,
@@ -142,11 +181,20 @@ def make_vfl_backend(
 
     def forest_builder(binned, g, h, sample_mask, feature_mask, _cfg=None):
         _check(binned, _cfg)
+        if meter is not None:
+            # The per-round (g, h) broadcast active -> each passive party.
+            # Not a collective here (the derivatives enter replicated), so
+            # it is metered at the program boundary from the actual arrays.
+            meter.record("grad_broadcast", g)
+            meter.record("grad_broadcast", h)
         return _run(binned, g, h, sample_mask.astype(jnp.float32), feature_mask)
 
     def forest_builder_per_tree(binned, g, h, sample_mask, feature_mask,
                                 _cfg=None):
         _check(binned, _cfg)
+        if meter is not None:
+            meter.record("grad_broadcast", g)
+            meter.record("grad_broadcast", h)
         return _run_per_tree(
             binned, g, h, sample_mask.astype(jnp.float32), feature_mask
         )
@@ -189,23 +237,48 @@ def make_federated_forest_fn(
 
 # Registry entries: vfl backends bind a mesh + tree config at construction,
 # e.g. ``get_backend("vfl-argmax", mesh=mesh, tree=TreeConfig(...))``.
-def _vfl_factory(aggregation: str, shard_samples: bool):
+# Compressed-transport variants (DESIGN.md §7) are distinct registry names,
+# not kwargs, so scaling work stays registry factories per DESIGN.md §1.
+def _vfl_factory(aggregation: str, shard_samples: bool, transport=None):
     def factory(mesh=None, tree=None, **kw):
         if mesh is None or tree is None:
             raise ValueError(
                 "vfl backends need mesh= and tree= (a TreeConfig), e.g. "
                 "get_backend('vfl-histogram', mesh=mesh, tree=TreeConfig())"
             )
+        explicit = kw.pop("transport", None)
+        if (transport is not None and explicit is not None
+                and explicit != transport):
+            # The registry name encodes the transport (DESIGN.md §1/§7); a
+            # conflicting explicit spec would silently ship a different wire
+            # format than the name promises.
+            raise ValueError(
+                f"backend name encodes transport {transport.tag!r} but "
+                f"transport= {explicit!r} was passed; drop the kwarg or use "
+                "the matching registry name"
+            )
         return make_vfl_backend(
-            mesh, tree, aggregation=aggregation, shard_samples=shard_samples, **kw
+            mesh, tree, aggregation=aggregation, shard_samples=shard_samples,
+            transport=transport if transport is not None else explicit, **kw
         )
 
     return factory
 
 
-for _agg in ("histogram", "argmax"):
-    register_backend(f"vfl-{_agg}", _vfl_factory(_agg, shard_samples=False))
-    register_backend(f"vfl-{_agg}-sharded", _vfl_factory(_agg, shard_samples=True))
+_TRANSPORTS = {
+    "histogram": (("", None), ("-q8", compress.Q8), ("-q16", compress.Q16)),
+    "argmax": (("", None), ("-topk", compress.TOPK)),
+}
+for _agg, _variants in _TRANSPORTS.items():
+    for _suffix, _transport in _variants:
+        register_backend(
+            f"vfl-{_agg}{_suffix}",
+            _vfl_factory(_agg, shard_samples=False, transport=_transport),
+        )
+        register_backend(
+            f"vfl-{_agg}{_suffix}-sharded",
+            _vfl_factory(_agg, shard_samples=True, transport=_transport),
+        )
 
 
 def party_shardings(mesh: Mesh, party_axis: str = mesh_roles.PARTY_AXIS):

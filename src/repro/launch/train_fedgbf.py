@@ -15,6 +15,7 @@ Execution is selected by a named ``TreeBackend`` from the registry
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -24,10 +25,13 @@ from repro.core import backend as backend_mod
 from repro.core import boosting, metrics
 from repro.core.types import TreeConfig
 from repro.data import synthetic, tabular
-from repro.federation import protocol, vfl  # noqa: F401  (registers vfl-*)
+from repro.federation import vfl  # noqa: F401  (registers vfl-* backends)
 
-VFL_BACKENDS = ("vfl-histogram", "vfl-argmax",
-                "vfl-histogram-sharded", "vfl-argmax-sharded")
+# All registered backends are launchable, incl. the compressed-transport
+# variants (vfl-histogram-q8/q16, vfl-argmax-topk; DESIGN.md §7).
+VFL_BACKENDS = tuple(
+    n for n in backend_mod.available_backends() if n.startswith("vfl")
+)
 
 
 def main() -> None:
@@ -52,6 +56,10 @@ def main() -> None:
     ap.add_argument("--eval-every", type=int, default=1,
                     help="evaluate metrics every k rounds (schedule and "
                          "timing are recorded every round regardless)")
+    ap.add_argument("--sampling", default="uniform",
+                    choices=("uniform", "goss"),
+                    help="rho_id sample policy: uniform (paper eq. 4) or "
+                         "GOSS (top-|g| + amplified random rest; DESIGN.md §7)")
     args = ap.parse_args()
 
     ds = synthetic.load(args.dataset, n=args.n or None)
@@ -65,6 +73,8 @@ def main() -> None:
         "federated_forest": lambda: boosting.federated_forest_config(
             n_trees=args.rounds, tree=tree),
     }[args.model]()
+    if args.sampling != "uniform":
+        cfg = dataclasses.replace(cfg, sampling=args.sampling)
 
     x_train, y_train = ds.x_train, ds.y_train
     federated = args.backend in VFL_BACKENDS
@@ -92,16 +102,25 @@ def main() -> None:
                 x_train, y_train = x_train[:n_keep], y_train[:n_keep]
         backend = backend_mod.get_backend(args.backend, mesh=mesh, tree=tree)
         print(f"backend={backend.name}: {args.parties} parties, "
-              f"aggregation={aggregation}")
-        spec = protocol.ProtocolSpec(
-            n_samples=x_train.shape[0],
-            party_dims=tuple([d_pad // args.parties] * args.parties),
-            num_bins=32, max_depth=args.max_depth,
-            aggregation=aggregation,
+              f"aggregation={aggregation}, "
+              f"transport={backend.descriptor.transport}")
+        # measured wire bytes reconciled against the wire model, plus the
+        # paper-world Paillier estimate — one shared entry (DESIGN.md §7)
+        from repro.federation import compress
+
+        ledger = compress.reconciled_ledger(
+            mesh, tree, cfg, aggregation=aggregation,
+            transport=backend.descriptor.transport_spec,
+            n_samples=x_train.shape[0], num_features=d_pad,
+            shard_samples=args.backend.endswith("-sharded"),
         )
-        cost = protocol.run_cost(spec, cfg)
-        print(f"protocol bytes (ledger): {cost.total/1e6:.1f} MB "
+        cost = ledger.predicted_paillier()
+        print(f"paillier-model bytes (ledger): {cost.total/1e6:.1f} MB "
               f"{cost.breakdown()}")
+        rec = ledger.reconcile()
+        print(f"wire bytes: measured={rec['total']['measured']/1e6:.1f} MB "
+              f"predicted={rec['total']['predicted']/1e6:.1f} MB "
+              f"(match={rec['total']['match']})")
     else:
         backend = backend_mod.get_backend(args.backend)
 

@@ -35,6 +35,50 @@ def test_feature_importance_finds_signal():
     assert np.argmax(imp) in (0, 1)
 
 
+def test_feature_importance_packed_parity():
+    """The PackedEnsemble path (tree_scale-weighted) matches the per-round
+    forests path to float tolerance, for both kinds — so checkpoint-loaded
+    packed models are explainable without unpacking."""
+    from repro.core.types import pack_ensemble
+
+    model, d = _tiny_model()
+    # plus a dynamic-schedule model: ragged rounds exercise per-round
+    # tree_scale weights (lr / n_trees varies across the packed tree axis)
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(600, 5)).astype(np.float32)
+    y = ((x[:, 0] + rng.normal(0, 0.3, 600)) > 0).astype(np.float32)
+    dyn_cfg = FedGBFConfig(rounds=4, n_trees_max=5, n_trees_min=2,
+                           rho_id_min=0.4, rho_id_max=0.8,
+                           tree=TreeConfig(max_depth=3, num_bins=16))
+    dyn_model, _ = boosting.train_fedgbf(
+        jnp.asarray(x), jnp.asarray(y), dyn_cfg, jax.random.PRNGKey(2))
+    for m, dd in ((model, d), (dyn_model, 5)):
+        pe = pack_ensemble(m)
+        for kind in ("gain", "count"):
+            ref = explain.feature_importance(m, dd, kind)
+            packed = explain.feature_importance(pe, dd, kind)
+            np.testing.assert_allclose(packed, ref, rtol=1e-5, atol=1e-8)
+
+
+def test_feature_importance_packed_from_checkpoint(tmp_path):
+    """End-to-end: a reloaded packed checkpoint explains like the original
+    model (the serving-side use case the PackedEnsemble path exists for)."""
+    from repro.checkpoint import io as ckpt_io
+
+    model, d = _tiny_model(rounds=2)
+    path = str(tmp_path / "ckpt")
+    ckpt_io.save_ensemble(path, model)
+    loaded = ckpt_io.load_ensemble(path)
+    np.testing.assert_allclose(
+        explain.feature_importance(loaded, d),
+        explain.feature_importance(model, d),
+        rtol=1e-5, atol=1e-8,
+    )
+    part = tabular.partition_from_dims([2, 4])
+    pi = explain.party_importance(loaded, part)
+    assert sum(pi.values()) == pytest.approx(1.0)
+
+
 def test_party_importance_partitions_to_one():
     model, d = _tiny_model()
     part = tabular.partition_from_dims([2, 4])

@@ -70,6 +70,48 @@ def test_scanned_engine_history_equals_loop(loss):
             rtol=1e-5, atol=1e-6)
 
 
+def test_goss_sampling_scan_equals_loop():
+    """The GOSS rho-mask (DESIGN.md §7) rides the scan engine unchanged:
+    per-slot keys stay prefix-stable, so loop and scan draw identical GOSS
+    masks from the round's gradients — trees come out bit-identical and the
+    history metrics agree like the uniform path's."""
+    import dataclasses
+
+    x, y, xv, yv = _data("logistic")
+    cfg = dataclasses.replace(_dyn_cfg("logistic"), sampling="goss",
+                              goss_top_share=0.5)
+    m_loop, h_loop = boosting.train_fedgbf(
+        x, y, cfg, jax.random.PRNGKey(0), x_valid=xv, y_valid=yv, engine="loop")
+    m_scan, h_scan = boosting.train_fedgbf(
+        x, y, cfg, jax.random.PRNGKey(0), x_valid=xv, y_valid=yv, engine="scan")
+    for f_loop, f_scan in zip(m_loop.forests, m_scan.forests):
+        np.testing.assert_array_equal(
+            np.asarray(f_loop.feature), np.asarray(f_scan.feature))
+        np.testing.assert_array_equal(
+            np.asarray(f_loop.threshold), np.asarray(f_scan.threshold))
+    for a, b in zip(h_loop.train, h_scan.train):
+        for k in a:
+            assert abs(a[k] - b[k]) < 1e-5, (k, a[k], b[k])
+
+
+def test_goss_changes_masks_but_trains():
+    """GOSS actually alters the sampling (different trees than uniform) and
+    still learns the signal."""
+    import dataclasses
+
+    x, y, _, _ = _data("logistic", seed=9)
+    cfg_u = _dyn_cfg("logistic", rounds=3)
+    cfg_g = dataclasses.replace(cfg_u, sampling="goss")
+    m_u, h_u = boosting.train_fedgbf(x, y, cfg_u, jax.random.PRNGKey(0))
+    m_g, h_g = boosting.train_fedgbf(x, y, cfg_g, jax.random.PRNGKey(0))
+    assert any(
+        not np.array_equal(np.asarray(fu.feature), np.asarray(fg.feature))
+        or not np.array_equal(np.asarray(fu.threshold), np.asarray(fg.threshold))
+        for fu, fg in zip(m_u.forests, m_g.forests)
+    )
+    assert h_g.train[-1]["auc"] > 0.8
+
+
 @pytest.mark.parametrize("engine", ["loop", "scan"])
 def test_history_records_every_round_with_eval_gating(engine):
     """Satellite guarantee: with eval_every > 1 the schedule and timing are

@@ -1,0 +1,112 @@
+"""CI perf-regression guard for the training/communication hot paths.
+
+Reads the COMMITTED BENCH_train.json / BENCH_comm.json baselines first, then
+re-runs ``train_bench --smoke`` and ``comm_bench --smoke`` (which overwrite
+those files with fresh results), and fails the build if the fresh run
+regresses on any of the contracts this repo has already banked:
+
+  * **compile counts** — the scanned engine (direct AND subtraction
+    pipeline) must still compile exactly 1 XLA program;
+  * **wire bytes** — every backend's measured histogram-phase reduction
+    ratio must not drop below the committed baseline (ratios are
+    shape-determined, so any drop is a real transport change, not noise),
+    and every measured-vs-predicted reconciliation must stay exact;
+  * **acceptance bars** — q8 >= 4x and subtraction >= 1.7x histogram-phase
+    cuts stay satisfied;
+  * **subtraction speedup floor** — the subtraction pipeline's measured
+    on/off speedup must not fall below the conservative ``speedup_floor``
+    recorded in the committed BENCH_train.json (0.75x of the measurement at
+    record time, so CI timing noise passes but a pipeline regression fails).
+
+Timing comparisons are deliberately ratio-of-the-same-run (subtraction on vs
+off inside one bench invocation), never absolute seconds across machines.
+
+    PYTHONPATH=src python -m benchmarks.ci_guard
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+#: ratio slack for shape-determined byte ratios: these are exact quantities,
+#: the epsilon only absorbs float formatting round-trips.
+RATIO_EPS = 1e-6
+
+
+def _load(name: str) -> dict:
+    with open(os.path.join(ROOT, name)) as f:
+        return json.load(f)
+
+
+def main() -> int:
+    base_train = _load("BENCH_train.json")
+    base_comm = _load("BENCH_comm.json")
+
+    from benchmarks import comm_bench, train_bench
+
+    print("== ci_guard: re-running train_bench --smoke ==")
+    train_bench.main(smoke=True)
+    print("== ci_guard: re-running comm_bench --smoke ==")
+    comm_bench.main(smoke=True)
+
+    fresh_train = _load("BENCH_train.json")
+    fresh_comm = _load("BENCH_comm.json")
+
+    failures = []
+
+    def check(cond: bool, msg: str) -> None:
+        print(f"  [{'OK' if cond else 'FAIL'}] {msg}")
+        if not cond:
+            failures.append(msg)
+
+    # -- compile counts ------------------------------------------------------
+    check(fresh_train.get("scan_compiles") == 1,
+          f"scan engine compiles == 1 (got {fresh_train.get('scan_compiles')})")
+    sub = fresh_train.get("subtraction", {})
+    check(sub.get("scan_compiles") == 1,
+          f"subtraction scan compiles == 1 (got {sub.get('scan_compiles')})")
+
+    # -- wire-byte ratios + reconciliation -----------------------------------
+    for name, fresh in fresh_comm.get("backends", {}).items():
+        check(fresh.get("measured_matches_predicted") is True,
+              f"{name}: measured == predicted (ledger reconciliation)")
+        base = base_comm.get("backends", {}).get(name)
+        if base is None:
+            continue  # a newly added backend has no baseline yet
+        b, f = (base.get("histogram_phase_reduction_x"),
+                fresh.get("histogram_phase_reduction_x"))
+        if b is not None and f is not None:
+            check(f >= b - RATIO_EPS,
+                  f"{name}: histogram-phase reduction {f:.3f}x >= "
+                  f"baseline {b:.3f}x")
+
+    acc = fresh_comm.get("acceptance", {})
+    check(acc.get("q8_histogram_phase_reduction_ge_4x") is True,
+          "q8 histogram-phase reduction >= 4x")
+    check(acc.get("sub_histogram_phase_reduction_ge_1.7x") is True,
+          "subtraction histogram-phase reduction >= 1.7x")
+
+    # -- subtraction speedup floor -------------------------------------------
+    floor = base_train.get("subtraction", {}).get("speedup_floor")
+    if floor is not None:
+        got = sub.get("on_off_speedup_x", 0.0)
+        check(got >= floor,
+              f"subtraction on/off speedup {got:.3f}x >= committed floor "
+              f"{floor:.3f}x")
+    else:
+        print("  [--] no committed subtraction speedup floor yet (first run)")
+
+    if failures:
+        print(f"\nci_guard: {len(failures)} check(s) FAILED")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print("\nci_guard: all perf-regression checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

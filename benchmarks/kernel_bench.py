@@ -17,7 +17,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Timer, save_report, scale
-from repro.core.histogram import compute_histogram, compute_histogram_onehot
+from repro.core.histogram import (
+    as_child_fn,
+    compute_histogram,
+    compute_histogram_onehot,
+)
 
 
 def bench(fn, args, repeats=5) -> float:
@@ -44,23 +48,46 @@ def main() -> list:
 
     seg = jax.jit(compute_histogram, static_argnums=(5, 6))
     oh = jax.jit(compute_histogram_onehot, static_argnums=(5, 6))
+    # Child-only pass of the subtraction pipeline (DESIGN.md §8): same inputs
+    # at the SAME frontier (``assign`` spans ``nodes``), accumulating only the
+    # left children at half width — the per-level work replacing a full
+    # ``nodes``-wide pass at every level >= 1.  On the one-hot/MXU
+    # formulation the contraction width (and FLOPs) literally halve; the
+    # segment path saves the segment count.
+    seg_child = jax.jit(as_child_fn(compute_histogram), static_argnums=(5, 6))
+    oh_child = jax.jit(as_child_fn(compute_histogram_onehot),
+                       static_argnums=(5, 6))
 
     t_seg = bench(lambda: seg(binned, g, h, w, assign, nodes, B), ())
     t_oh = bench(lambda: oh(binned, g, h, w, assign, nodes, B), ())
+    t_seg_child = bench(
+        lambda: seg_child(binned, g, h, w, assign, nodes // 2, B), ())
+    t_oh_child = bench(
+        lambda: oh_child(binned, g, h, w, assign, nodes // 2, B), ())
 
     updates = n * d  # one (g,h,count) update per (row, feature)
     vmem_bytes = 512 * nodes * B * 4 + 512 * 8 * 4 * 2  # onehot + ids + data
     save_report("kernel_bench", {
         "n": n, "d": d, "segment_s": t_seg, "onehot_s": t_oh,
+        "segment_child_s": t_seg_child, "onehot_child_s": t_oh_child,
         "updates_per_s_segment": updates / t_seg,
+        "child_speedup_segment_x": t_seg / t_seg_child,
+        "child_speedup_onehot_x": t_oh / t_oh_child,
     })
     print(f"  segment_sum: {t_seg*1e3:.1f} ms  onehot: {t_oh*1e3:.1f} ms "
-          f"({updates/t_seg/1e9:.2f} G updates/s)")
+          f"({updates/t_seg/1e9:.2f} G updates/s)\n"
+          f"  child-only:  {t_seg_child*1e3:.1f} ms "
+          f"({t_seg/t_seg_child:.2f}x)  onehot child: {t_oh_child*1e3:.1f} ms "
+          f"({t_oh/t_oh_child:.2f}x)")
     return [
         ("kernel/histogram_segment", t_seg * 1e6,
          f"{updates/t_seg/1e9:.2f}Gupd/s;n={n};d={d}"),
         ("kernel/histogram_onehot_alg", t_oh * 1e6,
          f"vmem_per_step={vmem_bytes/1024:.0f}KiB"),
+        ("kernel/histogram_child_segment", t_seg_child * 1e6,
+         f"{t_seg/t_seg_child:.2f}x_vs_full;half_frontier"),
+        ("kernel/histogram_child_onehot", t_oh_child * 1e6,
+         f"{t_oh/t_oh_child:.2f}x_vs_full;half_contraction_width"),
     ]
 
 

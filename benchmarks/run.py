@@ -23,12 +23,14 @@ def main() -> None:
         predict_bench,
         roofline_report,
         runtime_model,
+        train_bench,
     )
 
     modules = [
         ("communication", communication),
         ("comm_bench", comm_bench),
         ("kernel_bench", kernel_bench),
+        ("train_bench", train_bench),
         ("predict_bench", predict_bench),
         ("runtime_model", runtime_model),
         ("paper_tables", paper_tables),

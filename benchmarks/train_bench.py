@@ -15,7 +15,11 @@ Reported:
   * ``*_steady_round_s``— warm second call / rounds (the recompile-free
     per-round cost);
   * ``metric_max_abs_diff`` — max |loop - scan| over all history metrics
-    (the 1e-5 equivalence bar of the ISSUE).
+    (the 1e-5 equivalence bar of the ISSUE);
+  * ``subtraction``      — the sibling-subtraction pipeline (DESIGN.md §8)
+    on/off steady-state round time under the scanned engine, its compile
+    count (must stay 1), metric drift vs the direct pipeline, and the
+    conservative ``speedup_floor`` benchmarks/ci_guard.py enforces.
 
 Results land in reports/train_bench.json and the repo-root BENCH_train.json.
 
@@ -25,6 +29,7 @@ Results land in reports/train_bench.json and the repo-root BENCH_train.json.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -99,6 +104,41 @@ def main(smoke: bool = False) -> list:
         abs(a[k] - b[k])
         for a, b in zip(h_loop.train, h_scan.train) for k in a
     )
+
+    # -- sibling-subtraction pipeline (DESIGN.md §8), scanned engine ----------
+    # Same schedule with hist_subtraction on: levels >= 1 accumulate only the
+    # left children and derive the siblings.  Tracked: steady-state round
+    # time on vs off, the compile count (must stay exactly 1 — the switch is
+    # jit-static), and the end-metric drift vs the direct pipeline.  The
+    # recorded ``speedup_floor`` is a deliberately conservative fraction of
+    # the measurement; benchmarks/ci_guard.py fails a future run that drops
+    # below the committed floor.
+    sub_cfg = dataclasses.replace(
+        cfg, tree=dataclasses.replace(cfg.tree, hist_subtraction=True)
+    )
+    jax.clear_caches()
+    _, h_sub_cold, cold_sub = _train("scan", x, y, sub_cfg, eval_every)
+    sub_compiles = boosting._scan_train_program._cache_size()
+    warm_sub = float("inf")
+    for _ in range(warm_repeats):
+        _, h_sub, t = _train("scan", x, y, sub_cfg, eval_every)
+        warm_sub = min(warm_sub, t)
+    on_round = warm_sub / rounds
+    speedup = results["scan_steady_round_s"] / on_round
+    results["subtraction"] = {
+        "scan_compiles": sub_compiles,
+        "cold_s": cold_sub,
+        "on_steady_round_s": on_round,
+        "off_steady_round_s": results["scan_steady_round_s"],
+        "on_off_speedup_x": speedup,
+        "metric_max_abs_diff_vs_direct": max(
+            abs(a[k] - b[k])
+            for a, b in zip(h_scan.train, h_sub.train) for k in a
+        ),
+        # guard floor: 75% of the measured speedup, so normal CI timing noise
+        # passes but a real pipeline regression does not
+        "speedup_floor": round(0.75 * speedup, 3),
+    }
     results["interpretation"] = (
         "the loop compiles one forest program per distinct scheduled tree "
         "count and host-syncs every round; the scanned engine factors the "
@@ -114,12 +154,17 @@ def main(smoke: bool = False) -> list:
     with open(os.path.join(root, "BENCH_train.json"), "w") as f:
         json.dump(results, f, indent=1, default=float)
 
+    sub = results["subtraction"]
     print(
         f"  loop: {results['loop_compiles']} compiles, cold {cold_loop:.2f}s, "
         f"steady {results['loop_steady_round_s']*1e3:.1f} ms/round\n"
         f"  scan: {results['scan_compiles']} compile, cold {cold_scan:.2f}s, "
         f"steady {results['scan_steady_round_s']*1e3:.1f} ms/round "
         f"({results['steady_round_speedup_vs_loop']:.2f}x)\n"
+        f"  scan+subtraction: {sub['scan_compiles']} compile, "
+        f"steady {sub['on_steady_round_s']*1e3:.1f} ms/round "
+        f"({sub['on_off_speedup_x']:.2f}x vs direct, "
+        f"metric |diff| {sub['metric_max_abs_diff_vs_direct']:.1e})\n"
         f"  metric max |diff|: {results['metric_max_abs_diff']:.2e}"
     )
     return [
@@ -127,6 +172,8 @@ def main(smoke: bool = False) -> list:
          f"{results['loop_compiles']} programs"),
         ("train/scan_round", results["scan_steady_round_s"] * 1e6,
          f"1 program, {results['steady_round_speedup_vs_loop']:.2f}x vs loop"),
+        ("train/scan_round_subtraction", sub["on_steady_round_s"] * 1e6,
+         f"1 program, {sub['on_off_speedup_x']:.2f}x vs direct pipeline"),
     ]
 
 

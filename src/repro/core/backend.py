@@ -71,9 +71,20 @@ class TreeBackend:
     Provider semantics (all optional — None selects the centralized default):
 
       histogram_fn  signature of ``core.histogram.compute_histogram``;
+      child_histogram_fn  child-only histogram provider of the subtraction
+                    pipeline (DESIGN.md §8): same signature, but ``assign``
+                    is the current level's assignment and the frontier
+                    argument is the PARENT count — returns left-child
+                    histograms at half width.  None derives it generically
+                    via ``histogram.as_child_fn(histogram_fn)``; backends
+                    override only to fuse the left-mask/parent-id staging
+                    (the Pallas child kernel).  Consulted only when
+                    ``TreeConfig.hist_subtraction`` is set;
       choose_fn     (hist, feature_mask) -> SplitDecision;
       route_fn      (binned, assign, decision) -> new assign;
-      leaf_fn       histogram signature, used for the leaf-stats pass;
+      leaf_fn       signature of ``core.histogram.leaf_stats``
+                    ((g, h, weight, assign, num_leaves) -> (num_leaves, 3)),
+                    used for the leaf-statistics pass;
       forest_builder  full override of ``core.forest.build_forest`` — the
                     federated path uses this to wrap the whole per-round
                     forest construction in one shard_map program with the
@@ -90,6 +101,7 @@ class TreeBackend:
 
     descriptor: BackendDescriptor
     histogram_fn: Optional[Callable] = None
+    child_histogram_fn: Optional[Callable] = None
     choose_fn: Optional[Callable] = None
     route_fn: Optional[Callable] = None
     leaf_fn: Optional[Callable] = None
@@ -201,12 +213,15 @@ def _local_factory(**_kw) -> TreeBackend:
 
 def _local_pallas_factory(**_kw) -> TreeBackend:
     # The fused training-side kernel: id/stats staging happens inside the
-    # kernel (kernels/histogram/train_histogram.py), not in XLA.
+    # kernel (kernels/histogram/train_histogram.py), not in XLA.  The child
+    # variant additionally forms the subtraction pipeline's left-mask and
+    # parent ids in-kernel, so the half-width pass stays staging-free too.
     from repro.core.histogram import histogram_dispatch
 
     return TreeBackend(
         BackendDescriptor(impl="local-pallas", histogram_impl="pallas"),
         histogram_fn=histogram_dispatch("pallas-fused"),
+        child_histogram_fn=histogram_dispatch("pallas-fused-child"),
     )
 
 

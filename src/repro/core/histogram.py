@@ -79,12 +79,85 @@ def compute_histogram_onehot(
     return hist.reshape(d, num_nodes, num_bins, NUM_STATS).transpose(1, 0, 2, 3)
 
 
+# ---------------------------------------------------------------------------
+# Sibling-subtraction pipeline (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+def as_child_fn(histogram_fn):
+    """Adapt any histogram provider into the *child-only* provider of the
+    subtraction pipeline: accumulate only the samples routed to LEFT
+    children, at half-frontier width indexed by parent.
+
+    The child provider keeps the histogram signature except that ``assign``
+    is the CURRENT level's assignment (width ``2 * num_parents``) and the
+    frontier argument is ``num_parents``: left children have even ``assign``
+    (routing is ``assign * 2 + go_right``), so masking odd-assign samples to
+    weight 0 and halving the ids yields exactly the left-child histogram of
+    each parent.  Because the adaptation happens *inside* whatever program
+    ``histogram_fn`` runs (a shard_map collective, a quantized transport…),
+    every transport's wire payload shrinks to the half-width frontier for
+    free.  The Pallas training kernel has a fused variant instead
+    (``kernels/histogram/ops.compute_histogram_pallas_fused_child``) so the
+    mask/halve staging never touches HBM.
+    """
+
+    def fn(binned, g, h, weight, assign, num_parents, num_bins):
+        left_w = weight * (1 - (assign % 2)).astype(weight.dtype)
+        return histogram_fn(binned, g, h, left_w, assign // 2,
+                            num_parents, num_bins)
+
+    return fn
+
+
+def derive_sibling(parent_hist: jnp.ndarray, left_hist: jnp.ndarray) -> jnp.ndarray:
+    """Sibling-subtraction combiner: ``right = parent − left``, interleaved
+    back to the full frontier.
+
+    Args:
+      parent_hist: (P, d, B, 3) — the previous level's histograms; after
+        routing, node ``p``'s samples are exactly the union of its children,
+        so additivity gives ``parent == left + right`` (bit-exact only in
+        exact arithmetic; float reassociation is why the direct pass stays
+        the reference oracle).
+      left_hist: (P, d, B, 3) — left-child histograms indexed by parent
+        (``as_child_fn``).
+
+    Returns:
+      (2P, d, B, 3) with node ``2p`` = left child, ``2p + 1`` = derived
+      right sibling, matching the routing order ``assign * 2 + go_right``.
+    """
+    right = parent_hist - left_hist
+    p, d, b, s = left_hist.shape
+    return jnp.stack([left_hist, right], axis=1).reshape(2 * p, d, b, s)
+
+
+def leaf_stats(
+    g: jnp.ndarray,
+    h: jnp.ndarray,
+    weight: jnp.ndarray,
+    assign: jnp.ndarray,
+    num_leaves: int,
+) -> jnp.ndarray:
+    """Aggregate (G, H, count) per leaf: the leaf-statistics fast path.
+
+    A direct three-channel ``segment_sum`` over the final assignment —
+    bit-identical to (and replacing) the old pseudo-feature
+    ``compute_histogram`` call, which built an (n, 1) zeros operand and a
+    4-D reshape just to read back ``hist[:, 0, 0, :]``.
+
+    Returns (num_leaves, 3) float32.
+    """
+    data = jnp.stack([g * weight, h * weight, weight], axis=-1)  # (n, 3)
+    return jax.ops.segment_sum(data, assign, num_segments=num_leaves)
+
+
 def histogram_dispatch(impl: str = "segment"):
     """Select a histogram implementation by name.
 
     ``"pallas"`` is the original kernel behind an XLA staging wrapper;
     ``"pallas-fused"`` is the training-side kernel that fuses the id/stats
-    staging into the scatter-accumulate (what ``local-pallas`` runs).
+    staging into the scatter-accumulate (what ``local-pallas`` runs);
+    ``"pallas-fused-child"`` is its child-only variant for the subtraction
+    pipeline (left-mask and parent ids formed in-kernel).
     """
     if impl == "segment":
         return compute_histogram
@@ -98,4 +171,8 @@ def histogram_dispatch(impl: str = "segment"):
         from repro.kernels.histogram import ops as _ops
 
         return _ops.compute_histogram_pallas_fused
+    if impl == "pallas-fused-child":
+        from repro.kernels.histogram import ops as _ops
+
+        return _ops.compute_histogram_pallas_fused_child
     raise ValueError(f"unknown histogram impl {impl!r}")

@@ -28,18 +28,39 @@ from repro.core.types import PackedEnsemble, TreeArrays, TreeConfig
 HistogramFn = Callable[..., jnp.ndarray]
 
 
-def route_local(binned: jnp.ndarray, assign: jnp.ndarray, decision) -> jnp.ndarray:
-    """Centralized routing: go right iff bin value strictly above threshold.
+def traverse_level(
+    binned: jnp.ndarray,
+    idx: jnp.ndarray,
+    feature: jnp.ndarray,
+    threshold: jnp.ndarray,
+) -> jnp.ndarray:
+    """The ONE node-traversal gather body: each sample reads its current
+    node's (feature, threshold) and goes right iff its bin value is strictly
+    above the threshold; unsplit nodes (feature == -1, threshold == B) route
+    every sample left.
 
-    Unsplit nodes carry threshold == num_bins, so everything routes left.
+    Shared by builder routing (``route_local``), tree prediction
+    (``predict_tree``), and — via the latter — the ``ensemble_predict``
+    kernel oracle, so the routing semantics live in exactly one place.
+
+    Args:
+      binned: (n, d) int32.
+      idx: (n,) int32 within-level node index.
+      feature / threshold: (width,) int32 — the level's nodes only.
+    Returns:
+      (n,) int32 next-level node index ``idx * 2 + go_right``.
     """
-    n = binned.shape[0]
-    rows = jnp.arange(n)
-    node_feat = decision.feature[assign]   # (n,)
-    node_thr = decision.threshold[assign]  # (n,)
-    fv = binned[rows, jnp.clip(node_feat, 0, None)]
-    go_right = (node_feat >= 0) & (fv > node_thr)
-    return assign * 2 + go_right.astype(jnp.int32)
+    rows = jnp.arange(binned.shape[0])
+    f = feature[idx]    # (n,)
+    t = threshold[idx]  # (n,)
+    fv = binned[rows, jnp.clip(f, 0, None)]
+    go_right = (f >= 0) & (fv > t)
+    return idx * 2 + go_right.astype(jnp.int32)
+
+
+def route_local(binned: jnp.ndarray, assign: jnp.ndarray, decision) -> jnp.ndarray:
+    """Centralized routing: one ``traverse_level`` step over the frontier."""
+    return traverse_level(binned, assign, decision.feature, decision.threshold)
 
 
 def build_tree(
@@ -53,7 +74,7 @@ def build_tree(
     histogram_fn: Optional[HistogramFn] = None,
     choose_fn: Optional[Callable] = None,
     route_fn: Optional[Callable] = None,
-    leaf_fn: Optional[HistogramFn] = None,
+    leaf_fn: Optional[Callable] = None,
 ) -> tuple[TreeArrays, jnp.ndarray]:
     """Build one tree; returns (tree, leaf_assign_for_all_samples).
 
@@ -76,44 +97,65 @@ def build_tree(
         overrides, kept as a shim for direct kernel tests; prefer passing a
         backend.  An explicit fn wins over the backend's provider.
     """
+    explicit_hist = histogram_fn is not None
+    child_fn = None
     if backend is not None:
         histogram_fn = histogram_fn or backend.histogram_fn
         choose_fn = choose_fn or backend.choose_fn
         route_fn = route_fn or backend.route_fn
         leaf_fn = leaf_fn or backend.leaf_fn
+        if not explicit_hist:
+            child_fn = backend.child_histogram_fn
     if histogram_fn is None:
         histogram_fn = hist_mod.compute_histogram
     if choose_fn is None:
         choose_fn = lambda hist, fmask: split_mod.choose_splits(hist, fmask, cfg)
     if route_fn is None:
         route_fn = route_local
+    if cfg.hist_subtraction and child_fn is None:
+        # Any histogram provider adapts into the child-only provider (the
+        # mask/halve staging runs inside its program, so federated transports
+        # ship the half-width payload); backends override only to fuse the
+        # staging (local-pallas).
+        child_fn = hist_mod.as_child_fn(histogram_fn)
 
     n, _ = binned.shape
     assign = jnp.zeros(n, dtype=jnp.int32)  # within-level node index
 
     features, thresholds, gains = [], [], []
+    prev_hist = None
     for level in range(cfg.max_depth):
         num_nodes = 2**level
-        hist = histogram_fn(
-            binned, g, h, sample_mask, assign, num_nodes, cfg.num_bins
-        )
+        if cfg.hist_subtraction and level >= 1:
+            # Subtraction pipeline (DESIGN.md §8): accumulate only the left
+            # children (half-frontier width, indexed by parent) and derive
+            # every right sibling from the carried parent histograms —
+            # halving histogram compute, memory, and (federated) exchanged
+            # bytes at every level past the root.
+            left = child_fn(
+                binned, g, h, sample_mask, assign, num_nodes // 2, cfg.num_bins
+            )
+            hist = hist_mod.derive_sibling(prev_hist, left)
+        else:
+            hist = histogram_fn(
+                binned, g, h, sample_mask, assign, num_nodes, cfg.num_bins
+            )
         decision = choose_fn(hist, feature_mask)
         features.append(decision.feature)
         thresholds.append(decision.threshold)
         gains.append(jnp.maximum(decision.gain, 0.0))
         assign = route_fn(binned, assign, decision)
+        prev_hist = hist
 
     # Leaf statistics: aggregate (G, H, count) per leaf over masked samples.
     # In the VFL protocol the active party owns g, h and the final routing in
     # plaintext, so leaf weights are computed locally (Alg. 2 step 14);
-    # ``leaf_fn`` is only overridden when samples are sharded over the data
-    # axis (psum of the additive stats, no party gather).
+    # ``leaf_fn`` (signature of ``histogram.leaf_stats``) is only overridden
+    # when samples are sharded over the data axis (psum of the additive
+    # stats, no party gather).
     if leaf_fn is None:
-        leaf_fn = hist_mod.compute_histogram
-    leaf_hist = leaf_fn(
-        jnp.zeros((n, 1), dtype=jnp.int32),  # single pseudo-feature, bin 0
-        g, h, sample_mask, assign, cfg.num_leaves, 1,
-    )[:, 0, 0, :]  # (num_leaves, 3)
+        leaf_fn = hist_mod.leaf_stats
+    leaf_hist = leaf_fn(g, h, sample_mask, assign, cfg.num_leaves)
     weights = split_mod.leaf_weights(leaf_hist, cfg)
 
     tree = TreeArrays(
@@ -136,15 +178,15 @@ def predict_tree(tree: TreeArrays, binned: jnp.ndarray, max_depth: int) -> jnp.n
       (n,) float32 raw tree output.
     """
     n = binned.shape[0]
-    rows = jnp.arange(n)
     idx = jnp.zeros(n, dtype=jnp.int32)
     for level in range(max_depth):
         offset = 2**level - 1
-        f = tree.feature[offset + idx]
-        t = tree.threshold[offset + idx]
-        fv = binned[rows, jnp.clip(f, 0, None)]
-        go_right = (f >= 0) & (fv > t)
-        idx = idx * 2 + go_right.astype(jnp.int32)
+        width = 2**level
+        idx = traverse_level(
+            binned, idx,
+            tree.feature[offset:offset + width],
+            tree.threshold[offset:offset + width],
+        )
     return tree.leaf_weight[idx]
 
 

@@ -44,6 +44,16 @@ class TreeConfig:
     gamma: float = 0.0            # minimum gain to split (eq. 1's gamma)
     min_child_weight: float = 1e-3
 
+    # Sibling-subtraction histogram pipeline (DESIGN.md §8): at levels >= 1
+    # compute only the LEFT-child histograms (half-frontier width) and derive
+    # every right sibling as parent - left.  Halves per-level histogram
+    # compute/memory and — on the federated path — the dominant VFL message.
+    # False keeps the direct full-frontier pass, which is the reference
+    # oracle the subtraction path is tested against (float-reassociation
+    # tolerance; the federated-vs-centralized contract stays bit-exact with
+    # the switch set the same on both sides).
+    hist_subtraction: bool = False
+
     @property
     def num_internal(self) -> int:
         return 2 ** self.max_depth - 1

@@ -58,6 +58,18 @@ def federated_histogram_fn(
     return fn
 
 
+# Subtraction pipeline (DESIGN.md §8): the federated child providers are the
+# generic ``histogram.as_child_fn`` adaptation of the providers above — the
+# left-mask/parent-halve staging runs INSIDE the shard_map body, before the
+# party collective, so the all_gather (and the quantized payload, and the
+# meter record) all carry the half-frontier width.  Every party derives the
+# right siblings locally after the merge (``tree.build_tree`` calls
+# ``histogram.derive_sibling`` on the gathered result — in SPMD terms, the
+# active party's subtraction, replicated).  ``build_tree`` derives the
+# adaptation from the inner backend's ``histogram_fn`` automatically; no
+# dedicated federated child provider is needed.
+
+
 def local_histogram_fn(
     party_axis: str = mesh_roles.PARTY_AXIS,
     data_axes: tuple = (),
@@ -68,6 +80,21 @@ def local_histogram_fn(
 
     def fn(binned_shard, g, h, weight, assign, num_nodes, num_bins):
         local = base_fn(binned_shard, g, h, weight, assign, num_nodes, num_bins)
+        for ax in data_axes:
+            local = jax.lax.psum(local, ax)
+        return local
+
+    return fn
+
+
+def local_leaf_fn(data_axes: tuple = ()):
+    """Leaf-statistics provider (``histogram.leaf_stats`` signature): the
+    active party owns g, h and the final routing in plaintext (Alg. 2 step
+    14), so leaf stats are a local pass — psum'd over the sample shards only
+    when the data axes are in play (the additive-stats extension)."""
+
+    def fn(g, h, weight, assign, num_leaves):
+        local = hist_mod.leaf_stats(g, h, weight, assign, num_leaves)
         for ax in data_axes:
             local = jax.lax.psum(local, ax)
         return local

@@ -38,6 +38,13 @@ measurement plumbing that makes every saving verifiable:
 GOSS sample subsampling — the third SecureBoost+ lever — is a sampling-mask
 policy, not a transport, and lives in ``core/forest.py``
 (``goss_masks_from_keys``) gated by ``FedGBFConfig.sampling``.
+
+Sibling subtraction (``TreeConfig.hist_subtraction``, DESIGN.md §8) is a
+*pipeline* lever orthogonal to all of the above: levels >= 1 exchange only
+the left-child histograms (``histogram.as_child_fn`` adapts every provider
+here and in aggregator.py, so quantized payloads halve too) and the ledger's
+wire model halves the per-level node count to match — the reconciliation
+contract stays exact either way.
 """
 
 from __future__ import annotations
@@ -133,7 +140,7 @@ def reconciled_ledger(
     spec = protocol.ProtocolSpec(
         n_samples=n_samples, party_dims=(d // num_parties,) * num_parties,
         num_bins=tree.num_bins, max_depth=tree.max_depth,
-        aggregation=aggregation,
+        aggregation=aggregation, hist_subtraction=tree.hist_subtraction,
     )
     ledger = protocol.ProtocolLedger(spec=spec, cfg=cfg, transport=transport)
     ledger.record_run(per_tree, grad)

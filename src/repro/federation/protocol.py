@@ -81,6 +81,11 @@ class ProtocolSpec:
     max_depth: int = 3
     key_bits: int = 1024       # Paillier modulus
     aggregation: str = "histogram"   # or "argmax"
+    # Sibling-subtraction pipeline (DESIGN.md §8): levels >= 1 exchange only
+    # the left-child histograms (half the frontier); the right siblings are
+    # derived locally by the receiver.  Must mirror the implementation's
+    # ``TreeConfig.hist_subtraction``.
+    hist_subtraction: bool = False
 
     @property
     def ciphertext_bytes(self) -> int:
@@ -101,10 +106,13 @@ def tree_cost(spec: ProtocolSpec, rho_id: float, rho_feat: float) -> ProtocolCos
     partition_bytes = 0
     for level in range(spec.max_depth):
         nodes = 2**level
+        # subtraction: only the left children (half the frontier) traverse
+        # the wire at levels >= 1 — same halving in both cost models.
+        nodes_sent = nodes if (level == 0 or not spec.hist_subtraction) else nodes // 2
         for d_p in spec.party_dims[1:]:  # passive parties only send histograms
             d_eff = max(1, int(round(d_p * rho_feat)))
             if spec.aggregation == "histogram":
-                hist_bytes += nodes * d_eff * spec.num_bins * 2 * ct
+                hist_bytes += nodes_sent * d_eff * spec.num_bins * 2 * ct
             else:  # argmax: gain (f32) + feature (i32) + threshold (i32)
                 hist_bytes += nodes * 12
         notify_bytes += nodes * 12
@@ -180,6 +188,7 @@ def wire_party_tree_cost(
     max_depth: int,
     aggregation: str = "histogram",
     transport=None,
+    hist_subtraction: bool = False,
 ) -> dict:
     """Predicted actual bytes ONE party ships to build ONE tree, mirroring
     the shard_map implementation payload-for-payload (the quantity
@@ -201,18 +210,19 @@ def wire_party_tree_cost(
                        (counted once, not per party).
 
     ``transport`` is a ``compress.TransportSpec`` or None (raw).
+    ``hist_subtraction`` halves the histogram-mode payload node count at
+    levels >= 1 (only the left children ship; DESIGN.md §8) — at depth 3 the
+    per-tree histogram phase drops from 7 to 4 node-histograms, a 1.75× cut.
     """
     kind = "raw" if transport is None else transport.kind
     phases = dict.fromkeys(WIRE_PHASES, 0)
+    hist_levels = wire_hist_level_bytes(
+        d_party, num_bins, max_depth, transport, hist_subtraction
+    )
     for level in range(max_depth):
         nodes = 2 ** level
         if aggregation == "histogram":
-            if kind == "quantized":
-                phases["histograms"] += nodes * d_party * (
-                    num_bins * 2 * transport.bits // 8 + 2 * 4
-                )
-            else:
-                phases["histograms"] += nodes * d_party * num_bins * 3 * 4
+            phases["histograms"] += hist_levels[level]
             phases["feature_mask"] += d_party
         else:  # argmax
             k = transport.k if kind == "topk" else 1
@@ -220,6 +230,30 @@ def wire_party_tree_cost(
             phases["split_candidates"] += nodes * k * (4 + 4 + 4)
         phases["id_partition"] += n_samples * 4
     return phases
+
+
+def wire_hist_level_bytes(
+    d_party: int,
+    num_bins: int,
+    max_depth: int,
+    transport=None,
+    hist_subtraction: bool = False,
+) -> list:
+    """Per-LEVEL histogram-phase bytes one party ships for one tree
+    (histogram aggregation) — the level profile benchmarks record so the
+    subtraction pipeline's shape (full root, half everywhere below) is
+    visible, not just the per-tree total."""
+    kind = "raw" if transport is None else transport.kind
+    per_node = (
+        num_bins * 2 * transport.bits // 8 + 2 * 4 if kind == "quantized"
+        else num_bins * 3 * 4
+    )
+    out = []
+    for level in range(max_depth):
+        nodes = 2 ** level
+        nodes_sent = nodes if (level == 0 or not hist_subtraction) else nodes // 2
+        out.append(nodes_sent * d_party * per_node)
+    return out
 
 
 def wire_run_cost(spec: ProtocolSpec, cfg: FedGBFConfig, transport=None) -> dict:
@@ -235,7 +269,7 @@ def wire_run_cost(spec: ProtocolSpec, cfg: FedGBFConfig, transport=None) -> dict
     d_party = spec.party_dims[-1]
     per_tree = wire_party_tree_cost(
         spec.n_samples, d_party, spec.num_bins, spec.max_depth,
-        spec.aggregation, transport,
+        spec.aggregation, transport, spec.hist_subtraction,
     )
     grad_per_round = spec.n_samples * 2 * 4
     return _assemble_run_cost(per_tree, grad_per_round,
@@ -334,19 +368,31 @@ class ProtocolLedger:
 
     def breakdown(self) -> dict:
         """Per-phase measured/predicted totals plus per-*mode* wire totals
-        (histogram vs argmax under this spec/cfg, raw transport), so
-        benchmarks diff the modes without re-deriving the schedule math."""
+        (histogram vs argmax under this spec/cfg, raw transport, each with
+        and without sibling subtraction), so benchmarks diff the modes
+        without re-deriving the schedule math.  ``hist_phase_by_mode``
+        carries the histogram-phase bytes alone — the quantity the
+        subtraction pipeline halves (7 → 4 node-histograms per depth-3 tree,
+        a 1.75× phase cut, visible as histogram vs histogram+sub)."""
         from dataclasses import replace
 
-        modes = {}
-        for agg in ("histogram", "argmax"):
-            modes[agg] = wire_run_cost(
-                replace(self.spec, aggregation=agg), self.cfg
-            )["total"]
+        modes, hist_phase = {}, {}
+        for name, agg, sub in (
+            ("histogram", "histogram", False),
+            ("histogram+sub", "histogram", True),
+            ("argmax", "argmax", False),
+        ):
+            run = wire_run_cost(
+                replace(self.spec, aggregation=agg, hist_subtraction=sub),
+                self.cfg,
+            )
+            modes[name] = run["total"]
+            hist_phase[name] = run["histograms"]
         return {
             "measured": dict(self.measured),
             "measured_total": self.measured_total(),
             "predicted": self.predicted(),
             "predicted_paillier": self.predicted_paillier().breakdown(),
             "modes": modes,
+            "hist_phase_by_mode": hist_phase,
         }

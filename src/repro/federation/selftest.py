@@ -16,6 +16,14 @@ collective actually ships (``compress.probe_tree_cost``) must equal the
 predicted wire model (``protocol.wire_run_cost``) *exactly*, for every
 transport — payload sizes are shape-determined even when values are lossy.
 
+Sibling subtraction (DESIGN.md §8) slots into the same lattice:
+federated-vs-centralized stays *bit-identical* with the pipeline enabled on
+both sides; subtraction-vs-direct is a float-reassociation *tolerance*
+relation (``check_subtraction_vs_direct``), composing with q8's existing
+tolerance bound; and the half-width child payloads reconcile exactly, with
+the measured histogram-phase cut asserted >= 1.7x at depth 3
+(``check_subtraction_hist_cut``).
+
 Run in a subprocess with multiple CPU devices, e.g.:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -39,7 +47,8 @@ from repro.core.types import FedGBFConfig, TreeConfig
 from repro.federation import compress, protocol, vfl
 
 
-def check(num_parties: int, aggregation: str, shard_samples: bool) -> None:
+def check(num_parties: int, aggregation: str, shard_samples: bool,
+          subtraction: bool = False) -> None:
     mesh_axes = ("data", "model")
     n_dev = len(jax.devices())
     data_dim = n_dev // num_parties
@@ -49,7 +58,7 @@ def check(num_parties: int, aggregation: str, shard_samples: bool) -> None:
     n, d = 512, num_parties * 3
     x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
     y = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
-    cfg = TreeConfig(max_depth=3, num_bins=16)
+    cfg = TreeConfig(max_depth=3, num_bins=16, hist_subtraction=subtraction)
 
     binned, _ = binning.fit_bin(x, cfg.num_bins)
     g, h = losses.grad_hess("logistic", y, jnp.zeros(n))
@@ -79,7 +88,7 @@ def check(num_parties: int, aggregation: str, shard_samples: bool) -> None:
     )
     print(
         f"OK lossless: parties={num_parties} aggregation={aggregation} "
-        f"shard_samples={shard_samples}"
+        f"shard_samples={shard_samples} subtraction={subtraction}"
     )
 
 
@@ -203,8 +212,29 @@ def check_goss_lossless(num_parties: int, aggregation: str) -> None:
     print(f"OK goss lossless: parties={num_parties} aggregation={aggregation}")
 
 
+def _metric_deltas(y, model_a, model_b, x) -> dict:
+    out = {}
+    for name, fn in (
+        ("auc", lambda m: float(metrics.auc(y, boosting.predict(m, x)))),
+        ("logloss", lambda m: float(losses.loss_value(
+            "logistic", y, boosting.predict(m, x)))),
+    ):
+        out[name] = abs(fn(model_a) - fn(model_b))
+    return out
+
+
+def _tolerance_data(num_parties: int):
+    rng = np.random.default_rng(17)
+    n, d = 2000, num_parties * 2
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    logit = x[:, 0] - 0.8 * x[:, 1] + 0.5 * x[:, 2] * x[:, 3]
+    y = (logit + rng.normal(0, 0.7, n) > 0).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
 def check_tolerance(
-    num_parties: int, aggregation: str, transport, bound: float = 5e-3
+    num_parties: int, aggregation: str, transport, bound: float = 5e-3,
+    subtraction: bool = False,
 ) -> None:
     """Tolerance-based equivalence for LOSSY transports (DESIGN.md §7).
 
@@ -212,17 +242,16 @@ def check_tolerance(
     the contract is a bound on the end-metric delta: train the same config
     with the same rng centralized and federated-lossy, and require
     |AUC_c - AUC_f| and |logloss_c - logloss_f| within ``bound``.
+
+    ``subtraction`` composes the sibling-subtraction pipeline with the lossy
+    transport ON BOTH SIDES (the federated-vs-centralized contract compares
+    like with like; subtraction-vs-direct has its own check).
     """
     mesh = jax.make_mesh((1, num_parties), ("data", "model"))
-    rng = np.random.default_rng(17)
-    n, d = 2000, num_parties * 2
-    x = rng.normal(size=(n, d)).astype(np.float32)
-    logit = x[:, 0] - 0.8 * x[:, 1] + 0.5 * x[:, 2] * x[:, 3]
-    y = (logit + rng.normal(0, 0.7, n) > 0).astype(np.float32)
-    x, y = jnp.asarray(x), jnp.asarray(y)
+    x, y = _tolerance_data(num_parties)
     cfg = FedGBFConfig(
         rounds=4, n_trees_max=3, n_trees_min=2, rho_id_min=0.5, rho_id_max=0.8,
-        tree=TreeConfig(max_depth=3, num_bins=32),
+        tree=TreeConfig(max_depth=3, num_bins=32, hist_subtraction=subtraction),
     )
 
     model_c, _ = boosting.train_fedgbf(x, y, cfg, jax.random.PRNGKey(0))
@@ -233,29 +262,55 @@ def check_tolerance(
         model_f, _ = boosting.train_fedgbf(
             x, y, cfg, jax.random.PRNGKey(0), backend=backend
         )
-    deltas = {}
-    for name, fn in (
-        ("auc", lambda m: float(metrics.auc(y, boosting.predict(m, x)))),
-        ("logloss", lambda m: float(losses.loss_value(
-            "logistic", y, boosting.predict(m, x)))),
-    ):
-        deltas[name] = abs(fn(model_c) - fn(model_f))
-        assert deltas[name] <= bound, (
-            f"{name} delta {deltas[name]:.2e} exceeds tolerance {bound:.0e} "
-            f"({aggregation}, transport={transport.tag})"
+    deltas = _metric_deltas(y, model_c, model_f, x)
+    for name, delta in deltas.items():
+        assert delta <= bound, (
+            f"{name} delta {delta:.2e} exceeds tolerance {bound:.0e} "
+            f"({aggregation}, transport={transport.tag}, "
+            f"subtraction={subtraction})"
         )
     print(
         f"OK tolerance: parties={num_parties} transport={transport.tag} "
+        f"subtraction={subtraction} "
         + " ".join(f"d_{k}={v:.1e}" for k, v in deltas.items())
     )
 
 
+def check_subtraction_vs_direct(bound: float = 5e-3) -> None:
+    """Subtraction-vs-direct contract (DESIGN.md §8): the derived right
+    siblings differ from directly accumulated ones only by float
+    reassociation, so full-training end metrics must agree within the same
+    tolerance class as the §7 lossy transports (the trees themselves are
+    typically identical — a near-tie at a split can legitimately flip)."""
+    x, y = _tolerance_data(2)
+    base = FedGBFConfig(
+        rounds=4, n_trees_max=3, n_trees_min=2, rho_id_min=0.5, rho_id_max=0.8,
+        tree=TreeConfig(max_depth=3, num_bins=32),
+    )
+    import dataclasses
+
+    sub = dataclasses.replace(
+        base, tree=dataclasses.replace(base.tree, hist_subtraction=True)
+    )
+    model_d, _ = boosting.train_fedgbf(x, y, base, jax.random.PRNGKey(0))
+    model_s, _ = boosting.train_fedgbf(x, y, sub, jax.random.PRNGKey(0))
+    deltas = _metric_deltas(y, model_d, model_s, x)
+    for name, delta in deltas.items():
+        assert delta <= bound, (
+            f"subtraction-vs-direct {name} delta {delta:.2e} exceeds "
+            f"{bound:.0e}"
+        )
+    print("OK subtraction-vs-direct: "
+          + " ".join(f"d_{k}={v:.1e}" for k, v in deltas.items()))
+
+
 def check_reconciliation(num_parties: int, aggregation: str, transport,
-                         shard_samples: bool = False) -> None:
+                         shard_samples: bool = False,
+                         subtraction: bool = False) -> None:
     """Measured collective payloads == predicted wire model, exactly."""
     data_dim = len(jax.devices()) // num_parties if shard_samples else 1
     mesh = jax.make_mesh((data_dim, num_parties), ("data", "model"))
-    tree = TreeConfig(max_depth=3, num_bins=32)
+    tree = TreeConfig(max_depth=3, num_bins=32, hist_subtraction=subtraction)
     n, d = 1536, num_parties * 2
     per_tree, grad = compress.probe_tree_cost(
         mesh, tree, aggregation=aggregation, transport=transport,
@@ -266,21 +321,46 @@ def check_reconciliation(num_parties: int, aggregation: str, transport,
     spec = protocol.ProtocolSpec(
         n_samples=n, party_dims=(d // num_parties,) * num_parties,
         num_bins=tree.num_bins, max_depth=tree.max_depth,
-        aggregation=aggregation,
+        aggregation=aggregation, hist_subtraction=subtraction,
     )
     ledger = protocol.ProtocolLedger(spec=spec, cfg=cfg, transport=transport)
     ledger.record_run(per_tree, grad)
     rec = ledger.reconcile()
     assert ledger.matches(), (
         f"measured != predicted for {aggregation}"
-        f"/{transport.tag if transport else 'raw'}: {rec}"
+        f"/{transport.tag if transport else 'raw'}"
+        f"{'+sub' if subtraction else ''}: {rec}"
     )
     tag = transport.tag if transport else "raw"
     print(
         f"OK reconciliation: parties={num_parties} {aggregation}/{tag} "
-        f"shard_samples={shard_samples} "
+        f"shard_samples={shard_samples} subtraction={subtraction} "
         f"total={rec['total']['measured']} bytes (exact match)"
     )
+
+
+def check_subtraction_hist_cut(num_parties: int, transport) -> None:
+    """The subtraction pipeline's measured (ledger-reconciled) histogram-phase
+    bytes must show the depth-3 cut: 7 -> 4 node-histograms per tree, i.e.
+    exactly 1.75x (>= the 1.7x acceptance bar) — measured from the traced
+    programs of both pipelines, not from the formulas."""
+    mesh = jax.make_mesh((1, num_parties), ("data", "model"))
+    n, d = 1536, num_parties * 2
+    measured = {}
+    for sub in (False, True):
+        tree = TreeConfig(max_depth=3, num_bins=32, hist_subtraction=sub)
+        per_tree, _ = compress.probe_tree_cost(
+            mesh, tree, aggregation="histogram", transport=transport,
+            n_samples=n, num_features=d,
+        )
+        measured[sub] = per_tree["histograms"]
+    cut = measured[False] / measured[True]
+    tag = transport.tag if transport else "raw"
+    assert cut >= 1.7, (
+        f"histogram-phase cut {cut:.3f}x below the 1.7x bar ({tag})"
+    )
+    print(f"OK subtraction hist cut: {tag} "
+          f"{measured[False]} -> {measured[True]} B/tree ({cut:.2f}x)")
 
 
 def main() -> int:
@@ -292,6 +372,15 @@ def main() -> int:
         for shard_samples in (False, True):
             check(num_parties=4, aggregation=aggregation, shard_samples=shard_samples)
     check(num_parties=2, aggregation="histogram", shard_samples=True)
+    # Sibling subtraction (DESIGN.md §8): federated-vs-centralized stays
+    # bit-identical with the pipeline enabled on BOTH sides; the
+    # subtraction-vs-direct relation is a separate tolerance contract.
+    for aggregation in ("histogram", "argmax"):
+        check(num_parties=4, aggregation=aggregation, shard_samples=False,
+              subtraction=True)
+    check(num_parties=4, aggregation="histogram", shard_samples=True,
+          subtraction=True)
+    check_subtraction_vs_direct()
     for aggregation in ("histogram", "argmax"):
         for degenerate in ("gamma", "min_child_weight"):
             check_no_valid_split(4, aggregation, degenerate)
@@ -304,12 +393,23 @@ def main() -> int:
     for transport in (compress.Q8, compress.Q16):
         check_tolerance(num_parties=2, aggregation="histogram",
                         transport=transport)
+    # q8 composes with the subtraction pipeline under the same bound.
+    check_tolerance(num_parties=2, aggregation="histogram",
+                    transport=compress.Q8, subtraction=True)
     for aggregation, transport in (
         ("histogram", None), ("histogram", compress.Q8),
         ("histogram", compress.Q16), ("argmax", None),
         ("argmax", compress.TOPK),
     ):
         check_reconciliation(4, aggregation, transport)
+    # subtraction: half-width child payloads must reconcile exactly too,
+    # and the measured histogram-phase cut must clear the 1.7x bar.
+    for aggregation, transport in (
+        ("histogram", None), ("histogram", compress.Q8), ("argmax", None),
+    ):
+        check_reconciliation(4, aggregation, transport, subtraction=True)
+    for transport in (None, compress.Q8):
+        check_subtraction_hist_cut(4, transport)
     # sharded: the data-sharded routing psum must scale back to the global
     # payload (per-shard slice x shard count)
     check_reconciliation(4, "histogram", compress.Q8, shard_samples=True)

@@ -95,7 +95,13 @@ def make_vfl_backend(
     else:
         raise ValueError(f"unknown aggregation {aggregation!r}")
     route_fn = aggregator.federated_route_fn(party_axis, meter=meter)
-    leaf_fn = aggregator.local_histogram_fn(party_axis="", data_axes=data_axes)
+    leaf_fn = aggregator.local_leaf_fn(data_axes=data_axes)
+    # Subtraction pipeline (DESIGN.md §8): no dedicated provider needed —
+    # ``build_tree`` derives ``as_child_fn(histogram_fn)`` from the transport
+    # above, so the left-mask/halve staging runs inside the shard_map body
+    # and the party all_gather (raw or quantized, metered either way) ships
+    # the half-frontier payload; every party derives the right siblings
+    # locally after the merge.
 
     impl = f"vfl-{aggregation}"
     if transport.kind != "raw":

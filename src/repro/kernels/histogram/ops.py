@@ -9,7 +9,12 @@ Drop-in replacements for ``core.histogram.compute_histogram``:
   (``train_histogram.py``): id fusion and stats staging happen *inside* the
   kernel, so neither intermediate ever touches HBM (selected via
   ``histogram_dispatch("pallas-fused")``; what the ``local-pallas`` backend
-  runs).
+  runs);
+* ``compute_histogram_pallas_fused_child`` — its child-only variant for the
+  sibling-subtraction pipeline (DESIGN.md §8): left-mask and parent ids are
+  formed in-kernel and the one-hot contraction runs at half-frontier width
+  (``histogram_dispatch("pallas-fused-child")``; the ``local-pallas``
+  backend's ``child_histogram_fn``).
 
 Both handle padding to tile boundaries and un-padding of the result.
 ``interpret`` defaults to True off TPU so the same code paths validate on
@@ -88,7 +93,9 @@ def compute_histogram_pallas(
 
 @partial(
     jax.jit,
-    static_argnames=("num_nodes", "num_bins", "tile_n", "feat_block", "interpret"),
+    static_argnames=(
+        "num_nodes", "num_bins", "tile_n", "feat_block", "interpret", "child",
+    ),
 )
 def compute_histogram_pallas_fused(
     binned: jnp.ndarray,
@@ -102,11 +109,18 @@ def compute_histogram_pallas_fused(
     tile_n: int = 512,
     feat_block: int = 8,
     interpret: bool | None = None,
+    child: bool = False,
 ) -> jnp.ndarray:
     """Same contract as ``core.histogram.compute_histogram``, served by the
     fused training-side kernel: no (n, d) fused-id array and no (n, 3) stats
     stack are ever materialised — only tile-boundary zero padding happens in
     XLA (padded rows carry weight 0, so they accumulate nothing).
+
+    With ``child=True`` it is the subtraction pipeline's child-only provider
+    (``core.histogram.as_child_fn`` semantics): ``assign`` is the current
+    level's assignment, ``num_nodes`` the PARENT count, and the left-mask /
+    parent-id staging happens in-kernel — the one-hot width (and therefore
+    the MXU contraction) shrinks to the half frontier.
 
     Returns (num_nodes, d, num_bins, 3) float32.
     """
@@ -126,7 +140,25 @@ def compute_histogram_pallas_fused(
     hist = fused_histogram_pallas_call(
         binned_p, assign_p, col(g), col(h), col(weight), nb_pad, num_bins,
         tile_n=tile_n, feat_block=feat_block, interpret=interpret,
+        child_mode=child,
     )  # (d_pad, nb_pad, STATS_PAD)
 
     hist = hist[:d, :nb, :STATS]
     return hist.reshape(d, num_nodes, num_bins, STATS).transpose(1, 0, 2, 3)
+
+
+def compute_histogram_pallas_fused_child(
+    binned: jnp.ndarray,
+    g: jnp.ndarray,
+    h: jnp.ndarray,
+    weight: jnp.ndarray,
+    assign: jnp.ndarray,
+    num_parents: int,
+    num_bins: int,
+    **kw,
+) -> jnp.ndarray:
+    """Child-only provider for ``TreeBackend.child_histogram_fn``: left-child
+    histograms at half-frontier width, all staging fused in-kernel."""
+    return compute_histogram_pallas_fused(
+        binned, g, h, weight, assign, num_parents, num_bins, child=True, **kw
+    )

@@ -35,7 +35,7 @@ from repro.kernels.histogram.histogram import STATS_PAD
 
 def _fused_histogram_kernel(
     binned_ref, assign_ref, g_ref, h_ref, w_ref, out_ref,
-    *, nb: int, num_bins: int, feat_block: int,
+    *, nb: int, num_bins: int, feat_block: int, child_mode: bool = False,
 ):
     """One grid step: accumulate ``feat_block`` features for one sample tile.
 
@@ -44,6 +44,12 @@ def _fused_histogram_kernel(
     g_ref/h_ref/w_ref: (tile_n, 1) float32 raw derivatives / sample mask —
         padded rows carry w == 0 so they contribute nothing;
     out_ref: (feat_block, nb, STATS_PAD) float32 accumulated histogram.
+
+    ``child_mode`` is the subtraction pipeline's left-child-only variant
+    (DESIGN.md §8): samples routed right (odd ``assign``) are weight-masked
+    to zero and the node id halves to the parent index — both formed in
+    VREGs, like the rest of the staging, so the half-width pass adds no HBM
+    traffic.  ``nb`` is then ``num_parents * num_bins`` (half the frontier).
     """
 
     @pl.when(pl.program_id(0) == 0)
@@ -54,13 +60,17 @@ def _fused_histogram_kernel(
     gv = g_ref[...]  # (T, 1)
     hv = h_ref[...]
     wv = w_ref[...]
+    assign = assign_ref[...]  # (T, 1)
+    if child_mode:
+        wv = wv * (assign % 2 == 0).astype(jnp.float32)
+        assign = assign // 2
     # Fused stats staging: [g*w, h*w, w, 0...] built in registers, never HBM.
     data = jnp.concatenate(
         [gv * wv, hv * wv, wv,
          jnp.zeros((tile_n, STATS_PAD - 3), jnp.float32)],
         axis=1,
     )  # (T, STATS_PAD)
-    node = assign_ref[...][:, 0]  # (T,)
+    node = assign[:, 0]  # (T,)
     iota = jax.lax.broadcasted_iota(jnp.int32, (tile_n, nb), 1)
 
     def body(f, carry):
@@ -90,14 +100,17 @@ def fused_histogram_pallas_call(
     tile_n: int = 512,
     feat_block: int = 8,
     interpret: bool = False,
+    child_mode: bool = False,
 ) -> jnp.ndarray:
     """Raw pallas_call. Caller guarantees padding invariants (see ops.py):
 
     binned (n_pad, d_pad) int32, n_pad % tile_n == 0, d_pad % feat_block == 0,
            values in [0, num_bins); padded entries may hold any in-range bin
            because their weight is 0.
-    assign (n_pad, 1) int32 in [0, nb // num_bins); g/h/w (n_pad, 1) float32
-           with zero rows where padded/masked.
+    assign (n_pad, 1) int32 in [0, nb // num_bins) — or, when ``child_mode``,
+           the current-level assignment in [0, 2 * nb // num_bins) (the
+           kernel halves it to parent ids and masks right-routed samples);
+           g/h/w (n_pad, 1) float32 with zero rows where padded/masked.
 
     Returns (d_pad, nb, STATS_PAD) float32.
     """
@@ -109,6 +122,7 @@ def fused_histogram_pallas_call(
         functools.partial(
             _fused_histogram_kernel,
             nb=nb, num_bins=num_bins, feat_block=feat_block,
+            child_mode=child_mode,
         ),
         grid=grid,
         in_specs=[

@@ -30,7 +30,8 @@ from repro.tools import roofline as roofline_mod
 from repro.launch.dryrun import REPORT_DIR
 
 
-def run(aggregation: str, n=150_000, d=16, n_trees=5, multi_pod=False) -> dict:
+def run(aggregation: str, n=150_000, d=16, n_trees=5, multi_pod=False,
+        hist_subtraction=False) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.devices.size
     # round the sample count up to the data-sharding granularity (padded
@@ -40,7 +41,8 @@ def run(aggregation: str, n=150_000, d=16, n_trees=5, multi_pod=False) -> dict:
         if a in mesh.shape:
             shards *= mesh.shape[a]
     n = ((n + shards - 1) // shards) * shards
-    cfg = TreeConfig(max_depth=3, num_bins=32)
+    cfg = TreeConfig(max_depth=3, num_bins=32,
+                     hist_subtraction=hist_subtraction)
     backend = vfl.make_vfl_backend(
         mesh, cfg, aggregation=aggregation, shard_samples=True
     )
@@ -65,9 +67,10 @@ def run(aggregation: str, n=150_000, d=16, n_trees=5, multi_pod=False) -> dict:
     mem = compiled.memory_analysis()
     report = {
         "tag": f"fedgbf__forest_round__{'2x16x16' if multi_pod else '16x16'}"
-               f"__{aggregation}",
+               f"__{aggregation}{'__sub' if hist_subtraction else ''}",
         "status": "ok",
         "aggregation": aggregation,
+        "hist_subtraction": hist_subtraction,
         "chips": chips,
         "n": n, "d": d, "n_trees": n_trees,
         "flops_per_dev": float(cost.get("flops", 0.0)),
@@ -92,9 +95,20 @@ def run(aggregation: str, n=150_000, d=16, n_trees=5, multi_pod=False) -> dict:
 
 
 def main() -> int:
+    base = None
     for multi_pod in (False, True):
         for agg in ("histogram", "argmax"):
-            run(agg, multi_pod=multi_pod)
+            report = run(agg, multi_pod=multi_pod)
+            if agg == "histogram" and not multi_pod:
+                base = report
+    # Sibling-subtraction pipeline (DESIGN.md §8) on the paper-faithful
+    # histogram exchange: the before/after is the compiled collective-bytes
+    # cut of shipping only the left children at levels >= 1.
+    sub = run("histogram", multi_pod=False, hist_subtraction=True)
+    if sub["collective_bytes_per_dev"]:
+        cut = base["collective_bytes_per_dev"] / sub["collective_bytes_per_dev"]
+        print(f"[OK] subtraction collective-bytes cut (histogram mode): "
+              f"{cut:.2f}x")
     return 0
 
 

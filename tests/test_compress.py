@@ -187,8 +187,13 @@ def test_ledger_reconciles_and_breaks_down():
     assert not ledger.matches()
     # per-mode totals let benchmarks diff aggregation modes directly
     bd = ledger.breakdown()
-    assert set(bd["modes"]) == {"histogram", "argmax"}
+    assert set(bd["modes"]) == {"histogram", "histogram+sub", "argmax"}
     assert bd["modes"]["histogram"] > bd["modes"]["argmax"]
+    # the subtraction pipeline's histogram-phase cut is visible in the
+    # breakdown: 7 -> 4 node-histograms per depth-3 tree, exactly 1.75x
+    hp = bd["hist_phase_by_mode"]
+    assert hp["histogram"] / hp["histogram+sub"] == 7 / 4
+    assert bd["modes"]["histogram"] > bd["modes"]["histogram+sub"]
     # and the paper-world Paillier model rides along
     assert bd["predicted_paillier"]["total"] > bd["modes"]["histogram"]
 

@@ -74,6 +74,41 @@ def test_histogram_additivity_under_partition(n, d, nodes, parts, seed):
 @settings(**SETTINGS)
 @given(
     n=st.integers(16, 400),
+    d=st.integers(1, 6),
+    parents=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**16),
+)
+def test_sibling_subtraction_additive(n, d, parents, seed):
+    """parent == left + right for ANY assignment/weights, and the derived
+    frontier matches the direct one (DESIGN.md §8) — the algebra behind
+    ``TreeConfig.hist_subtraction``."""
+    from repro.core.histogram import as_child_fn, derive_sibling
+
+    rng = np.random.default_rng(seed)
+    B = 8
+    binned = jnp.asarray(rng.integers(0, B, (n, d)), jnp.int32)
+    g = jnp.asarray(rng.normal(size=n), jnp.float32)
+    h = jnp.asarray(rng.random(n), jnp.float32)
+    w = jnp.asarray(rng.random(n).astype(np.float32))  # weighted (GOSS) masks
+    assign = jnp.asarray(rng.integers(0, 2 * parents, n), jnp.int32)
+
+    parent = compute_histogram(binned, g, h, w, assign // 2, parents, B)
+    left = as_child_fn(compute_histogram)(binned, g, h, w, assign, parents, B)
+    right_w = w * (assign % 2).astype(w.dtype)
+    right = compute_histogram(binned, g, h, right_w, assign // 2, parents, B)
+    np.testing.assert_allclose(
+        np.asarray(left + right), np.asarray(parent), rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(derive_sibling(parent, left)),
+        np.asarray(compute_histogram(binned, g, h, w, assign, 2 * parents, B)),
+        rtol=1e-3, atol=1e-4,
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(16, 400),
     seed=st.integers(0, 2**16),
 )
 def test_histogram_totals_match_sums(n, seed):

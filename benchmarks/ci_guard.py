@@ -16,7 +16,14 @@ regresses on any of the contracts this repo has already banked:
   * **subtraction speedup floor** — the subtraction pipeline's measured
     on/off speedup must not fall below the conservative ``speedup_floor``
     recorded in the committed BENCH_train.json (0.75x of the measurement at
-    record time, so CI timing noise passes but a pipeline regression fails).
+    record time, so CI timing noise passes but a pipeline regression fails);
+  * **round-engine floors** (DESIGN.md §9) — the traced T-tree round
+    program ships exactly ONE histogram collective per level (not T); the
+    shared-root level-0 row volume equals ``n + T·rdr`` exactly (vs the
+    direct ``T·n``) and cuts >= 1.5x at the probed rho = 0.8 / T = 4
+    point; and depth-5 frontier compaction cuts histogram-phase bytes vs
+    the uncompacted 2^L frontier with exact reconciliation (all of these
+    are shape-determined, so equality/ratio checks are exact).
 
 Timing comparisons are deliberately ratio-of-the-same-run (subtraction on vs
 off inside one bench invocation), never absolute seconds across machines.
@@ -88,6 +95,26 @@ def main() -> int:
           "q8 histogram-phase reduction >= 4x")
     check(acc.get("sub_histogram_phase_reduction_ge_1.7x") is True,
           "subtraction histogram-phase reduction >= 1.7x")
+
+    # -- round-engine floors (ISSUE 5) ---------------------------------------
+    check(acc.get("round_one_collective_per_level") is True,
+          "round engine: one histogram collective per level (not T)")
+    check(acc.get("round_level0_rows_exact") is True,
+          "round engine: level-0 pass rows == T*n (direct) / n + T*rdr "
+          "(shared-root), exactly")
+    cut = acc.get("round_level0_row_cut_x", 0.0)
+    check(cut >= 1.5,
+          f"round engine: shared-root level-0 row cut {cut:.2f}x >= 1.5x")
+    d5 = acc.get("depth5_compaction_hist_byte_cut_x", 0.0)
+    check(d5 > 1.0 + RATIO_EPS,
+          f"depth-5 compaction cuts histogram bytes ({d5:.2f}x > 1x)")
+    check(acc.get("depth5_compaction_reconciled") is True,
+          "depth-5 compaction: measured == active-width wire model")
+    base_d5 = base_comm.get("acceptance", {}).get(
+        "depth5_compaction_hist_byte_cut_x")
+    if base_d5 is not None:
+        check(d5 >= base_d5 - RATIO_EPS,
+              f"depth-5 compaction cut {d5:.3f}x >= baseline {base_d5:.3f}x")
 
     # -- subtraction speedup floor -------------------------------------------
     floor = base_train.get("subtraction", {}).get("speedup_floor")

@@ -1,7 +1,7 @@
 """Communication-efficiency benchmark: measured bytes/round + AUC per backend.
 
 The companion of the compression subsystem (federation/compress.py,
-DESIGN.md §7): trains the synthetic credit benchmark under every VFL
+DESIGN.md §5): trains the synthetic credit benchmark under every VFL
 transport and reports, per backend,
 
   * **measured** wire bytes (every collective's actual payload, via
@@ -21,9 +21,18 @@ Acceptance tracked here (ISSUE 3): >= 4x histogram-phase reduction for
 ``vfl-histogram-q8`` vs ``vfl-histogram`` at AUC delta <= 1e-3; measured ==
 predicted exactly for the lossless backends.  (ISSUE 4): >= 1.7x
 histogram-phase reduction for the sibling-subtraction rows (``+sub``,
-DESIGN.md §8) with exact reconciliation, composing with q8.
+DESIGN.md §6) with exact reconciliation, composing with q8.  (ISSUE 5,
+round engine): the ``round_engine`` section records the structural floors
+``benchmarks/ci_guard.py`` enforces — exactly ONE histogram collective per
+level (not T), the shared-root level-0 row volume ``n + T·rdr`` vs the
+direct ``T·n``, and the depth-5 frontier-compaction histogram-byte cut vs
+the uncompacted 2^L frontier (exact reconciliation either way).
 
-    PYTHONPATH=src python -m benchmarks.comm_bench [--smoke]
+    PYTHONPATH=src python -m benchmarks.comm_bench [--smoke] [--dataset X]
+
+``--dataset`` grounds the AUC deltas on real data: a path to a labelled
+CSV (``repro.data.tabular.load_csv``; opt-in) — the synthetic credit
+generator stays the CI default.
 
 (Forces 8 host devices when XLA_FLAGS is unset — the VFL backends need a
 party axis.)
@@ -54,7 +63,7 @@ from repro.federation import compress, protocol, vfl
 PARTIES = 2
 
 #: benchmarked backends: name -> (aggregation, transport, sampling, hist_sub)
-#: ``+sub`` rows run the sibling-subtraction pipeline (DESIGN.md §8):
+#: ``+sub`` rows run the sibling-subtraction pipeline (DESIGN.md §6):
 #: same registry backend, ``TreeConfig.hist_subtraction`` switched on — the
 #: per-level exchange ships only the left children (1.75x histogram-phase
 #: cut at depth 3), composing multiplicatively with quantization.
@@ -118,7 +127,96 @@ def run_backend(name, mesh, ds, x_train, x_test, d_pad, cfg, tree_cfg):
     }
 
 
-def main(smoke: bool = False) -> list:
+def round_engine_metrics(mesh, tree_cfg, n: int, d_pad: int, n_trees: int) -> dict:
+    """Round-engine structural measurements (DESIGN.md §9) for ci_guard:
+
+    * ``hist_collectives_per_level`` — histogram records in the traced
+      T-tree round program divided by the level count (must be exactly 1:
+      one ``(T, active, d_party, B, 3)`` collective per level, not T);
+    * ``level0_rows_*`` — trace-time histogram row volume at level 0,
+      direct (``T·n``) vs shared-root (``n + T·rdr``), both shape-exact;
+    * ``depth5_compaction`` — measured (ledger-reconciled) histogram-phase
+      bytes of a depth-5 tree with and without a ``max_active_nodes``
+      budget, and the cut ratio vs the uncompacted 2^L frontier.
+    """
+    from repro.core import histogram as hist_mod
+    from repro.core import tree as tree_mod
+
+    rc = compress.probe_round_collectives(
+        mesh, tree_cfg, n_trees, aggregation="histogram",
+        n_samples=n, num_features=d_pad,
+    )
+    out = {
+        "n_trees": n_trees,
+        "collective_counts": rc["counts"],
+        "hist_collectives_per_level":
+            rc["counts"].get("histograms", 0) / tree_cfg.max_depth,
+    }
+
+    # level-0 pass volume: probe the centralized round program's histogram
+    # row traffic through the trace-time pass meter.
+    import jax as _jax
+    import jax.numpy as jnp
+    rdr = max(1, n - int(round(n * 0.8)))  # the rho = 0.8 crossover point
+
+    def _probe(rows):
+        hist_mod.PASS_METER = []
+        try:
+            sds = _jax.ShapeDtypeStruct
+            _jax.eval_shape(
+                lambda b, g, h, sm, fm: tree_mod.build_round(
+                    b, g, h, sm, fm, tree_cfg, root_delta_rows=rows
+                ),
+                sds((n, d_pad), jnp.int32), sds((n,), jnp.float32),
+                sds((n,), jnp.float32), sds((n_trees, n), jnp.float32),
+                sds((n_trees, d_pad), bool),
+            )
+            level0 = [e for e in hist_mod.PASS_METER
+                      if e["tag"] in ("round", "root_delta")]
+            first = level0[0]
+            total = first["rows"] * first["trees"]
+            if rows and len(level0) > 1:
+                total += level0[1]["rows"] * level0[1]["trees"]
+            return total
+        finally:
+            hist_mod.PASS_METER = None
+
+    out["level0_rows_direct"] = _probe(0)
+    out["level0_rows_shared_root"] = _probe(rdr)
+    out["level0_rows_expected_direct"] = n_trees * n
+    out["level0_rows_expected_shared_root"] = n + n_trees * rdr
+    out["level0_row_cut_x"] = (
+        out["level0_rows_direct"] / out["level0_rows_shared_root"]
+    )
+
+    # depth-5 compaction: measured histogram-phase bytes (exact-reconciled)
+    # with and without the static live-slot budget.
+    budget = 4
+    depth5 = {}
+    for tag, cap in (("uncompacted", 0), ("budget", budget)):
+        tcfg = dataclasses.replace(tree_cfg, max_depth=5, max_active_nodes=cap)
+        per_tree, _ = compress.probe_tree_cost(
+            mesh, tcfg, aggregation="histogram",
+            n_samples=n, num_features=d_pad,
+        )
+        wire = protocol.wire_party_tree_cost(
+            n, d_pad // PARTIES, tcfg.num_bins, 5, "histogram", None,
+            tcfg.hist_subtraction, cap,
+        )
+        depth5[tag] = {
+            "hist_bytes_per_tree": per_tree["histograms"],
+            "reconciled": per_tree["histograms"] == wire["histograms"],
+        }
+    depth5["max_active_nodes"] = budget
+    depth5["hist_byte_cut_x"] = (
+        depth5["uncompacted"]["hist_bytes_per_tree"]
+        / depth5["budget"]["hist_bytes_per_tree"]
+    )
+    out["depth5_compaction"] = depth5
+    return out
+
+
+def main(smoke: bool = False, dataset: str | None = None) -> list:
     if len(jax.devices()) < PARTIES:
         # Another benchmark module initialized jax single-device before our
         # XLA_FLAGS hook could run (the benchmarks.run path): re-exec in a
@@ -131,12 +229,19 @@ def main(smoke: bool = False) -> list:
         cmd = [sys.executable, "-m", "benchmarks.comm_bench"]
         if smoke:
             cmd.append("--smoke")
+        if dataset:
+            cmd += ["--dataset", dataset]
         subprocess.run(cmd, env=env, check=True)
         return [("comm/subprocess", 0.0, "see BENCH_comm.json")]
     quick = smoke or scale() == "quick"
     n, rounds = (3_000, 4) if quick else (8_000, 8)
 
-    ds = synthetic.load("default_credit_card", n=n)
+    if dataset:
+        # opt-in real data (tabular.load_csv); synthetic stays the CI
+        # default so committed baselines are machine-independent.
+        ds = tabular.load_csv(dataset, max_rows=None if not quick else n)
+    else:
+        ds = synthetic.load("default_credit_card", n=n)
     x_train, d_pad = tabular.pad_features(ds.x_train, PARTIES)
     x_test, _ = tabular.pad_features(ds.x_test, PARTIES)
     mesh = jax.make_mesh(
@@ -146,12 +251,13 @@ def main(smoke: bool = False) -> list:
     cfg = boosting.dynamic_fedgbf_config(rounds=rounds, tree=tree_cfg)
 
     results = {
-        "dataset": "default_credit_card(synthetic)",
+        "dataset": ds.name if dataset else "default_credit_card(synthetic)",
         "n_train": int(x_train.shape[0]), "d": int(d_pad),
         "rounds": rounds, "parties": PARTIES,
         "schedule": "dynamic fedgbf (trees 5 -> 2, rho 0.1 -> 0.3)",
         "backends": {},
     }
+    n = int(x_train.shape[0])
     with use_mesh(mesh):
         for name in BACKENDS:
             results["backends"][name] = run_backend(
@@ -162,6 +268,16 @@ def main(smoke: bool = False) -> list:
                   f"bytes/round={r['measured_bytes_per_round']/1e3:8.1f} kB "
                   f"(hist {r['measured_bytes'].get('histograms', 0)/1e3:8.1f} kB) "
                   f"match={r['measured_matches_predicted']}")
+        results["round_engine"] = round_engine_metrics(
+            mesh, tree_cfg, n, d_pad, n_trees=4
+        )
+        re = results["round_engine"]
+        print(f"  round engine: {re['hist_collectives_per_level']:.0f} "
+              f"hist collective(s)/level at T={re['n_trees']}, "
+              f"level-0 rows {re['level0_rows_direct']} -> "
+              f"{re['level0_rows_shared_root']} "
+              f"({re['level0_row_cut_x']:.2f}x shared-root), depth-5 "
+              f"compaction {re['depth5_compaction']['hist_byte_cut_x']:.2f}x")
 
     base = results["backends"]["vfl-histogram"]
     hist_base = base["measured_bytes"].get("histograms", 1)
@@ -194,6 +310,22 @@ def main(smoke: bool = False) -> list:
         "sub_abs_auc_delta": abs(sub["auc_delta_vs_histogram"]),
         "q8_sub_histogram_phase_reduction_x":
             q8sub["histogram_phase_reduction_x"],
+        # ISSUE 5: round-engine floors (all shape-exact quantities).
+        "round_one_collective_per_level":
+            results["round_engine"]["hist_collectives_per_level"] == 1.0,
+        "round_level0_rows_exact": (
+            results["round_engine"]["level0_rows_direct"]
+            == results["round_engine"]["level0_rows_expected_direct"]
+            and results["round_engine"]["level0_rows_shared_root"]
+            == results["round_engine"]["level0_rows_expected_shared_root"]
+        ),
+        "round_level0_row_cut_x": results["round_engine"]["level0_row_cut_x"],
+        "depth5_compaction_hist_byte_cut_x":
+            results["round_engine"]["depth5_compaction"]["hist_byte_cut_x"],
+        "depth5_compaction_reconciled": (
+            results["round_engine"]["depth5_compaction"]["uncompacted"]["reconciled"]
+            and results["round_engine"]["depth5_compaction"]["budget"]["reconciled"]
+        ),
     }
     results["interpretation"] = (
         "the quantized transport ships int8 (g, h) payloads + one f32 scale "
@@ -239,5 +371,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes for CI (same comparisons)")
+    ap.add_argument("--dataset", default=None,
+                    help="opt-in real data: path to a labelled CSV "
+                         "(repro.data.tabular.load_csv; last column = "
+                         "label).  Default: the synthetic credit generator.")
     args = ap.parse_args()
-    main(smoke=args.smoke)
+    main(smoke=args.smoke, dataset=args.dataset)

@@ -9,7 +9,7 @@ carried into §Perf.
 This module prices the *paper-world* Paillier protocol model only; the
 compressed-transport subsystem's **measured** wire bytes (q8/q16/top-k/GOSS,
 reconciled against the wire model) live in benchmarks/comm_bench.py ->
-BENCH_comm.json (DESIGN.md §7).
+BENCH_comm.json (DESIGN.md §5).
 """
 
 from __future__ import annotations

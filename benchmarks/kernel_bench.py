@@ -20,6 +20,7 @@ from benchmarks.common import Timer, save_report, scale
 from repro.core.histogram import (
     as_child_fn,
     compute_histogram,
+    compute_round_histogram,
     compute_histogram_onehot,
 )
 
@@ -48,7 +49,7 @@ def main() -> list:
 
     seg = jax.jit(compute_histogram, static_argnums=(5, 6))
     oh = jax.jit(compute_histogram_onehot, static_argnums=(5, 6))
-    # Child-only pass of the subtraction pipeline (DESIGN.md §8): same inputs
+    # Child-only pass of the subtraction pipeline (DESIGN.md §6): same inputs
     # at the SAME frontier (``assign`` spans ``nodes``), accumulating only the
     # left children at half width — the per-level work replacing a full
     # ``nodes``-wide pass at every level >= 1.  On the one-hot/MXU
@@ -65,6 +66,17 @@ def main() -> list:
     t_oh_child = bench(
         lambda: oh_child(binned, g, h, w, assign, nodes // 2, B), ())
 
+    # Round-native pass (DESIGN.md §9): T trees in ONE segment program (the
+    # tree folds into the segment ids) vs T sequential per-tree passes —
+    # the provider contract the round engine drives at every level.
+    T = 5
+    w_round = jnp.ones((T, n), jnp.float32)
+    assign_round = jnp.tile(assign[None], (T, 1))
+    rnd = jax.jit(compute_round_histogram, static_argnums=(5, 6))
+    t_round = bench(
+        lambda: rnd(binned, g, h, w_round, assign_round, nodes, B), ())
+    per_tree_equiv = t_seg * T
+
     updates = n * d  # one (g,h,count) update per (row, feature)
     vmem_bytes = 512 * nodes * B * 4 + 512 * 8 * 4 * 2  # onehot + ids + data
     save_report("kernel_bench", {
@@ -73,12 +85,16 @@ def main() -> list:
         "updates_per_s_segment": updates / t_seg,
         "child_speedup_segment_x": t_seg / t_seg_child,
         "child_speedup_onehot_x": t_oh / t_oh_child,
+        "round_trees": T, "round_s": t_round,
+        "round_vs_sequential_per_tree_x": per_tree_equiv / t_round,
     })
     print(f"  segment_sum: {t_seg*1e3:.1f} ms  onehot: {t_oh*1e3:.1f} ms "
           f"({updates/t_seg/1e9:.2f} G updates/s)\n"
           f"  child-only:  {t_seg_child*1e3:.1f} ms "
           f"({t_seg/t_seg_child:.2f}x)  onehot child: {t_oh_child*1e3:.1f} ms "
-          f"({t_oh/t_oh_child:.2f}x)")
+          f"({t_oh/t_oh_child:.2f}x)\n"
+          f"  round (T={T}): {t_round*1e3:.1f} ms "
+          f"({per_tree_equiv/t_round:.2f}x vs {T} sequential passes)")
     return [
         ("kernel/histogram_segment", t_seg * 1e6,
          f"{updates/t_seg/1e9:.2f}Gupd/s;n={n};d={d}"),
@@ -88,6 +104,8 @@ def main() -> list:
          f"{t_seg/t_seg_child:.2f}x_vs_full;half_frontier"),
         ("kernel/histogram_child_onehot", t_oh_child * 1e6,
          f"{t_oh/t_oh_child:.2f}x_vs_full;half_contraction_width"),
+        ("kernel/histogram_round", t_round * 1e6,
+         f"T={T};{per_tree_equiv/t_round:.2f}x_vs_sequential"),
     ]
 
 

@@ -16,7 +16,7 @@ Reported:
     per-round cost);
   * ``metric_max_abs_diff`` — max |loop - scan| over all history metrics
     (the 1e-5 equivalence bar of the ISSUE);
-  * ``subtraction``      — the sibling-subtraction pipeline (DESIGN.md §8)
+  * ``subtraction``      — the sibling-subtraction pipeline (DESIGN.md §6)
     on/off steady-state round time under the scanned engine, its compile
     count (must stay 1), metric drift vs the direct pipeline, and the
     conservative ``speedup_floor`` benchmarks/ci_guard.py enforces.
@@ -61,8 +61,11 @@ def main(smoke: bool = False) -> list:
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
     y = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+    # hist_subtraction now defaults ON; this bench contrasts the pipelines,
+    # so the base config pins the direct pass explicitly.
     cfg = boosting.dynamic_fedgbf_config(
-        rounds=rounds, tree=TreeConfig(max_depth=3, num_bins=32)
+        rounds=rounds,
+        tree=TreeConfig(max_depth=3, num_bins=32, hist_subtraction=False),
     )
 
     results = {
@@ -105,7 +108,7 @@ def main(smoke: bool = False) -> list:
         for a, b in zip(h_loop.train, h_scan.train) for k in a
     )
 
-    # -- sibling-subtraction pipeline (DESIGN.md §8), scanned engine ----------
+    # -- sibling-subtraction pipeline (DESIGN.md §6), scanned engine ----------
     # Same schedule with hist_subtraction on: levels >= 1 accumulate only the
     # left children and derive the siblings.  Tracked: steady-state round
     # time on vs off, the compile count (must stay exactly 1 — the switch is

@@ -1,5 +1,5 @@
 """Boosted-forest head on frozen LM embeddings — where the paper's technique
-and the assigned-architecture substrate literally compose (DESIGN.md §5).
+and the assigned-architecture substrate literally compose (DESIGN.md §7).
 
 Party A (embedding provider) runs a frozen SmolLM-family encoder over text
 and holds the hidden-state features; party B (label holder) has repayment

@@ -6,7 +6,7 @@ shard_map with the party axis = mesh "model" axis; the message ledger
 reconciles the bytes each collective *actually* ships against the predicted
 wire model (and prices the paper-world Paillier protocol alongside); the
 secure-aggregation simulation demonstrates the masking algebra on the
-gradient broadcast.  The quantized transport (DESIGN.md §7) demonstrates
+gradient broadcast.  The quantized transport (DESIGN.md §5) demonstrates
 the compression subsystem end to end: same AUC to ~1e-4, ~5x fewer
 histogram bytes.
 
@@ -56,8 +56,8 @@ cfg = boosting.dynamic_fedgbf_config(rounds=8, tree=tree_cfg)
 for aggregation, transport, subtraction in (
     ("histogram", None, False),         # paper-faithful full-histogram exchange
     ("argmax", None, False),            # beyond-paper candidate-only exchange
-    ("histogram", compress.Q8, False),  # quantized exchange (DESIGN.md §7)
-    ("histogram", compress.Q8, True),   # + sibling subtraction (DESIGN.md §8)
+    ("histogram", compress.Q8, False),  # quantized exchange (DESIGN.md §5)
+    ("histogram", compress.Q8, True),   # + sibling subtraction (DESIGN.md §6)
 ):
     run_tree = dataclasses.replace(tree_cfg, hist_subtraction=subtraction)
     run_cfg = dataclasses.replace(cfg, tree=run_tree)

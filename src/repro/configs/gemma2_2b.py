@@ -4,7 +4,7 @@ attention & final-logit softcaps, post-norms. [arXiv:2408.00118]
 The alternating pattern makes the unit = (local, global) pair; 26 layers =
 13 units. Half the layers being windowed is what qualifies gemma2-2b for the
 long_500k decode shape (each local layer caches only its 4096-token window;
-the global layers hold the full cache — DESIGN.md §5)."""
+the global layers hold the full cache — DESIGN.md §7)."""
 
 from repro.models.config import ModelConfig
 

@@ -2,7 +2,7 @@
 [arXiv:2401.04088]
 
 SWA (window 4096) on every layer makes decode cost O(window) per token per
-layer — this arch runs the long_500k shape (DESIGN.md §5). bf16 params:
+layer — this arch runs the long_500k shape (DESIGN.md §7). bf16 params:
 ~141B total / ~39B active; f32 storage would not fit the 16 GB/chip v5e HBM
 budget at 512 chips (hardware-adaptation note)."""
 

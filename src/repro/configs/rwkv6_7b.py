@@ -2,7 +2,7 @@
 [arXiv:2404.05892]
 
 Every block is a WKV-6 time-mix + channel-mix; O(1) decode state per layer
-qualifies this arch for long_500k (DESIGN.md §5). n_heads/n_kv_heads are
+qualifies this arch for long_500k (DESIGN.md §7). n_heads/n_kv_heads are
 nominal (d_model / rwkv.head_dim WKV heads are what matter)."""
 
 from repro.models.config import ModelConfig, RWKVConfig

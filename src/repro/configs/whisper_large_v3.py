@@ -6,7 +6,7 @@ Per the brief, the mel-spectrogram + conv feature extractor is a STUB:
 transformer encoder; this module implements encoder + decoder. Whisper uses
 LayerNorm + absolute positions + plain-GELU FFN (norm_type/pos_type/ffn_type).
 
-Shape notes (DESIGN.md §5): decode_32k exercises a mechanical 32k-token
+Shape notes (DESIGN.md §7): decode_32k exercises a mechanical 32k-token
 decoder self-attention cache (whisper's real decode ceiling is 448 tokens);
 long_500k is skipped — full attention, not sub-quadratic."""
 

@@ -5,7 +5,7 @@ block. [arXiv:2411.15242]
 attention+FFN block fires after every 2nd unit (i.e. every 6 Mamba layers,
 13 applications) with its own KV cache per application but one set of
 weights — Zamba2's signature parameter sharing. Mamba state is O(1) per
-token, the shared block is periodic, so long_500k runs (DESIGN.md §5)."""
+token, the shared block is periodic, so long_500k runs (DESIGN.md §7)."""
 
 from repro.models.config import ModelConfig, SSMConfig
 

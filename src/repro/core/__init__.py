@@ -4,9 +4,11 @@ Public API:
 
   binning.fit_bin / bin_data          quantile binning (Alg. 2 step 1)
   histogram.compute_histogram         g/h histogram accumulation
-  split.choose_splits                 gain (eq. 1) + per-node argmax
-  tree.build_tree / predict_tree      level-wise GenerateTree (Alg. 2)
-  forest.build_forest                 vmap-parallel bagging layer (Alg. 1)
+  histogram.compute_round_histogram   round-native (T, ...) accumulation (§9)
+  split.choose_splits[_round]         gain (eq. 1) + per-node argmax
+  tree.build_round                    round-native forest engine (DESIGN.md §9)
+  tree.build_tree / predict_tree      level-wise GenerateTree (T = 1 case)
+  forest.build_forest                 bagging layer over build_round (Alg. 1)
   boosting.train_fedgbf               (Dynamic) FedGBF training (Algs. 1, 3)
   boosting.secureboost_config         the paper's baseline as a degenerate config
   backend.get_backend / TreeBackend   named execution backends (DESIGN.md §1)

@@ -13,7 +13,7 @@ static argument.  Named backends come from a registry:
   ``"vfl-argmax"``    shard_map VFL, candidate-only exchange (beyond-paper);
   ``"vfl-histogram-q8"`` / ``"-q16"``  histogram exchange quantized to
                       int8/int16 + per-(node, feature, channel) scales
-                      (lossy; federation/compress.py, DESIGN.md §7);
+                      (lossy; federation/compress.py, DESIGN.md §5);
   ``"vfl-argmax-topk"`` each party ships its k best candidates per node
                       (lossless for any k >= 1);
   ``"vfl-*-sharded"`` the above with samples additionally sharded over the
@@ -68,27 +68,46 @@ class BackendDescriptor:
 class TreeBackend:
     """Bundled execution providers for tree/forest construction.
 
+    The execution unit is the *round* (DESIGN.md §9): ``core.tree.build_round``
+    drives round-native providers whose operands carry an explicit leading
+    ``(T, ...)`` tree axis.  Per-tree providers remain the compatibility
+    seam — when only they are set, ``build_round`` lifts them over the tree
+    axis with ``jax.vmap``; a backend overrides the ``round_*`` twin to fuse
+    the tree axis into its program (the segment-sum fold, the Pallas
+    tree-grid kernel, ONE party collective per level).
+
     Provider semantics (all optional — None selects the centralized default):
 
       histogram_fn  signature of ``core.histogram.compute_histogram``;
-      child_histogram_fn  child-only histogram provider of the subtraction
-                    pipeline (DESIGN.md §8): same signature, but ``assign``
-                    is the current level's assignment and the frontier
-                    argument is the PARENT count — returns left-child
-                    histograms at half width.  None derives it generically
-                    via ``histogram.as_child_fn(histogram_fn)``; backends
-                    override only to fuse the left-mask/parent-id staging
-                    (the Pallas child kernel).  Consulted only when
+      round_histogram_fn  round-native twin (``compute_round_histogram``
+                    contract): (T, n) weight/assign -> (T, nodes, d, B, 3);
+                    must accept the keywords ``level`` (the static tree
+                    level — stateful transports key per-level state off it)
+                    and, when the backend is used with shared-root caching
+                    (§9), ``root_delta_rows``;
+      child_histogram_fn / round_child_histogram_fn  child-only histogram
+                    providers of the subtraction pipeline (DESIGN.md §6):
+                    same signatures, but ``assign`` is the current level's
+                    assignment and the frontier argument is the PARENT
+                    count — return left-child histograms at half width.
+                    None derives them generically via
+                    ``histogram.as_child_fn``/``as_round_child_fn``;
+                    backends override only to fuse the left-mask/parent-id
+                    staging (the Pallas child kernels).  Consulted only when
                     ``TreeConfig.hist_subtraction`` is set;
       choose_fn     (hist, feature_mask) -> SplitDecision;
+      round_choose_fn  ((T, nodes, d, B, 3), (T, d)) -> (T, nodes) decision;
       route_fn      (binned, assign, decision) -> new assign;
+      round_route_fn  batched twin over (T, n) assignments;
       leaf_fn       signature of ``core.histogram.leaf_stats``
                     ((g, h, weight, assign, num_leaves) -> (num_leaves, 3)),
                     used for the leaf-statistics pass;
+      round_leaf_fn  round twin ((T, n) -> (T, num_leaves, 3)); also serves
+                    the compaction liveness counts (psum'd when sharded);
       forest_builder  full override of ``core.forest.build_forest`` — the
                     federated path uses this to wrap the whole per-round
                     forest construction in one shard_map program with the
-                    other four providers baked in.
+                    other providers baked in.
       forest_builder_per_tree  full override of
                     ``core.forest.build_forest_per_tree`` (same wrapping, but
                     returning per-tree predictions) — consumed by the scanned
@@ -105,6 +124,11 @@ class TreeBackend:
     choose_fn: Optional[Callable] = None
     route_fn: Optional[Callable] = None
     leaf_fn: Optional[Callable] = None
+    round_histogram_fn: Optional[Callable] = None
+    round_child_histogram_fn: Optional[Callable] = None
+    round_choose_fn: Optional[Callable] = None
+    round_route_fn: Optional[Callable] = None
+    round_leaf_fn: Optional[Callable] = None
     forest_builder: Optional[Callable] = None
     forest_builder_per_tree: Optional[Callable] = None
 
@@ -112,24 +136,31 @@ class TreeBackend:
     def name(self) -> str:
         return self.descriptor.impl
 
-    def build_forest(self, binned, g, h, sample_mask, feature_mask, cfg=None):
+    def build_forest(self, binned, g, h, sample_mask, feature_mask, cfg=None,
+                     root_delta_rows=0):
         """Build one forest layer (drop-in for ``core.forest.build_forest``).
 
         ``cfg`` may be omitted for backends whose ``forest_builder`` bakes
         the tree config into a pre-built program (the shard_map VFL path).
+        ``root_delta_rows`` is the static shared-root delta-buffer width
+        (``core.tree.build_round``; 0 = direct level-0 pass).
         """
         if self.forest_builder is not None:
-            return self.forest_builder(binned, g, h, sample_mask, feature_mask, cfg)
+            return self.forest_builder(
+                binned, g, h, sample_mask, feature_mask, cfg,
+                root_delta_rows=root_delta_rows,
+            )
         if cfg is None:
             raise ValueError(f"backend {self.name!r} needs an explicit TreeConfig")
         from repro.core import forest as forest_mod  # local to avoid cycle
 
         return forest_mod.build_forest(
-            binned, g, h, sample_mask, feature_mask, cfg, backend=self
+            binned, g, h, sample_mask, feature_mask, cfg, backend=self,
+            root_delta_rows=root_delta_rows,
         )
 
     def build_forest_per_tree(self, binned, g, h, sample_mask, feature_mask,
-                              cfg=None):
+                              cfg=None, root_delta_rows=0):
         """Build one forest layer, returning (trees, per_tree_pred (T, n)).
 
         The scanned training engine's entry point (DESIGN.md §4): the caller
@@ -137,7 +168,8 @@ class TreeBackend:
         """
         if self.forest_builder_per_tree is not None:
             return self.forest_builder_per_tree(
-                binned, g, h, sample_mask, feature_mask, cfg
+                binned, g, h, sample_mask, feature_mask, cfg,
+                root_delta_rows=root_delta_rows,
             )
         if self.forest_builder is not None:
             raise ValueError(
@@ -150,7 +182,8 @@ class TreeBackend:
         from repro.core import forest as forest_mod  # local to avoid cycle
 
         return forest_mod.build_forest_per_tree(
-            binned, g, h, sample_mask, feature_mask, cfg, backend=self
+            binned, g, h, sample_mask, feature_mask, cfg, backend=self,
+            root_delta_rows=root_delta_rows,
         )
 
     def build_tree(self, binned, g, h, sample_mask, feature_mask, cfg):
@@ -216,12 +249,16 @@ def _local_pallas_factory(**_kw) -> TreeBackend:
     # kernel (kernels/histogram/train_histogram.py), not in XLA.  The child
     # variant additionally forms the subtraction pipeline's left-mask and
     # parent ids in-kernel, so the half-width pass stays staging-free too.
+    # The round variants add the tree-grid axis (DESIGN.md §9): one kernel
+    # launch accumulates the whole round's (T, nodes, d, B, 3) histogram.
     from repro.core.histogram import histogram_dispatch
 
     return TreeBackend(
         BackendDescriptor(impl="local-pallas", histogram_impl="pallas"),
         histogram_fn=histogram_dispatch("pallas-fused"),
         child_histogram_fn=histogram_dispatch("pallas-fused-child"),
+        round_histogram_fn=histogram_dispatch("pallas-fused-round"),
+        round_child_histogram_fn=histogram_dispatch("pallas-fused-round-child"),
     )
 
 

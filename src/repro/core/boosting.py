@@ -136,6 +136,41 @@ def train_fedgbf(
     raise ValueError(f"unknown engine {engine!r}; options: 'scan', 'loop'")
 
 
+def _delta_bucket(rows: int, n: int) -> int:
+    """Round a delta-buffer width up to the next power of two (capped at n).
+
+    The buffer width is a jit-STATIC shape: under a dynamic rho schedule
+    the raw ``n − n_keep`` differs every round, which would compile one
+    forest program per round — exactly the recompile churn the engines
+    exist to avoid.  Surplus buffer rows land on kept rows whose delta
+    weight ``1 − w`` is 0 (inert), so bucketing costs nothing in accuracy
+    and caps the distinct programs at O(log n).
+    """
+    bucket = 1
+    while bucket < rows:
+        bucket *= 2
+    return min(bucket, n)
+
+
+def _root_delta_rows(cfg: FedGBFConfig, n: int, rho_id: float) -> int:
+    """Static shared-root delta-buffer width for one round (DESIGN.md §9).
+
+    The schedule-driven crossover: the ``shared − delta`` derivation wins
+    only when most rows are kept — rho_id >= 0.5, i.e. ``n − n_keep <=
+    n // 2`` under the exact host rounding the mask draw uses — and only
+    for uniform 0/1 masks (GOSS's amplified weights leave ``1 − w`` nonzero
+    on kept rows outside the delta buffer).  Returns 0 (direct level-0
+    pass) otherwise; a power-of-two buffer width (``_delta_bucket``) when
+    the delta path is selected.
+    """
+    if not cfg.tree.shared_root or cfg.sampling != "uniform":
+        return 0
+    n_keep = max(1, int(round(n * rho_id)))
+    if n - n_keep > n // 2:
+        return 0
+    return _delta_bucket(max(1, n - n_keep), n)
+
+
 def _train_loop(
     x, y, cfg, rng, x_valid, y_valid, backend, eval_every, verbose
 ) -> tuple[EnsembleModel, TrainHistory]:
@@ -174,7 +209,10 @@ def _train_loop(
             smask, fmask = forest_mod.sample_masks(
                 k_sample, n, d, n_trees, rho_id, cfg.rho_feat
             )
-        trees, train_pred = bk.build_forest(binned, g, h, smask, fmask, cfg.tree)
+        trees, train_pred = bk.build_forest(
+            binned, g, h, smask, fmask, cfg.tree,
+            root_delta_rows=_root_delta_rows(cfg, n, rho_id),
+        )
         y_hat = y_hat + cfg.learning_rate * train_pred
         forests.append(jax.block_until_ready(trees))
         dt = time.perf_counter() - t0
@@ -211,14 +249,21 @@ def _train_loop(
     return model, history
 
 
-def _schedule_segments(n_trees: "np.ndarray"):
+def _schedule_segments(n_trees: "np.ndarray", split_on=None):
     """Factor a per-round tree-count schedule into constant-width segments:
     [(width, first_round, n_rounds), ...].  Monotone schedules (the paper's
-    cosine decay) give at most ``n_trees_max - n_trees_min + 1`` segments."""
+    cosine decay) give at most ``n_trees_max - n_trees_min + 1`` segments.
+
+    ``split_on`` (optional, same length) adds extra segment boundaries
+    wherever its value changes — the shared-root engine passes the per-round
+    crossover eligibility so every round of a segment makes the SAME
+    delta-vs-direct choice the loop engine makes for it (both schedules are
+    monotone, so this at most doubles the segment count)."""
     segments = []
     start = 0
     for m in range(1, len(n_trees) + 1):
-        if m == len(n_trees) or n_trees[m] != n_trees[start]:
+        if (m == len(n_trees) or n_trees[m] != n_trees[start]
+                or (split_on is not None and split_on[m] != split_on[start])):
             segments.append((int(n_trees[start]), start, m - start))
             start = m
     return segments
@@ -305,7 +350,7 @@ def _scan_train_program(
             step_keys, n, d, jnp.asarray(n_keep), d_keep
         )  # (S, n) float32, (S, d) bool
 
-    def round_body(carry, xs):
+    def round_body(rdr, carry, xs):
         y_hat, y_hat_valid = carry
         g, h = losses.grad_hess(loss, y32, y_hat)
         if use_goss:
@@ -315,7 +360,7 @@ def _scan_train_program(
         else:
             smask, fmask = xs["smask"], xs["fmask"]
         trees, per_pred = bk.build_forest_per_tree(
-            binned, g, h, smask, fmask, cfg.tree
+            binned, g, h, smask, fmask, cfg.tree, root_delta_rows=rdr
         )
         y_hat = y_hat + lr * jnp.mean(per_pred, axis=0)
         tr_vec = jax.lax.cond(
@@ -344,7 +389,20 @@ def _scan_train_program(
     carry = (y_hat0, y_hat_valid0)
     offsets = np.concatenate([[0], np.cumsum(sched.n_trees)])
     trees_segs, tr_rows, va_rows = [], [], []
-    for width, first, n_rounds in _schedule_segments(sched.n_trees):
+    # Shared-root crossover (DESIGN.md §9): segments additionally split at
+    # the rho >= 0.5 eligibility boundary, so every round takes EXACTLY the
+    # delta-vs-direct path the loop engine takes for it (host arithmetic
+    # identical; engine equivalence must not depend on segment packing).
+    # Within an eligible segment the static buffer is the bucketed max of
+    # its rounds' deltas — surplus rows are weight-0 inert, so differing
+    # buffer widths between the engines cannot change a single bit.
+    use_shared_root = cfg.tree.shared_root and not use_goss
+    delta_eligible = None
+    if use_shared_root:
+        delta_eligible = (n - n_keep_round) <= n // 2
+    for width, first, n_rounds in _schedule_segments(
+        sched.n_trees, split_on=delta_eligible
+    ):
         s, e = int(offsets[first]), int(offsets[first + n_rounds])
         xs = {"do_eval": jnp.asarray(do_eval[first:first + n_rounds])}
         if use_goss:
@@ -354,13 +412,18 @@ def _scan_train_program(
         else:
             xs["smask"] = smask_all[s:e].reshape(n_rounds, width, n)
             xs["fmask"] = fmask_all[s:e].reshape(n_rounds, width, d)
+        rdr = 0
+        if use_shared_root and delta_eligible[first]:
+            seg_delta = int(n - n_keep_round[first:first + n_rounds].min())
+            rdr = _delta_bucket(max(1, seg_delta), n)
+        body = partial(round_body, rdr)
         if n_rounds == 1:
-            carry, ys = round_body(
+            carry, ys = body(
                 carry, jax.tree_util.tree_map(lambda a: a[0], xs)
             )
             ys = jax.tree_util.tree_map(lambda a: a[None], ys)
         else:
-            carry, ys = jax.lax.scan(round_body, carry, xs)
+            carry, ys = jax.lax.scan(body, carry, xs)
         trees_segs.append(ys[0])
         tr_rows.append(ys[1])
         va_rows.append(ys[2])

@@ -3,8 +3,10 @@
 The N trees of a round share (g, h) — all fit the same boosting residual —
 and differ only in their sampling masks P_m(j), Q_m(j) (eq. 4). TPU
 adaptation: the per-tree parallelism the paper gets from multi-worker FATE
-becomes a ``jax.vmap`` over the tree axis — one XLA program builds the whole
-layer, and the sampling matrices become boolean masks so shapes stay static.
+becomes the round-native forest engine (``core.tree.build_round``,
+DESIGN.md §9) — one XLA program builds the whole layer with the tree axis
+explicit in every provider, and the sampling matrices become boolean masks
+so shapes stay static.
 """
 
 from __future__ import annotations
@@ -105,7 +107,7 @@ def goss_counts(n: int, rho_id: float, top_share: float) -> tuple[int, int]:
 def goss_masks_from_keys(
     keys: jnp.ndarray, g: jnp.ndarray, d: int, n_top, n_rand, d_keep: int
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """GOSS weight masks from prefix-stable per-tree keys (DESIGN.md §7).
+    """GOSS weight masks from prefix-stable per-tree keys (DESIGN.md §5).
 
     Gradient-based one-side sampling (LightGBM; the subsampling lever
     SecureBoost+ carries into VFL): every tree keeps the ``n_top``
@@ -162,24 +164,25 @@ def goss_masks(
     )
 
 
-def _forest_per_tree(binned, g, h, sample_mask, feature_mask, cfg, backend=None):
-    """Un-jitted core: build all trees, return per-tree train predictions.
+def _forest_per_tree(binned, g, h, sample_mask, feature_mask, cfg, backend=None,
+                     root_delta_rows=0):
+    """Un-jitted core: build the whole round, return per-tree predictions.
 
-    Returns (trees, per_tree_pred) with per_tree_pred (n_trees, n) — the raw
-    leaf outputs of every tree on the full training set, *before* any
-    bagging combiner, so the caller owns the combine.
+    One ``tree.build_round`` call (DESIGN.md §9) — the tree axis is explicit
+    in every provider, not closed over by a vmap.  Returns (trees,
+    per_tree_pred) with per_tree_pred (n_trees, n) — the raw leaf outputs of
+    every tree on the full training set, *before* any bagging combiner, so
+    the caller owns the combine.
     """
-
-    def one(smask, fmask):
-        tr, assign = tree_mod.build_tree(
-            binned, g, h, smask, fmask, cfg, backend=backend,
-        )
-        return tr, tr.leaf_weight[assign]
-
-    return jax.vmap(one)(sample_mask, feature_mask)
+    trees, assign = tree_mod.build_round(
+        binned, g, h, sample_mask, feature_mask, cfg, backend=backend,
+        root_delta_rows=root_delta_rows,
+    )
+    per_tree_pred = jnp.take_along_axis(trees.leaf_weight, assign, axis=1)
+    return trees, per_tree_pred
 
 
-@partial(jax.jit, static_argnames=("cfg", "backend"))
+@partial(jax.jit, static_argnames=("cfg", "backend", "root_delta_rows"))
 def build_forest(
     binned: jnp.ndarray,
     g: jnp.ndarray,
@@ -188,8 +191,9 @@ def build_forest(
     feature_mask: jnp.ndarray,
     cfg: TreeConfig,
     backend=None,
+    root_delta_rows: int = 0,
 ) -> tuple[TreeArrays, jnp.ndarray]:
-    """Build all trees of one forest layer in parallel (vmap over trees).
+    """Build all trees of one forest layer as one round (tree axis explicit).
 
     Args:
       binned: (n, d) shared binned features.
@@ -198,6 +202,9 @@ def build_forest(
       backend: ``core.backend.TreeBackend`` execution providers (hashable,
         rides through jit as one static argument); None = centralized-local.
         Reuse one backend instance across rounds to reuse the jit cache.
+      root_delta_rows: static shared-root delta-buffer width (DESIGN.md §9;
+        0 = direct level-0 pass).  The training engines derive it from the
+        rho_id schedule when ``cfg.shared_root`` is set.
 
     Returns:
       (trees, train_pred): trees is a stacked TreeArrays (leading axis
@@ -206,13 +213,13 @@ def build_forest(
       y_hat^(m) = y_hat^(m-1) + lr * train_pred (Alg. 1 line 8).
     """
     trees, per_tree_pred = _forest_per_tree(
-        binned, g, h, sample_mask, feature_mask, cfg, backend
+        binned, g, h, sample_mask, feature_mask, cfg, backend, root_delta_rows
     )
     train_pred = jnp.mean(per_tree_pred, axis=0)
     return trees, train_pred
 
 
-@partial(jax.jit, static_argnames=("cfg", "backend"))
+@partial(jax.jit, static_argnames=("cfg", "backend", "root_delta_rows"))
 def build_forest_per_tree(
     binned: jnp.ndarray,
     g: jnp.ndarray,
@@ -221,6 +228,7 @@ def build_forest_per_tree(
     feature_mask: jnp.ndarray,
     cfg: TreeConfig,
     backend=None,
+    root_delta_rows: int = 0,
 ) -> tuple[TreeArrays, jnp.ndarray]:
     """Like ``build_forest`` but returns *per-tree* predictions (n_trees, n).
 
@@ -228,4 +236,6 @@ def build_forest_per_tree(
     (and the validation-set prediction reuses the same tree stack), so the
     builder must not reduce over the tree axis itself.
     """
-    return _forest_per_tree(binned, g, h, sample_mask, feature_mask, cfg, backend)
+    return _forest_per_tree(
+        binned, g, h, sample_mask, feature_mask, cfg, backend, root_delta_rows
+    )

@@ -9,7 +9,7 @@ m*n*log n complexity makes this linear for large n). From T_unit:
   T_S   = T_0 + sum_i alpha_S beta_S T_unit              (eq. 11, SecureBoost)
 
 The same bracketing generalises to any layer-parallel/step-sequential system,
-which is how the LM substrate reuses it (DESIGN.md §5).
+which is how the LM substrate reuses it (DESIGN.md §7).
 """
 
 from __future__ import annotations

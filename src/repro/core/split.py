@@ -9,6 +9,7 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.types import TreeConfig
@@ -88,6 +89,27 @@ def choose_splits(
     feature = jnp.where(has_split, feature, -1)
     threshold = jnp.where(has_split, threshold, num_bins)
     return SplitDecision(feature=feature, threshold=threshold, gain=best_gain)
+
+
+def choose_splits_round(
+    hist: jnp.ndarray,
+    feature_mask: jnp.ndarray,
+    cfg: TreeConfig,
+    feature_offset: int = 0,
+) -> SplitDecision:
+    """Round-native ``choose_splits``: the tree axis is explicit.
+
+    Args:
+      hist: (T, num_nodes, d, B, 3) — one round's histograms.
+      feature_mask: (T, d) bool per-tree feature masks.
+    Returns:
+      SplitDecision with (T, num_nodes) fields — per tree, the same
+      per-node argmax ``choose_splits`` computes (vmapped, so tie-breaks
+      and gain arithmetic are bit-identical to the per-tree path).
+    """
+    return jax.vmap(
+        lambda ht, fm: choose_splits(ht, fm, cfg, feature_offset)
+    )(hist, feature_mask)
 
 
 def leaf_weights(hist_leaf: jnp.ndarray, cfg: TreeConfig) -> jnp.ndarray:

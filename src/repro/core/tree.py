@@ -1,22 +1,32 @@
-"""Level-wise decision-tree construction (Alg. 2, GenerateTree) — fully jittable.
+"""Level-wise round-native forest construction (Alg. 2 over a whole round).
 
 TPU adaptation (DESIGN.md §2): instead of growing nodes one at a time from a
-pending-split queue, we grow the complete tree *level by level* with static
+pending-split queue, we grow complete trees *level by level* with static
 shapes — one histogram pass per level covers the whole frontier, the routing
 update is a vectorised gather, and the depth loop is unrolled (max_depth is
 static and small, paper uses 3).
 
-The histogram provider is injectable: the centralized path passes
-``core.histogram.compute_histogram``; the federated path passes a shard_map
-wrapper that computes per-party shard histograms and reassembles them
-(federation/aggregator.py). Because histograms are additive and reassembly is
-exact, both paths produce *identical* trees — the paper's losslessness claim,
-asserted in tests/test_federation.py.
+Round-native engine (DESIGN.md §9): FedGBF's N trees of a round are ONE
+parallel unit — they share (g, h) and differ only in their masks (eq. 4) —
+so ``build_round`` builds the whole round with the tree axis *explicit* in
+every provider (histograms take and return a leading ``(T, ...)`` axis)
+instead of closing per-tree builders over a ``jax.vmap``.  That seam is what
+enables shared-root caching (one unmasked level-0 histogram + per-tree
+deltas), frontier compaction for deep trees (a static ``max_active_nodes``
+budget with dead nodes masked out of histograms and the party exchange), and
+ONE federated collective per level carrying the ``(T, active, d_party, B,
+3)`` payload.  ``build_tree`` is the T = 1 special case.
+
+The providers are injectable via a ``core.backend.TreeBackend``: the
+centralized path uses ``core.histogram.compute_round_histogram``; the
+federated path passes shard_map wrappers that compute per-party shard
+histograms and reassemble them (federation/aggregator.py). Because
+histograms are additive and reassembly is exact, both paths produce
+*identical* trees — the paper's losslessness claim, asserted in
+tests/test_federation.py.
 """
 
 from __future__ import annotations
-
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,8 +34,6 @@ import jax.numpy as jnp
 from repro.core import histogram as hist_mod
 from repro.core import split as split_mod
 from repro.core.types import PackedEnsemble, TreeArrays, TreeConfig
-
-HistogramFn = Callable[..., jnp.ndarray]
 
 
 def traverse_level(
@@ -63,6 +71,304 @@ def route_local(binned: jnp.ndarray, assign: jnp.ndarray, decision) -> jnp.ndarr
     return traverse_level(binned, assign, decision.feature, decision.threshold)
 
 
+def traverse_level_round(
+    binned: jnp.ndarray,
+    idx: jnp.ndarray,
+    feature: jnp.ndarray,
+    threshold: jnp.ndarray,
+) -> jnp.ndarray:
+    """Round-native ``traverse_level``: the tree axis is explicit.
+
+    Args:
+      binned: (n, d) int32 shared binned features.
+      idx: (T, n) int32 per-tree within-level node index.
+      feature / threshold: (T, width) int32 — the level's nodes per tree.
+    Returns:
+      (T, n) int32 next-level node index — the same gather body as
+      ``traverse_level``, batched.
+    """
+    f = jnp.take_along_axis(feature, idx, axis=1)    # (T, n)
+    t = jnp.take_along_axis(threshold, idx, axis=1)  # (T, n)
+    rows = jnp.arange(binned.shape[0])
+    fv = binned[rows[None, :], jnp.clip(f, 0, None)]  # (T, n)
+    go_right = (f >= 0) & (fv > t)
+    return idx * 2 + go_right.astype(jnp.int32)
+
+
+def route_local_round(binned, assign, decision) -> jnp.ndarray:
+    """Centralized round routing: one batched ``traverse_level`` step."""
+    return traverse_level_round(
+        binned, assign, decision.feature, decision.threshold
+    )
+
+
+def _derive_round_hist(per_tree_fn):
+    """Lift a per-tree histogram provider to the round contract (vmap over
+    the (weight, assign) tree axis — the explicit seam stays, only this
+    provider's implementation batches implicitly).  Shared-root caching
+    (``root_delta_rows``) routes through ``root_histogram_via_delta`` with
+    the per-tree provider as the delta accumulator, so ad-hoc per-tree
+    backends support the full round contract."""
+
+    def fn(binned, g, h, weight, assign, num_nodes, num_bins,
+           root_delta_rows=0, level=0):
+        if root_delta_rows:
+            return hist_mod.root_histogram_via_delta(
+                binned, g, h, weight, num_bins, root_delta_rows,
+                base_tree_fn=per_tree_fn,
+            )
+        return jax.vmap(
+            lambda w, a: per_tree_fn(binned, g, h, w, a, num_nodes, num_bins)
+        )(weight, assign)
+
+    return fn
+
+
+def _derive_round_choose(per_tree_fn):
+    return lambda hist, fmask: jax.vmap(per_tree_fn)(hist, fmask)
+
+
+def _derive_round_route(per_tree_fn):
+    def fn(binned, assign, decision):
+        return jax.vmap(lambda a, d: per_tree_fn(binned, a, d))(assign, decision)
+
+    return fn
+
+
+def _derive_round_leaf(per_tree_fn):
+    def fn(g, h, weight, assign, num_leaves):
+        return jax.vmap(
+            lambda w, a: per_tree_fn(g, h, w, a, num_leaves)
+        )(weight, assign)
+
+    return fn
+
+
+def _round_providers(cfg: TreeConfig, backend):
+    """Resolve the round-native providers: a backend's ``round_*`` provider
+    wins; a per-tree provider lifts via vmap; None selects the centralized
+    round-native default."""
+    hist_fn = choose_fn = route_fn = leaf_fn = child_fn = None
+    if backend is not None:
+        hist_fn = backend.round_histogram_fn
+        if hist_fn is None and backend.histogram_fn is not None:
+            hist_fn = _derive_round_hist(backend.histogram_fn)
+        choose_fn = backend.round_choose_fn
+        if choose_fn is None and backend.choose_fn is not None:
+            choose_fn = _derive_round_choose(backend.choose_fn)
+        route_fn = backend.round_route_fn
+        if route_fn is None and backend.route_fn is not None:
+            route_fn = _derive_round_route(backend.route_fn)
+        leaf_fn = backend.round_leaf_fn
+        if leaf_fn is None and backend.leaf_fn is not None:
+            leaf_fn = _derive_round_leaf(backend.leaf_fn)
+        child_fn = backend.round_child_histogram_fn
+        if child_fn is None and backend.child_histogram_fn is not None:
+            child_fn = _derive_round_hist(backend.child_histogram_fn)
+    if hist_fn is None:
+        hist_fn = hist_mod.compute_round_histogram
+    if choose_fn is None:
+        choose_fn = lambda hist, fm: split_mod.choose_splits_round(hist, fm, cfg)
+    if route_fn is None:
+        route_fn = route_local_round
+    if leaf_fn is None:
+        leaf_fn = hist_mod.round_leaf_stats
+    if cfg.hist_subtraction and child_fn is None:
+        # Any round histogram provider adapts into the child-only provider
+        # (the mask/halve staging runs inside its program, so federated
+        # transports ship the half-width payload); backends override only to
+        # fuse the staging (local-pallas).
+        child_fn = hist_mod.as_round_child_fn(hist_fn)
+    return hist_fn, child_fn, choose_fn, route_fn, leaf_fn
+
+
+def build_round(
+    binned: jnp.ndarray,
+    g: jnp.ndarray,
+    h: jnp.ndarray,
+    sample_mask: jnp.ndarray,
+    feature_mask: jnp.ndarray,
+    cfg: TreeConfig,
+    backend=None,
+    root_delta_rows: int = 0,
+) -> tuple[TreeArrays, jnp.ndarray]:
+    """Build ALL T trees of one round; returns (stacked trees, (T, n) assign).
+
+    The round-native forest engine (DESIGN.md §9).  Every provider carries
+    the tree axis explicitly — histograms take and return ``(T, ...)``
+    operands (``histogram.compute_round_histogram`` contract) — so on the
+    federated path each level is ONE party collective shipping the whole
+    round's ``(T, active, d_party, B, 3)`` payload, and the level-0 pass can
+    share work across trees (shared-root caching).
+
+    Every sample (masked or not) is routed in every tree so the caller can
+    update y_hat on the full training set; masked-out samples simply do not
+    contribute to histograms or leaf weights.
+
+    Args:
+      binned: (n, d) int32 binned features (the *local feature shard* on the
+        federated path — d is then d_party, not d_global).
+      g, h: (n,) float32 derivatives w.r.t. y_hat^(m-1), shared by the round.
+      sample_mask: (T, n) float32 per-tree weights — P_m(j) of eq. 4.
+      feature_mask: (T, d) bool per-tree masks — Q_m(j) of eq. 4.
+      cfg: static tree config.  ``hist_subtraction`` runs the §6 sibling
+        pipeline; ``max_active_nodes`` bounds the live frontier per level
+        (§9 compaction) for deep trees.
+      backend: a ``core.backend.TreeBackend`` (DESIGN.md §1); None =
+        centralized-local round-native defaults.
+      root_delta_rows: static shared-root delta-buffer width (> 0 enables
+        the level-0 ``shared − delta`` derivation; the engines drive it
+        from the rho_id schedule — see ``TreeConfig.shared_root``).
+
+    Returns:
+      (trees, assign): ``trees`` is a stacked ``TreeArrays`` with leading
+      tree axis; ``assign`` (T, n) is every sample's leaf index per tree.
+    """
+    hist_fn, child_fn, choose_fn, route_fn, leaf_fn = _round_providers(
+        cfg, backend
+    )
+    T, n = sample_mask.shape
+    assign = jnp.zeros((T, n), dtype=jnp.int32)  # within-level node index
+    t_rows = jnp.arange(T, dtype=jnp.int32)[:, None]
+
+    features, thresholds, gains = [], [], []
+    live = None          # (T, width) next-level liveness (compacted levels)
+    prev_hist = None     # (T, A_prev, d, B, 3), slot space
+    prev_id = prev_w = None
+    prev_A = None
+    prev_table = None    # (T, width_prev + 1) slot-of-node, None = identity
+    for level in range(cfg.max_depth):
+        width = 2 ** level
+        A = cfg.active_width(level)
+        compacted = A < width
+        if compacted:
+            # Frontier compaction (§9): gather live nodes into dense slots.
+            # ``order`` is a stable permutation putting live node ids first
+            # (ascending), so slot k < live_count holds the k-th live node;
+            # overflow beyond the budget and dead nodes route through the
+            # full-width level arrays as unsplit (-1) entries.
+            order = jnp.argsort(~live, axis=1)
+            slot_node = order[:, :A].astype(jnp.int32)       # (T, A)
+            live_count = jnp.sum(live, axis=1).astype(jnp.int32)
+            slot_valid = (
+                jnp.arange(A, dtype=jnp.int32)[None, :] < live_count[:, None]
+            )
+            # node -> slot table; dead nodes map to the trash id A (their
+            # samples are weight-masked out of the histogram pass), invalid
+            # slots scatter into a dummy row that is never read.
+            scatter_node = jnp.where(slot_valid, slot_node, width)
+            table = jnp.full((T, width + 1), A, jnp.int32)
+            table = table.at[t_rows, scatter_node].set(
+                jnp.broadcast_to(
+                    jnp.arange(A, dtype=jnp.int32)[None, :], (T, A)
+                )
+            )
+            slot_assign = jnp.take_along_axis(table, assign, axis=1)
+            w_level = sample_mask * (slot_assign < A).astype(sample_mask.dtype)
+            id_level = jnp.minimum(slot_assign, A - 1)
+        else:
+            slot_node = table = slot_valid = None
+            w_level = sample_mask
+            id_level = assign
+
+        if cfg.hist_subtraction and level >= 1:
+            # Subtraction pipeline (§6): accumulate only the left children
+            # at parent-slot width and derive every right sibling from the
+            # carried parent histograms; under compaction the interleaved
+            # child-slot frontier is then gathered into this level's dense
+            # slots (dead children never reach the histogram/exchange).
+            side = (assign % 2).astype(jnp.int32)
+            cslot = prev_id * 2 + side          # child-slot space, 2*prev_A
+            left = child_fn(binned, g, h, prev_w, cslot, prev_A, cfg.num_bins,
+                            level=level)
+            sib = hist_mod.derive_sibling(prev_hist, left)  # (T, 2*prev_A, ...)
+            if compacted:
+                # A live slot's parent is itself a valid previous-level slot
+                # (liveness requires a split parent); invalid slots gather
+                # clipped junk that the decision scatter discards.  The
+                # budget is monotone in the level width, so a compacted
+                # level's PREVIOUS level may be uncompacted (prev_table is
+                # None, parent slot == parent node) but never vice versa.
+                pslot = (
+                    jnp.take_along_axis(prev_table, slot_node // 2, axis=1)
+                    if prev_table is not None else slot_node // 2
+                )
+                cidx = jnp.clip(pslot * 2 + slot_node % 2, 0, 2 * prev_A - 1)
+                hist = jnp.take_along_axis(
+                    sib, cidx[:, :, None, None, None], axis=1
+                )
+            else:
+                hist = sib
+        else:
+            kw = {"level": level}
+            if level == 0 and root_delta_rows:
+                # Shared-root caching (§9): the provider derives every root
+                # as shared − delta inside its own program, so federated
+                # transports still ship the standard per-tree payload.
+                kw["root_delta_rows"] = root_delta_rows
+            hist = hist_fn(binned, g, h, w_level, id_level, A, cfg.num_bins, **kw)
+
+        decision = choose_fn(hist, feature_mask)          # (T, A) fields
+        gain_pos = jnp.maximum(decision.gain, 0.0)
+        if compacted:
+            feat = jnp.where(slot_valid, decision.feature, -1)
+            thr = jnp.where(slot_valid, decision.threshold, cfg.num_bins)
+            gn = jnp.where(slot_valid, gain_pos, 0.0)
+            feature_lvl = (
+                jnp.full((T, width), -1, jnp.int32).at[t_rows, slot_node].set(feat)
+            )
+            threshold_lvl = (
+                jnp.full((T, width), cfg.num_bins, jnp.int32)
+                .at[t_rows, slot_node].set(thr)
+            )
+            gain_lvl = (
+                jnp.zeros((T, width), jnp.float32).at[t_rows, slot_node].set(gn)
+            )
+            decision_lvl = split_mod.SplitDecision(
+                feature=feature_lvl, threshold=threshold_lvl, gain=gain_lvl
+            )
+        else:
+            feature_lvl, threshold_lvl, gain_lvl = (
+                decision.feature, decision.threshold, gain_pos
+            )
+            decision_lvl = decision
+        features.append(feature_lvl)
+        thresholds.append(threshold_lvl)
+        gains.append(gain_lvl)
+        assign = route_fn(binned, assign, decision_lvl)
+
+        next_level = level + 1
+        if (next_level < cfg.max_depth
+                and cfg.active_width(next_level) < 2 ** next_level):
+            # Liveness for the next (compacted) level: a child is live iff
+            # its parent split AND it holds weighted samples.  Counts go
+            # through the leaf provider so sample-sharded backends psum to
+            # the global count (a cheap (n,) pass, no party collective —
+            # weights and routing are party-replicated).
+            counts = leaf_fn(g, h, sample_mask, assign, 2 ** next_level)[..., 2]
+            live = (counts > 0) & jnp.repeat(feature_lvl >= 0, 2, axis=1)
+        else:
+            live = None
+        prev_hist, prev_id, prev_w = hist, id_level, w_level
+        prev_A, prev_table = A, table
+
+    # Leaf statistics: aggregate (G, H, count) per leaf over masked samples.
+    # In the VFL protocol the active party owns g, h and the final routing
+    # in plaintext, so leaf weights are computed locally (Alg. 2 step 14);
+    # the leaf provider is only overridden when samples are sharded over the
+    # data axis (psum of the additive stats, no party gather).
+    leaf_hist = leaf_fn(g, h, sample_mask, assign, cfg.num_leaves)  # (T, L, 3)
+    weights = split_mod.leaf_weights(leaf_hist, cfg)                # (T, L)
+
+    trees = TreeArrays(
+        feature=jnp.concatenate(features, axis=1),
+        threshold=jnp.concatenate(thresholds, axis=1),
+        gain=jnp.concatenate(gains, axis=1),
+        leaf_weight=weights,
+    )
+    return trees, assign
+
+
 def build_tree(
     binned: jnp.ndarray,
     g: jnp.ndarray,
@@ -71,100 +377,25 @@ def build_tree(
     feature_mask: jnp.ndarray,
     cfg: TreeConfig,
     backend=None,
-    histogram_fn: Optional[HistogramFn] = None,
-    choose_fn: Optional[Callable] = None,
-    route_fn: Optional[Callable] = None,
-    leaf_fn: Optional[Callable] = None,
 ) -> tuple[TreeArrays, jnp.ndarray]:
-    """Build one tree; returns (tree, leaf_assign_for_all_samples).
-
-    Every sample (masked or not) is routed so the caller can update
-    y_hat on the full training set; masked-out samples simply do not
-    contribute to histograms or leaf weights.
+    """Build one tree — the T = 1 special case of ``build_round``.
 
     Args:
-      binned: (n, d) int32 binned features (the *local feature shard* on the
-        federated path — d is then d_party, not d_global).
-      g, h: (n,) float32 derivatives w.r.t. y_hat^(m-1).
-      sample_mask: (n,) float32 0/1 — P_m(j) of eq. 4.
+      sample_mask: (n,) float32 — P_m(j) of eq. 4.
       feature_mask: (d,) bool — Q_m(j) of eq. 4 (local slice when federated).
-      backend: a ``core.backend.TreeBackend`` bundling the execution
-        providers (DESIGN.md §1); None = centralized-local defaults.  The
-        federated backends override the providers with the shard_map
-        collectives of Alg. 2 ("the passive party returns the divided ID
-        space", etc. — see federation/aggregator.py).
-      histogram_fn / choose_fn / route_fn / leaf_fn: DEPRECATED per-provider
-        overrides, kept as a shim for direct kernel tests; prefer passing a
-        backend.  An explicit fn wins over the backend's provider.
+      backend: a ``core.backend.TreeBackend`` (DESIGN.md §1); None =
+        centralized-local defaults.  (The historical per-provider kwargs
+        ``histogram_fn``/``choose_fn``/``route_fn``/``leaf_fn`` are gone —
+        build an ad-hoc ``TreeBackend`` instead.)
+
+    Returns:
+      (tree, leaf_assign_for_all_samples) without the tree axis.
     """
-    explicit_hist = histogram_fn is not None
-    child_fn = None
-    if backend is not None:
-        histogram_fn = histogram_fn or backend.histogram_fn
-        choose_fn = choose_fn or backend.choose_fn
-        route_fn = route_fn or backend.route_fn
-        leaf_fn = leaf_fn or backend.leaf_fn
-        if not explicit_hist:
-            child_fn = backend.child_histogram_fn
-    if histogram_fn is None:
-        histogram_fn = hist_mod.compute_histogram
-    if choose_fn is None:
-        choose_fn = lambda hist, fmask: split_mod.choose_splits(hist, fmask, cfg)
-    if route_fn is None:
-        route_fn = route_local
-    if cfg.hist_subtraction and child_fn is None:
-        # Any histogram provider adapts into the child-only provider (the
-        # mask/halve staging runs inside its program, so federated transports
-        # ship the half-width payload); backends override only to fuse the
-        # staging (local-pallas).
-        child_fn = hist_mod.as_child_fn(histogram_fn)
-
-    n, _ = binned.shape
-    assign = jnp.zeros(n, dtype=jnp.int32)  # within-level node index
-
-    features, thresholds, gains = [], [], []
-    prev_hist = None
-    for level in range(cfg.max_depth):
-        num_nodes = 2**level
-        if cfg.hist_subtraction and level >= 1:
-            # Subtraction pipeline (DESIGN.md §8): accumulate only the left
-            # children (half-frontier width, indexed by parent) and derive
-            # every right sibling from the carried parent histograms —
-            # halving histogram compute, memory, and (federated) exchanged
-            # bytes at every level past the root.
-            left = child_fn(
-                binned, g, h, sample_mask, assign, num_nodes // 2, cfg.num_bins
-            )
-            hist = hist_mod.derive_sibling(prev_hist, left)
-        else:
-            hist = histogram_fn(
-                binned, g, h, sample_mask, assign, num_nodes, cfg.num_bins
-            )
-        decision = choose_fn(hist, feature_mask)
-        features.append(decision.feature)
-        thresholds.append(decision.threshold)
-        gains.append(jnp.maximum(decision.gain, 0.0))
-        assign = route_fn(binned, assign, decision)
-        prev_hist = hist
-
-    # Leaf statistics: aggregate (G, H, count) per leaf over masked samples.
-    # In the VFL protocol the active party owns g, h and the final routing in
-    # plaintext, so leaf weights are computed locally (Alg. 2 step 14);
-    # ``leaf_fn`` (signature of ``histogram.leaf_stats``) is only overridden
-    # when samples are sharded over the data axis (psum of the additive
-    # stats, no party gather).
-    if leaf_fn is None:
-        leaf_fn = hist_mod.leaf_stats
-    leaf_hist = leaf_fn(g, h, sample_mask, assign, cfg.num_leaves)
-    weights = split_mod.leaf_weights(leaf_hist, cfg)
-
-    tree = TreeArrays(
-        feature=jnp.concatenate(features),
-        threshold=jnp.concatenate(thresholds),
-        gain=jnp.concatenate(gains),
-        leaf_weight=weights,
+    trees, assign = build_round(
+        binned, g, h, sample_mask[None], feature_mask[None], cfg,
+        backend=backend,
     )
-    return tree, assign
+    return jax.tree_util.tree_map(lambda a: a[0], trees), assign[0]
 
 
 def predict_tree(tree: TreeArrays, binned: jnp.ndarray, max_depth: int) -> jnp.ndarray:

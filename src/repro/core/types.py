@@ -44,15 +44,38 @@ class TreeConfig:
     gamma: float = 0.0            # minimum gain to split (eq. 1's gamma)
     min_child_weight: float = 1e-3
 
-    # Sibling-subtraction histogram pipeline (DESIGN.md §8): at levels >= 1
+    # Sibling-subtraction histogram pipeline (DESIGN.md §6): at levels >= 1
     # compute only the LEFT-child histograms (half-frontier width) and derive
     # every right sibling as parent - left.  Halves per-level histogram
     # compute/memory and — on the federated path — the dominant VFL message.
-    # False keeps the direct full-frontier pass, which is the reference
-    # oracle the subtraction path is tested against (float-reassociation
-    # tolerance; the federated-vs-centralized contract stays bit-exact with
-    # the switch set the same on both sides).
-    hist_subtraction: bool = False
+    # Default ON (the ROADMAP flip: the tolerance contract held across
+    # platforms); False restores the direct full-frontier pass, which stays
+    # the reference oracle the subtraction path is tested against
+    # (float-reassociation tolerance; the federated-vs-centralized contract
+    # stays bit-exact with the switch set the same on both sides).
+    hist_subtraction: bool = True
+
+    # Frontier compaction (round engine, DESIGN.md §9): static per-level
+    # budget of *live* frontier nodes for max_depth > 3.  0 = uncompacted
+    # (the full 2^level frontier).  When a level's width exceeds the budget,
+    # live nodes (non-empty AND split-reachable — a parent that did not
+    # split determines all its descendants, so they are dead for histogram
+    # purposes) are gathered into dense slots; dead nodes are masked out of
+    # histograms, the party exchange, and the wire/Paillier cost models.
+    # Trees are bit-identical to the uncompacted build whenever the live
+    # count fits the budget; overflow drops the highest-node-id live nodes
+    # (they fall through as unsplit, routing left).
+    max_active_nodes: int = 0
+
+    # Shared-root caching (round engine, DESIGN.md §9): the level-0 pass of
+    # a round computes ONE unmasked histogram shared by all T trees and
+    # derives each tree's root as ``shared − delta(masked-out rows)``.  The
+    # engines enable the delta path per round/segment only when the sampled
+    # share is high enough to win (rho_id >= 0.5 crossover, uniform
+    # sampling) — see ``boosting``'s ``root_delta_rows`` threading.  A
+    # float-reassociation tolerance lever like hist_subtraction (off keeps
+    # the round engine bit-identical to the per-tree path).
+    shared_root: bool = False
 
     @property
     def num_internal(self) -> int:
@@ -61,6 +84,14 @@ class TreeConfig:
     @property
     def num_leaves(self) -> int:
         return 2 ** self.max_depth
+
+    def active_width(self, level: int) -> int:
+        """Static live-slot budget of a level: ``min(2**level,
+        max_active_nodes)`` (the full frontier when uncompacted)."""
+        width = 2 ** level
+        if self.max_active_nodes:
+            return min(width, self.max_active_nodes)
+        return width
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,7 +121,7 @@ class FedGBFConfig:
     rho_feat: float = 1.0             # feature sampling rate (static in the paper)
     base_score: float = 0.0           # initial prediction (paper: y_hat^(0) = 0)
 
-    # Sample-selection policy for the rho_id budget (DESIGN.md §7).
+    # Sample-selection policy for the rho_id budget (DESIGN.md §5).
     # "uniform" — the paper's P_m(j) (eq. 4): uniform without replacement;
     # "goss"    — gradient-based one-side sampling (LightGBM / SecureBoost+):
     #             the top-|g| share of the budget is kept deterministically,

@@ -72,6 +72,68 @@ def pad_features(x: np.ndarray, num_parties: int) -> tuple[np.ndarray, int]:
     return np.concatenate([x, pad], axis=1), d + rem
 
 
+def load_csv(
+    path: str,
+    label_col: str | int = -1,
+    train_frac: float = 0.7,
+    seed: int = 0,
+    max_rows: int | None = None,
+):
+    """Real tabular loader: a labelled CSV → the ``synthetic.Dataset`` shape.
+
+    Grounds the benchmarks' AUC deltas on real data (the synthetic credit
+    generator stays the CI default — see ``benchmarks/comm_bench.py
+    --dataset``).  numpy-only on purpose: no pandas dependency.
+
+    Args:
+      path: CSV file with one header row; numeric feature columns.  Blank /
+        non-numeric cells load as NaN (the binning path is NaN-safe:
+        nanquantile edges + the dedicated NAN_BIN).
+      label_col: header name or column index of the binary/regression
+        label (default: the last column).
+      train_frac: train share of the 7:3-style shuffled split (paper §4.1).
+      seed: shuffle seed.
+      max_rows: optional row cap (subsampled after shuffle).
+
+    Returns:
+      ``repro.data.synthetic.Dataset`` (x_train, y_train, x_test, y_test,
+      name, active_dims) with active_dims = ceil(d / 2) — the Table-1-style
+      "active party holds about half the columns" default; callers doing a
+      real vertical split re-partition with ``partition_from_dims``.
+    """
+    from repro.data.synthetic import Dataset  # local: synthetic is numpy-only
+
+    with open(path) as f:
+        header = f.readline().strip().split(",")
+    raw = np.genfromtxt(path, delimiter=",", skip_header=1, dtype=np.float64)
+    if raw.ndim == 1:
+        raw = raw[:, None]
+    if isinstance(label_col, str):
+        if label_col not in header:
+            raise ValueError(
+                f"label column {label_col!r} not in CSV header {header}"
+            )
+        label_idx = header.index(label_col)
+    else:
+        label_idx = label_col % len(header)
+    y = raw[:, label_idx].astype(np.float32)
+    x = np.delete(raw, label_idx, axis=1).astype(np.float32)
+    keep = ~np.isnan(y)
+    x, y = x[keep], y[keep]
+
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(x.shape[0])
+    if max_rows is not None:
+        perm = perm[:max_rows]
+    x, y = x[perm], y[perm]
+    k = int(train_frac * x.shape[0])
+    name = path.rsplit("/", 1)[-1]
+    return Dataset(
+        x_train=x[:k], y_train=y[:k], x_test=x[k:], y_test=y[k:],
+        name=f"csv:{name}", active_dims=(x.shape[1] + 1) // 2,
+    )
+
+
 def aligned_intersection(ids_a: np.ndarray, ids_b: np.ndarray) -> np.ndarray:
     """Private-set-intersection stand-in: sorted intersection of sample ids.
 

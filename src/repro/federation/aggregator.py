@@ -28,58 +28,69 @@ from repro.core.types import TreeConfig
 from repro.federation import mesh_roles
 
 
-def federated_histogram_fn(
+# Subtraction pipeline (DESIGN.md §6): the federated child providers are the
+# generic ``histogram.as_round_child_fn`` adaptation of the providers below —
+# the left-mask/parent-halve staging runs INSIDE the shard_map body, before
+# the party collective, so the all_gather (and the quantized payload, and the
+# meter record) all carry the half-frontier width.  Every party derives the
+# right siblings locally after the merge (``tree.build_round`` calls
+# ``histogram.derive_sibling`` on the gathered result — in SPMD terms, the
+# active party's subtraction, replicated).  ``build_round`` derives the
+# adaptation from the inner backend's ``round_histogram_fn`` automatically;
+# no dedicated federated child provider is needed.
+
+
+# ---------------------------------------------------------------------------
+# Round-native collectives (DESIGN.md §9): the tree axis is explicit, so the
+# per-level party exchange is ONE collective carrying the whole round's
+# (T, active, d_party, B, 3) payload instead of a vmap-batched per-tree one.
+# ---------------------------------------------------------------------------
+def federated_round_histogram_fn(
     party_axis: str = mesh_roles.PARTY_AXIS,
     data_axes: tuple = (),
-    base_fn: Callable = hist_mod.compute_histogram,
+    base_fn: Callable = hist_mod.compute_round_histogram,
     meter=None,
 ):
-    """Histogram provider running *inside* shard_map.
+    """Round histogram provider running *inside* shard_map.
 
-    Computes the local-shard histogram, psums over sample shards (the
-    beyond-FATE multi-worker extension — histograms are additive), then
-    all-gathers over parties so split selection sees the global histogram,
-    mirroring "send summed ciphertext bins to the active party".
+    Computes the local-shard round histogram (one segment pass over all T
+    trees; shared-root caching rides the ``root_delta_rows`` keyword and
+    stays a local compute transformation — the collective payload is
+    unchanged), psums over sample shards, then all-gathers the feature axis
+    over parties: ONE collective per level for the whole round.
 
-    ``meter`` (a ``compress.MessageMeter``) records the actual payload each
-    party ships — the full local float32 (g, h, count) histogram.  Data-axis
-    psums are intra-party (multi-worker) traffic, not protocol bytes, and
-    are not metered.
+    ``meter`` records the actual payload each party ships — the full local
+    float32 (T, nodes, d_party, B, 3) histogram (per-tree bytes × T; the
+    probes trace at T = 1, and the run ledger scales by the schedule).
     """
 
-    def fn(binned_shard, g, h, weight, assign, num_nodes, num_bins):
-        local = base_fn(binned_shard, g, h, weight, assign, num_nodes, num_bins)
+    def fn(binned_shard, g, h, weight, assign, num_nodes, num_bins,
+           root_delta_rows=0, level=0):
+        local = base_fn(binned_shard, g, h, weight, assign, num_nodes,
+                        num_bins, root_delta_rows=root_delta_rows,
+                        level=level)
         for ax in data_axes:
             local = jax.lax.psum(local, ax)
         if meter is not None:
             meter.record("histograms", local)
-        return jax.lax.all_gather(local, party_axis, axis=1, tiled=True)
+        return jax.lax.all_gather(local, party_axis, axis=2, tiled=True)
 
     return fn
 
 
-# Subtraction pipeline (DESIGN.md §8): the federated child providers are the
-# generic ``histogram.as_child_fn`` adaptation of the providers above — the
-# left-mask/parent-halve staging runs INSIDE the shard_map body, before the
-# party collective, so the all_gather (and the quantized payload, and the
-# meter record) all carry the half-frontier width.  Every party derives the
-# right siblings locally after the merge (``tree.build_tree`` calls
-# ``histogram.derive_sibling`` on the gathered result — in SPMD terms, the
-# active party's subtraction, replicated).  ``build_tree`` derives the
-# adaptation from the inner backend's ``histogram_fn`` automatically; no
-# dedicated federated child provider is needed.
-
-
-def local_histogram_fn(
+def local_round_histogram_fn(
     party_axis: str = mesh_roles.PARTY_AXIS,
     data_axes: tuple = (),
-    base_fn: Callable = hist_mod.compute_histogram,
+    base_fn: Callable = hist_mod.compute_round_histogram,
 ):
-    """Like federated_histogram_fn but WITHOUT the party all-gather — used by
-    the argmax aggregation mode, where histograms stay party-local."""
+    """Like ``federated_round_histogram_fn`` but WITHOUT the party
+    all-gather — the argmax aggregation keeps histograms party-local."""
 
-    def fn(binned_shard, g, h, weight, assign, num_nodes, num_bins):
-        local = base_fn(binned_shard, g, h, weight, assign, num_nodes, num_bins)
+    def fn(binned_shard, g, h, weight, assign, num_nodes, num_bins,
+           root_delta_rows=0, level=0):
+        local = base_fn(binned_shard, g, h, weight, assign, num_nodes,
+                        num_bins, root_delta_rows=root_delta_rows,
+                        level=level)
         for ax in data_axes:
             local = jax.lax.psum(local, ax)
         return local
@@ -87,14 +98,14 @@ def local_histogram_fn(
     return fn
 
 
-def local_leaf_fn(data_axes: tuple = ()):
-    """Leaf-statistics provider (``histogram.leaf_stats`` signature): the
-    active party owns g, h and the final routing in plaintext (Alg. 2 step
-    14), so leaf stats are a local pass — psum'd over the sample shards only
-    when the data axes are in play (the additive-stats extension)."""
+def local_round_leaf_fn(data_axes: tuple = ()):
+    """Round leaf-statistics provider ((T, n) → (T, leaves, 3)): a local
+    pass on the active party (Alg. 2 step 14), psum'd over sample shards.
+    Also serves the round engine's compaction liveness counts — weights and
+    routing are party-replicated, so no party collective is needed."""
 
     def fn(g, h, weight, assign, num_leaves):
-        local = hist_mod.leaf_stats(g, h, weight, assign, num_leaves)
+        local = hist_mod.round_leaf_stats(g, h, weight, assign, num_leaves)
         for ax in data_axes:
             local = jax.lax.psum(local, ax)
         return local
@@ -102,62 +113,42 @@ def local_leaf_fn(data_axes: tuple = ()):
     return fn
 
 
-def federated_choose_fn(cfg: TreeConfig, party_axis: str = mesh_roles.PARTY_AXIS,
-                        meter=None):
-    """Split chooser for the ``argmax`` mode: local best, then global argmax.
-
-    Receives the *party-local* histogram (nodes, d_party, B, 3); returns a
-    SplitDecision with global feature ids, identical on every party.
-    ``meter`` records the candidate tuples each party ships (12 B per node).
-
-    This IS ``compress.topk_choose_fn`` at k = 1 (one candidate per node per
-    party); delegating keeps the lossless tie-break contract — party-major
-    merge reproducing the centralized first-occurrence rule — in exactly one
-    place.
-    """
-    from repro.federation import compress  # local: compress builds on this module
-
-    return compress.topk_choose_fn(cfg, 1, party_axis, meter)
-
-
-def centralized_choose_fn(cfg: TreeConfig, party_axis: str = mesh_roles.PARTY_AXIS,
-                          meter=None):
-    """Split chooser for the ``histogram`` mode: the gathered global histogram
-    is evaluated identically on every party (the active party's computation,
-    replicated by SPMD). The feature mask arrives as the local slice and is
-    gathered to match the gathered histogram. ``meter`` records each party's
-    mask-slice payload (1 B per local feature)."""
+def centralized_round_choose_fn(
+    cfg: TreeConfig, party_axis: str = mesh_roles.PARTY_AXIS, meter=None
+):
+    """Round split chooser for the ``histogram`` mode: the gathered global
+    (T, nodes, d, B, 3) histogram is evaluated identically on every party.
+    The per-tree feature masks arrive as the (T, d_party) local slice and
+    are gathered to match.  ``meter`` records each party's mask payload
+    (1 B per local feature per tree)."""
 
     def fn(hist_global, feature_mask_local):
         if meter is not None:
             meter.record("feature_mask", feature_mask_local)
         fmask = jax.lax.all_gather(
-            feature_mask_local, party_axis, axis=0, tiled=True
+            feature_mask_local, party_axis, axis=1, tiled=True
         )
-        return split_mod.choose_splits(hist_global, fmask, cfg)
+        return split_mod.choose_splits_round(hist_global, fmask, cfg)
 
     return fn
 
 
-def federated_route_fn(party_axis: str = mesh_roles.PARTY_AXIS, meter=None):
-    """Ownership-masked routing (Alg. 2 step 3 / SecureBoost step 4).
-
-    The winning feature belongs to exactly one party; that party computes the
-    left/right partition of the frontier samples and the bitmap is shared —
-    in SPMD, a psum of the masked contribution.  ``meter`` records the
-    partition payload once per level (int32 (n,) — the owner's message; the
-    other parties' contributions are structurally zero).
-    """
+def federated_round_route_fn(party_axis: str = mesh_roles.PARTY_AXIS,
+                             meter=None):
+    """Round ownership-masked routing: the whole round's (T, n) partition
+    bitmaps travel in ONE psum per level (Alg. 2 step 3 / SecureBoost
+    step 4, batched over the tree axis)."""
 
     def fn(binned_shard, assign, decision):
         n, d_party = binned_shard.shape
-        rows = jnp.arange(n)
         p = jax.lax.axis_index(party_axis)
-        f_global = decision.feature[assign]       # (n,) global ids, -1 = no split
+        f_global = jnp.take_along_axis(decision.feature, assign, axis=1)
+        thr = jnp.take_along_axis(decision.threshold, assign, axis=1)
         f_local = f_global - p * d_party
         owned = (f_local >= 0) & (f_local < d_party)
-        fv = binned_shard[rows, jnp.clip(f_local, 0, d_party - 1)]
-        thr = decision.threshold[assign]
+        fv = binned_shard[
+            jnp.arange(n)[None, :], jnp.clip(f_local, 0, d_party - 1)
+        ]  # (T, n)
         go_right_local = jnp.where(
             owned & (f_global >= 0), (fv > thr).astype(jnp.int32), 0
         )

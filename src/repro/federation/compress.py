@@ -1,4 +1,4 @@
-"""Message compression for the VFL transport (DESIGN.md §7).
+"""Message compression for the VFL transport (DESIGN.md §5).
 
 The paper's pitch is cutting SecureBoost's "high interactive communication
 costs"; this module supplies the two standard levers SecureBoost+ applies to
@@ -39,7 +39,7 @@ GOSS sample subsampling — the third SecureBoost+ lever — is a sampling-mask
 policy, not a transport, and lives in ``core/forest.py``
 (``goss_masks_from_keys``) gated by ``FedGBFConfig.sampling``.
 
-Sibling subtraction (``TreeConfig.hist_subtraction``, DESIGN.md §8) is a
+Sibling subtraction (``TreeConfig.hist_subtraction``, DESIGN.md §6) is a
 *pipeline* lever orthogonal to all of the above: levels >= 1 exchange only
 the left-child histograms (``histogram.as_child_fn`` adapts every provider
 here and in aggregator.py, so quantized payloads halve too) and the ledger's
@@ -141,6 +141,7 @@ def reconciled_ledger(
         n_samples=n_samples, party_dims=(d // num_parties,) * num_parties,
         num_bins=tree.num_bins, max_depth=tree.max_depth,
         aggregation=aggregation, hist_subtraction=tree.hist_subtraction,
+        max_active_nodes=tree.max_active_nodes,
     )
     ledger = protocol.ProtocolLedger(spec=spec, cfg=cfg, transport=transport)
     ledger.record_run(per_tree, grad)
@@ -215,6 +216,15 @@ class MessageMeter:
             out[e["phase"]] = out.get(e["phase"], 0) + e["nbytes"]
         return out
 
+    def phase_counts(self) -> dict:
+        """Number of recorded collectives per phase in the traced program —
+        the round engine's 'one collective per level, not T' contract is
+        checked against these counts (benchmarks/ci_guard.py)."""
+        out: dict = {}
+        for e in self.entries:
+            out[e["phase"]] = out.get(e["phase"], 0) + 1
+        return out
+
     def reset(self) -> None:
         self.entries = []
 
@@ -278,52 +288,112 @@ def probe_tree_cost(
     return totals, grad
 
 
+def probe_round_collectives(
+    mesh,
+    tree: TreeConfig,
+    n_trees: int,
+    aggregation: str = "histogram",
+    transport: Optional[TransportSpec] = None,
+    n_samples: int = 1024,
+    num_features: Optional[int] = None,
+) -> dict:
+    """Trace a T-tree ROUND program and report per-phase collective counts
+    and bytes — the round engine's structural contract (DESIGN.md §9): the
+    per-level exchange is ONE collective carrying the whole round's
+    ``(T, active, d_party, B, ...)`` payload, so the histogram-phase record
+    count equals the number of histogram levels regardless of T (2 per
+    level under quantization: int payload + scales).
+
+    Returns {"counts": phase → records/trace, "totals": phase → bytes}.
+    """
+    from repro.compat import use_mesh
+    from repro.federation import vfl  # local import: vfl imports compress
+
+    num_parties = mesh.shape[mesh_roles.PARTY_AXIS]
+    d = num_features if num_features is not None else num_parties * 2
+    meter = MessageMeter()
+    backend = vfl.make_vfl_backend(
+        mesh, tree, aggregation=aggregation, transport=transport, meter=meter,
+    )
+    sds = jax.ShapeDtypeStruct
+    with use_mesh(mesh):
+        jax.eval_shape(
+            backend.forest_builder,
+            sds((n_samples, d), jnp.int32),
+            sds((n_samples,), jnp.float32),
+            sds((n_samples,), jnp.float32),
+            sds((n_trees, n_samples), jnp.float32),
+            sds((n_trees, d), bool),
+        )
+    return {"counts": meter.phase_counts(), "totals": meter.phase_totals()}
+
+
 # ---------------------------------------------------------------------------
 # Compressed collective providers (shard_map inner fns)
 # ---------------------------------------------------------------------------
-def quantized_histogram_fn(
+def quantized_round_histogram_fn(
     party_axis: str = mesh_roles.PARTY_AXIS,
     data_axes: tuple = (),
     transport: TransportSpec = Q8,
     meter: Optional[MessageMeter] = None,
-    base_fn: Callable = hist_mod.compute_histogram,
+    base_fn: Callable = hist_mod.compute_round_histogram,
 ):
-    """Histogram provider shipping quantized (g, h) channels between parties.
-
-    Like ``aggregator.federated_histogram_fn`` but the party ``all_gather``
-    carries int8/int16 payloads + float32 scales instead of float32 triples.
-    The count channel never traverses the wire (split search does not read
-    it; leaf stats are a separate, local pass), so the returned global
-    histogram has count ≡ 0.
-
-    The stochastic-rounding key derives from ``fold_in(seed, level) ⊕
-    party``; it is deliberately *not* threaded from the training rng so the
-    provider keeps the plain histogram-fn signature.  Noise therefore repeats
-    across rounds for identical inputs, which is harmless: the rounding is
-    unbiased per element and the inputs (histograms of fresh residuals)
-    change every round.
-    """
+    """Round-native quantized histogram provider (DESIGN.md §9): one party
+    ``all_gather`` per level carries the whole round's int payload
+    ``(T, nodes, d_party, B, 2)`` + scales ``(T, nodes, d_party, 2)`` —
+    one ``quantize_stats`` scale per (tree, node, feature, channel).  The
+    count channel never traverses the wire (split search does not read it;
+    leaf stats are a separate, local pass), so the returned global
+    histogram has count ≡ 0.  The stochastic-rounding key derives from
+    ``fold_in(seed, num_nodes) ⊕ party`` — deliberately not threaded from
+    the training rng so the provider keeps the plain histogram-fn
+    signature (unbiased per element; inputs change every round).
+    Shared-root caching (``root_delta_rows``) is a local transformation
+    applied *before* quantization, so the wire payload is unchanged."""
     if transport.kind != "quantized":
         raise ValueError(f"need a quantized TransportSpec, got {transport!r}")
 
-    def fn(binned_shard, g, h, weight, assign, num_nodes, num_bins):
-        local = base_fn(binned_shard, g, h, weight, assign, num_nodes, num_bins)
+    def fn(binned_shard, g, h, weight, assign, num_nodes, num_bins,
+           root_delta_rows=0, level=0):
+        local = base_fn(binned_shard, g, h, weight, assign, num_nodes,
+                        num_bins, root_delta_rows=root_delta_rows,
+                        level=level)
         for ax in data_axes:
             local = jax.lax.psum(local, ax)
-        payload = local[..., :GH_STATS]  # (nodes, d_party, B, 2)
-        key = jax.random.fold_in(jax.random.PRNGKey(transport.seed), num_nodes)
+        payload = local[..., :GH_STATS]  # (T, nodes, d_party, B, 2)
+        # fold the LEVEL (not just the width) into the key: subtraction and
+        # compaction make several levels share a num_nodes, and equal-shape
+        # payloads would otherwise draw bit-identical rounding noise.
+        key = jax.random.fold_in(jax.random.PRNGKey(transport.seed), level)
+        key = jax.random.fold_in(key, num_nodes)
         key = jax.random.fold_in(key, jax.lax.axis_index(party_axis))
-        q, scale = quantize_stats(payload, transport.bits, key, transport.stochastic)
+        q, scale = quantize_stats(payload, transport.bits, key,
+                                  transport.stochastic)
         if meter is not None:
             meter.record("histograms", q)
             meter.record("histograms", scale)
-        q_g = jax.lax.all_gather(q, party_axis, axis=1, tiled=True)
-        s_g = jax.lax.all_gather(scale, party_axis, axis=1, tiled=True)
-        deq = dequantize_stats(q_g, s_g)  # (nodes, d, B, 2)
+        q_g = jax.lax.all_gather(q, party_axis, axis=2, tiled=True)
+        s_g = jax.lax.all_gather(scale, party_axis, axis=2, tiled=True)
+        deq = dequantize_stats(q_g, s_g)  # (T, nodes, d, B, 2)
         count = jnp.zeros(deq.shape[:-1] + (1,), deq.dtype)
         return jnp.concatenate([deq, count], axis=-1)
 
     return fn
+
+
+def topk_round_choose_fn(
+    cfg: TreeConfig,
+    k: int,
+    party_axis: str = mesh_roles.PARTY_AXIS,
+    meter: Optional[MessageMeter] = None,
+):
+    """Round-native top-k chooser: the per-tree candidate exchange batched
+    over the explicit tree axis (one vmapped gather program — a single
+    collective per level in the lowered program).  The lossless party-major
+    tie-break contract is untouched: it delegates to ``topk_choose_fn``
+    per tree."""
+    per_tree = topk_choose_fn(cfg, k, party_axis, meter)
+    return lambda hist, fmask: jax.vmap(per_tree)(hist, fmask)
 
 
 def topk_choose_fn(
@@ -334,8 +404,8 @@ def topk_choose_fn(
 ):
     """Split chooser exchanging each party's k best candidates per node.
 
-    Generalizes ``aggregator.federated_choose_fn`` (which is k = 1): each
-    party evaluates its local gains, ``top_k``s them, and only the (gain,
+    The argmax aggregation's candidate exchange, generalized (the raw
+    argmax mode IS k = 1): each party evaluates its local gains, ``top_k``s them, and only the (gain,
     feature, threshold) tuples are gathered.  The merge flattens the
     gathered candidates *party-major* with each party's list in descending
     gain / ascending-flat-index order (``lax.top_k`` breaks ties toward the

@@ -1,6 +1,6 @@
 """Mesh-axis roles shared by the tabular VFL runtime and the LM substrate.
 
-The same physical mesh serves both workloads (DESIGN.md §6):
+The same physical mesh serves both workloads (DESIGN.md §8):
 
   axis "model" — VFL *parties* (feature shards) for FedGBF;
                  tensor-parallel shards (heads / d_ff / experts) for the LMs.

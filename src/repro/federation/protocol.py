@@ -6,7 +6,7 @@ the communication claim becomes measurable (benchmarks/comm_bench.py ->
 BENCH_comm.json) and so the dry-run's collective-roofline term for the
 tabular workload has a ground truth to compare against.
 
-Two cost models live here (DESIGN.md §7):
+Two cost models live here (DESIGN.md §5):
 
 * the **Paillier protocol model** (``tree_cost`` / ``run_cost``) — the
   paper-world prediction: histogram entries priced as ciphertexts, id
@@ -81,11 +81,16 @@ class ProtocolSpec:
     max_depth: int = 3
     key_bits: int = 1024       # Paillier modulus
     aggregation: str = "histogram"   # or "argmax"
-    # Sibling-subtraction pipeline (DESIGN.md §8): levels >= 1 exchange only
+    # Sibling-subtraction pipeline (DESIGN.md §6): levels >= 1 exchange only
     # the left-child histograms (half the frontier); the right siblings are
     # derived locally by the receiver.  Must mirror the implementation's
     # ``TreeConfig.hist_subtraction``.
     hist_subtraction: bool = False
+    # Frontier compaction (round engine, DESIGN.md §9): per-level exchanged
+    # node count is the static live-slot budget min(2^level,
+    # max_active_nodes), not the 2^level frontier.  0 = uncompacted.  Must
+    # mirror ``TreeConfig.max_active_nodes``.
+    max_active_nodes: int = 0
 
     @property
     def ciphertext_bytes(self) -> int:
@@ -94,6 +99,26 @@ class ProtocolSpec:
     @property
     def passive_parties(self) -> int:
         return len(self.party_dims) - 1
+
+    def active_nodes(self, level: int) -> int:
+        """Static exchanged-slot width of a level (compaction-aware)."""
+        return _active_nodes(level, self.max_active_nodes)
+
+
+def _active_nodes(level: int, max_active_nodes: int) -> int:
+    width = 2 ** level
+    return min(width, max_active_nodes) if max_active_nodes else width
+
+
+def _nodes_sent(level: int, hist_subtraction: bool,
+                max_active_nodes: int) -> int:
+    """Histogram-mode node-histograms one party ships at ``level``: the
+    active slot width — under subtraction, levels >= 1 ship only the left
+    children, i.e. the PARENT level's active width (the §6 halving and the
+    §9 compaction compose in this one expression)."""
+    if level == 0 or not hist_subtraction:
+        return _active_nodes(level, max_active_nodes)
+    return _active_nodes(level - 1, max_active_nodes)
 
 
 def tree_cost(spec: ProtocolSpec, rho_id: float, rho_feat: float) -> ProtocolCosts:
@@ -105,10 +130,12 @@ def tree_cost(spec: ProtocolSpec, rho_id: float, rho_feat: float) -> ProtocolCos
     notify_bytes = 0
     partition_bytes = 0
     for level in range(spec.max_depth):
-        nodes = 2**level
-        # subtraction: only the left children (half the frontier) traverse
-        # the wire at levels >= 1 — same halving in both cost models.
-        nodes_sent = nodes if (level == 0 or not spec.hist_subtraction) else nodes // 2
+        # subtraction halves and compaction caps the exchanged node count —
+        # the same ``_nodes_sent`` expression in both cost models.
+        nodes = spec.active_nodes(level)
+        nodes_sent = _nodes_sent(
+            level, spec.hist_subtraction, spec.max_active_nodes
+        )
         for d_p in spec.party_dims[1:]:  # passive parties only send histograms
             d_eff = max(1, int(round(d_p * rho_feat)))
             if spec.aggregation == "histogram":
@@ -189,6 +216,7 @@ def wire_party_tree_cost(
     aggregation: str = "histogram",
     transport=None,
     hist_subtraction: bool = False,
+    max_active_nodes: int = 0,
 ) -> dict:
     """Predicted actual bytes ONE party ships to build ONE tree, mirroring
     the shard_map implementation payload-for-payload (the quantity
@@ -211,16 +239,21 @@ def wire_party_tree_cost(
 
     ``transport`` is a ``compress.TransportSpec`` or None (raw).
     ``hist_subtraction`` halves the histogram-mode payload node count at
-    levels >= 1 (only the left children ship; DESIGN.md §8) — at depth 3 the
+    levels >= 1 (only the left children ship; DESIGN.md §6) — at depth 3 the
     per-tree histogram phase drops from 7 to 4 node-histograms, a 1.75× cut.
+    ``max_active_nodes`` caps every level's exchanged node count at the
+    round engine's static live-slot budget (frontier compaction, DESIGN.md
+    §9) — the T-axis round collective ships exactly ``active(level)`` slots
+    per tree regardless of the 2^level frontier.
     """
     kind = "raw" if transport is None else transport.kind
     phases = dict.fromkeys(WIRE_PHASES, 0)
     hist_levels = wire_hist_level_bytes(
-        d_party, num_bins, max_depth, transport, hist_subtraction
+        d_party, num_bins, max_depth, transport, hist_subtraction,
+        max_active_nodes,
     )
     for level in range(max_depth):
-        nodes = 2 ** level
+        nodes = _active_nodes(level, max_active_nodes)
         if aggregation == "histogram":
             phases["histograms"] += hist_levels[level]
             phases["feature_mask"] += d_party
@@ -238,22 +271,23 @@ def wire_hist_level_bytes(
     max_depth: int,
     transport=None,
     hist_subtraction: bool = False,
+    max_active_nodes: int = 0,
 ) -> list:
     """Per-LEVEL histogram-phase bytes one party ships for one tree
     (histogram aggregation) — the level profile benchmarks record so the
-    subtraction pipeline's shape (full root, half everywhere below) is
-    visible, not just the per-tree total."""
+    subtraction pipeline's shape (full root, half everywhere below) and the
+    compaction cap (active width, not 2^level) are visible, not just the
+    per-tree total."""
     kind = "raw" if transport is None else transport.kind
     per_node = (
         num_bins * 2 * transport.bits // 8 + 2 * 4 if kind == "quantized"
         else num_bins * 3 * 4
     )
-    out = []
-    for level in range(max_depth):
-        nodes = 2 ** level
-        nodes_sent = nodes if (level == 0 or not hist_subtraction) else nodes // 2
-        out.append(nodes_sent * d_party * per_node)
-    return out
+    return [
+        _nodes_sent(level, hist_subtraction, max_active_nodes)
+        * d_party * per_node
+        for level in range(max_depth)
+    ]
 
 
 def wire_run_cost(spec: ProtocolSpec, cfg: FedGBFConfig, transport=None) -> dict:
@@ -270,6 +304,7 @@ def wire_run_cost(spec: ProtocolSpec, cfg: FedGBFConfig, transport=None) -> dict
     per_tree = wire_party_tree_cost(
         spec.n_samples, d_party, spec.num_bins, spec.max_depth,
         spec.aggregation, transport, spec.hist_subtraction,
+        spec.max_active_nodes,
     )
     grad_per_round = spec.n_samples * 2 * 4
     return _assemble_run_cost(per_tree, grad_per_round,
@@ -308,7 +343,7 @@ def _assemble_run_cost(per_tree, grad_per_round, passive_parties, cfg) -> dict:
 
 @dataclass
 class ProtocolLedger:
-    """Measured-vs-predicted accounting for one training run (DESIGN.md §7).
+    """Measured-vs-predicted accounting for one training run (DESIGN.md §5).
 
     ``spec``/``cfg``/``transport`` fix the predicted wire model;
     ``record_measured`` accumulates the measured side (from

@@ -1,6 +1,6 @@
 """Federated-vs-centralized self-checks: strict losslessness + tolerance.
 
-Two equivalence contracts (DESIGN.md §7):
+Two equivalence contracts (DESIGN.md §5):
 
 * **strict** (``check*``): lossless backends (raw transports, top-k
   candidate pruning, GOSS masks over a lossless transport) must produce
@@ -16,13 +16,22 @@ collective actually ships (``compress.probe_tree_cost``) must equal the
 predicted wire model (``protocol.wire_run_cost``) *exactly*, for every
 transport — payload sizes are shape-determined even when values are lossy.
 
-Sibling subtraction (DESIGN.md §8) slots into the same lattice:
+Sibling subtraction (DESIGN.md §6) slots into the same lattice:
 federated-vs-centralized stays *bit-identical* with the pipeline enabled on
 both sides; subtraction-vs-direct is a float-reassociation *tolerance*
 relation (``check_subtraction_vs_direct``), composing with q8's existing
 tolerance bound; and the half-width child payloads reconcile exactly, with
 the measured histogram-phase cut asserted >= 1.7x at depth 3
 (``check_subtraction_hist_cut``).
+
+The round engine (DESIGN.md §9) extends the lattice again: depth-4/5 trees
+under frontier compaction stay *bit-identical* fed-vs-central (compaction is
+deterministic in the TreeConfig, so both sides build the same trees); the
+traced round program ships exactly ONE histogram collective per level
+regardless of the round's tree count (``check_round_collective_counts``);
+shared-root caching is a *tolerance* relation like subtraction-vs-direct
+(``check_shared_root_tolerance``); and the active-width wire model
+reconciles exactly at depth 5 under compaction.
 
 Run in a subprocess with multiple CPU devices, e.g.:
 
@@ -48,7 +57,8 @@ from repro.federation import compress, protocol, vfl
 
 
 def check(num_parties: int, aggregation: str, shard_samples: bool,
-          subtraction: bool = False) -> None:
+          subtraction: bool = False, max_depth: int = 3,
+          max_active_nodes: int = 0) -> None:
     mesh_axes = ("data", "model")
     n_dev = len(jax.devices())
     data_dim = n_dev // num_parties
@@ -58,7 +68,9 @@ def check(num_parties: int, aggregation: str, shard_samples: bool,
     n, d = 512, num_parties * 3
     x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
     y = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
-    cfg = TreeConfig(max_depth=3, num_bins=16, hist_subtraction=subtraction)
+    cfg = TreeConfig(max_depth=max_depth, num_bins=16,
+                     hist_subtraction=subtraction,
+                     max_active_nodes=max_active_nodes)
 
     binned, _ = binning.fit_bin(x, cfg.num_bins)
     g, h = losses.grad_hess("logistic", y, jnp.zeros(n))
@@ -88,7 +100,8 @@ def check(num_parties: int, aggregation: str, shard_samples: bool,
     )
     print(
         f"OK lossless: parties={num_parties} aggregation={aggregation} "
-        f"shard_samples={shard_samples} subtraction={subtraction}"
+        f"shard_samples={shard_samples} subtraction={subtraction} "
+        f"depth={max_depth} budget={max_active_nodes}"
     )
 
 
@@ -236,7 +249,7 @@ def check_tolerance(
     num_parties: int, aggregation: str, transport, bound: float = 5e-3,
     subtraction: bool = False,
 ) -> None:
-    """Tolerance-based equivalence for LOSSY transports (DESIGN.md §7).
+    """Tolerance-based equivalence for LOSSY transports (DESIGN.md §5).
 
     A quantized exchange cannot reproduce centralized trees bit-for-bit;
     the contract is a bound on the end-metric delta: train the same config
@@ -277,15 +290,16 @@ def check_tolerance(
 
 
 def check_subtraction_vs_direct(bound: float = 5e-3) -> None:
-    """Subtraction-vs-direct contract (DESIGN.md §8): the derived right
+    """Subtraction-vs-direct contract (DESIGN.md §6): the derived right
     siblings differ from directly accumulated ones only by float
     reassociation, so full-training end metrics must agree within the same
-    tolerance class as the §7 lossy transports (the trees themselves are
+    tolerance class as the §5 lossy transports (the trees themselves are
     typically identical — a near-tie at a split can legitimately flip)."""
     x, y = _tolerance_data(2)
+    # hist_subtraction defaults ON; the direct pass is the explicit oracle.
     base = FedGBFConfig(
         rounds=4, n_trees_max=3, n_trees_min=2, rho_id_min=0.5, rho_id_max=0.8,
-        tree=TreeConfig(max_depth=3, num_bins=32),
+        tree=TreeConfig(max_depth=3, num_bins=32, hist_subtraction=False),
     )
     import dataclasses
 
@@ -306,11 +320,16 @@ def check_subtraction_vs_direct(bound: float = 5e-3) -> None:
 
 def check_reconciliation(num_parties: int, aggregation: str, transport,
                          shard_samples: bool = False,
-                         subtraction: bool = False) -> None:
-    """Measured collective payloads == predicted wire model, exactly."""
+                         subtraction: bool = False,
+                         max_depth: int = 3,
+                         max_active_nodes: int = 0) -> None:
+    """Measured collective payloads == predicted wire model, exactly —
+    including the round engine's active-width model under compaction."""
     data_dim = len(jax.devices()) // num_parties if shard_samples else 1
     mesh = jax.make_mesh((data_dim, num_parties), ("data", "model"))
-    tree = TreeConfig(max_depth=3, num_bins=32, hist_subtraction=subtraction)
+    tree = TreeConfig(max_depth=max_depth, num_bins=32,
+                      hist_subtraction=subtraction,
+                      max_active_nodes=max_active_nodes)
     n, d = 1536, num_parties * 2
     per_tree, grad = compress.probe_tree_cost(
         mesh, tree, aggregation=aggregation, transport=transport,
@@ -322,6 +341,7 @@ def check_reconciliation(num_parties: int, aggregation: str, transport,
         n_samples=n, party_dims=(d // num_parties,) * num_parties,
         num_bins=tree.num_bins, max_depth=tree.max_depth,
         aggregation=aggregation, hist_subtraction=subtraction,
+        max_active_nodes=max_active_nodes,
     )
     ledger = protocol.ProtocolLedger(spec=spec, cfg=cfg, transport=transport)
     ledger.record_run(per_tree, grad)
@@ -335,8 +355,61 @@ def check_reconciliation(num_parties: int, aggregation: str, transport,
     print(
         f"OK reconciliation: parties={num_parties} {aggregation}/{tag} "
         f"shard_samples={shard_samples} subtraction={subtraction} "
+        f"depth={max_depth} budget={max_active_nodes} "
         f"total={rec['total']['measured']} bytes (exact match)"
     )
+
+
+def check_round_collective_counts(num_parties: int, n_trees: int) -> None:
+    """Round-engine structural contract (DESIGN.md §9): the traced round
+    program records exactly ONE histogram collective per level — the whole
+    round's (T, active, d_party, B, 3) payload — independent of T."""
+    mesh = jax.make_mesh((1, num_parties), ("data", "model"))
+    tree = TreeConfig(max_depth=3, num_bins=16)
+    rc = compress.probe_round_collectives(
+        mesh, tree, n_trees, aggregation="histogram",
+        n_samples=512, num_features=num_parties * 2,
+    )
+    counts = rc["counts"]
+    assert counts.get("histograms") == tree.max_depth, counts
+    assert counts.get("feature_mask") == tree.max_depth, counts
+    assert counts.get("id_partition") == tree.max_depth, counts
+    print(f"OK round collectives: parties={num_parties} T={n_trees} "
+          f"histogram records per level == 1 ({counts['histograms']} levels)")
+
+
+def check_shared_root_tolerance(num_parties: int, bound: float = 5e-3) -> None:
+    """Shared-root caching (DESIGN.md §9) composes with the federated path:
+    end metrics of a full run with shared_root on (high-rho schedule, so the
+    engines take the delta path) track the direct pipeline within the §5/§6
+    tolerance class — centralized and federated alike."""
+    import dataclasses
+
+    mesh = jax.make_mesh((1, num_parties), ("data", "model"))
+    x, y = _tolerance_data(num_parties)
+    base = FedGBFConfig(
+        rounds=4, n_trees_max=3, n_trees_min=2, rho_id_min=0.6, rho_id_max=0.9,
+        tree=TreeConfig(max_depth=3, num_bins=32),
+    )
+    shared = dataclasses.replace(
+        base, tree=dataclasses.replace(base.tree, shared_root=True)
+    )
+    model_d, _ = boosting.train_fedgbf(x, y, base, jax.random.PRNGKey(0))
+    model_s, _ = boosting.train_fedgbf(x, y, shared, jax.random.PRNGKey(0))
+    backend = vfl.make_vfl_backend(mesh, shared.tree, aggregation="histogram")
+    with use_mesh(mesh):
+        model_f, _ = boosting.train_fedgbf(
+            x, y, shared, jax.random.PRNGKey(0), backend=backend
+        )
+    for name, pair in (("central", model_s), ("federated", model_f)):
+        deltas = _metric_deltas(y, model_d, pair, x)
+        for metric, delta in deltas.items():
+            assert delta <= bound, (
+                f"shared-root {name} {metric} delta {delta:.2e} exceeds "
+                f"{bound:.0e}"
+            )
+    print("OK shared-root tolerance: central + federated within "
+          f"{bound:.0e} of the direct pipeline")
 
 
 def check_subtraction_hist_cut(num_parties: int, transport) -> None:
@@ -372,7 +445,7 @@ def main() -> int:
         for shard_samples in (False, True):
             check(num_parties=4, aggregation=aggregation, shard_samples=shard_samples)
     check(num_parties=2, aggregation="histogram", shard_samples=True)
-    # Sibling subtraction (DESIGN.md §8): federated-vs-centralized stays
+    # Sibling subtraction (DESIGN.md §6): federated-vs-centralized stays
     # bit-identical with the pipeline enabled on BOTH sides; the
     # subtraction-vs-direct relation is a separate tolerance contract.
     for aggregation in ("histogram", "argmax"):
@@ -381,10 +454,24 @@ def main() -> int:
     check(num_parties=4, aggregation="histogram", shard_samples=True,
           subtraction=True)
     check_subtraction_vs_direct()
+    # Round engine (DESIGN.md §9): deep trees under frontier compaction stay
+    # bit-identical fed-vs-central (compaction is deterministic in the cfg,
+    # so both sides build the same trees), one collective per level
+    # regardless of T, and shared-root caching stays in tolerance.
+    for max_depth, budget in ((4, 4), (5, 4), (5, 8)):
+        check(num_parties=4, aggregation="histogram", shard_samples=False,
+              subtraction=True, max_depth=max_depth, max_active_nodes=budget)
+    check(num_parties=4, aggregation="argmax", shard_samples=False,
+          subtraction=False, max_depth=5, max_active_nodes=4)
+    check(num_parties=4, aggregation="histogram", shard_samples=True,
+          subtraction=True, max_depth=4, max_active_nodes=4)
+    for n_trees in (1, 4):
+        check_round_collective_counts(num_parties=4, n_trees=n_trees)
+    check_shared_root_tolerance(num_parties=2)
     for aggregation in ("histogram", "argmax"):
         for degenerate in ("gamma", "min_child_weight"):
             check_no_valid_split(4, aggregation, degenerate)
-    # Compression subsystem (DESIGN.md §7): strict for the lossless pieces,
+    # Compression subsystem (DESIGN.md §5): strict for the lossless pieces,
     # tolerance for the quantized transports, exact byte reconciliation for all.
     for k in (1, 4):
         check_topk_lossless(num_parties=4, k=k)
@@ -410,6 +497,13 @@ def main() -> int:
         check_reconciliation(4, aggregation, transport, subtraction=True)
     for transport in (None, compress.Q8):
         check_subtraction_hist_cut(4, transport)
+    # depth-5 compaction: the active-width wire model reconciles exactly,
+    # raw and quantized, with and without the subtraction halving.
+    for transport, subtraction in ((None, True), (None, False),
+                                   (compress.Q8, True)):
+        check_reconciliation(4, "histogram", transport,
+                             subtraction=subtraction, max_depth=5,
+                             max_active_nodes=4)
     # sharded: the data-sharded routing psum must scale back to the global
     # payload (per-shard slice x shard count)
     check_reconciliation(4, "histogram", compress.Q8, shard_samples=True)

@@ -14,6 +14,8 @@ federated models locally.
 
 from __future__ import annotations
 
+from functools import lru_cache, partial
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -50,7 +52,7 @@ def make_vfl_backend(
       shard_samples: also shard the sample axis over the data axes (the
         multi-worker extension; histograms/leaf stats psum over those axes).
       transport: ``compress.TransportSpec`` selecting the wire format of the
-        per-level exchange (DESIGN.md §7): None/"raw" = full-precision
+        per-level exchange (DESIGN.md §5): None/"raw" = full-precision
         float32; "quantized" (histogram mode) = int8/int16 payloads +
         per-(node, feature, channel) scales; "topk" (argmax mode) = k
         candidates per node per party.
@@ -64,13 +66,16 @@ def make_vfl_backend(
     if transport is None:
         transport = compress.RAW
 
+    # Round-native providers (DESIGN.md §9): the tree axis is explicit, so
+    # each level's party exchange is ONE collective carrying the whole
+    # round's (T, active, d_party, B, ...) payload.
     if aggregation == "histogram":
         if transport.kind == "quantized":
-            histogram_fn = compress.quantized_histogram_fn(
+            histogram_fn = compress.quantized_round_histogram_fn(
                 party_axis, data_axes, transport, meter=meter
             )
         elif transport.kind == "raw":
-            histogram_fn = aggregator.federated_histogram_fn(
+            histogram_fn = aggregator.federated_round_histogram_fn(
                 party_axis, data_axes, meter=meter
             )
         else:
@@ -78,15 +83,19 @@ def make_vfl_backend(
                 f"transport {transport.kind!r} does not apply to the "
                 "histogram aggregation (use 'raw' or 'quantized')"
             )
-        choose_fn = aggregator.centralized_choose_fn(cfg, party_axis, meter=meter)
+        choose_fn = aggregator.centralized_round_choose_fn(
+            cfg, party_axis, meter=meter
+        )
     elif aggregation == "argmax":
-        histogram_fn = aggregator.local_histogram_fn(party_axis, data_axes)
+        histogram_fn = aggregator.local_round_histogram_fn(party_axis, data_axes)
         if transport.kind == "topk":
-            choose_fn = compress.topk_choose_fn(
+            choose_fn = compress.topk_round_choose_fn(
                 cfg, transport.k, party_axis, meter=meter
             )
         elif transport.kind == "raw":
-            choose_fn = aggregator.federated_choose_fn(cfg, party_axis, meter=meter)
+            choose_fn = compress.topk_round_choose_fn(
+                cfg, 1, party_axis, meter=meter
+            )
         else:
             raise ValueError(
                 f"transport {transport.kind!r} does not apply to the "
@@ -94,14 +103,14 @@ def make_vfl_backend(
             )
     else:
         raise ValueError(f"unknown aggregation {aggregation!r}")
-    route_fn = aggregator.federated_route_fn(party_axis, meter=meter)
-    leaf_fn = aggregator.local_leaf_fn(data_axes=data_axes)
-    # Subtraction pipeline (DESIGN.md §8): no dedicated provider needed —
-    # ``build_tree`` derives ``as_child_fn(histogram_fn)`` from the transport
-    # above, so the left-mask/halve staging runs inside the shard_map body
-    # and the party all_gather (raw or quantized, metered either way) ships
-    # the half-frontier payload; every party derives the right siblings
-    # locally after the merge.
+    route_fn = aggregator.federated_round_route_fn(party_axis, meter=meter)
+    leaf_fn = aggregator.local_round_leaf_fn(data_axes=data_axes)
+    # Subtraction pipeline (DESIGN.md §6): no dedicated provider needed —
+    # ``build_round`` derives ``as_round_child_fn(histogram_fn)`` from the
+    # transport above, so the left-mask/halve staging runs inside the
+    # shard_map body and the party all_gather (raw or quantized, metered
+    # either way) ships the half-frontier payload; every party derives the
+    # right siblings locally after the merge.
 
     impl = f"vfl-{aggregation}"
     if transport.kind != "raw":
@@ -117,10 +126,10 @@ def make_vfl_backend(
     )
     inner = TreeBackend(
         descriptor=descriptor,
-        histogram_fn=histogram_fn,
-        choose_fn=choose_fn,
-        route_fn=route_fn,
-        leaf_fn=leaf_fn,
+        round_histogram_fn=histogram_fn,
+        round_choose_fn=choose_fn,
+        round_route_fn=route_fn,
+        round_leaf_fn=leaf_fn,
     )
 
     sample_spec = P(data_axes) if data_axes else P()
@@ -132,41 +141,52 @@ def make_vfl_backend(
         P(None, party_axis),                                   # fmask (T, d)
     )
 
-    def _forest_body(binned_shard, g, h, smask, fmask_shard):
-        return forest_mod.build_forest.__wrapped__(  # un-jitted inner
-            binned_shard, g, h, smask, fmask_shard, cfg, backend=inner,
+    # The shard_map bodies close over the static shared-root buffer width
+    # (``root_delta_rows``, DESIGN.md §9) — a local compute transformation
+    # inside each party's histogram program, so the collective payloads are
+    # unchanged.  One wrapped program per distinct width, cached.
+    @lru_cache(maxsize=None)
+    def _sharded(rdr: int):
+        def _forest_body(binned_shard, g, h, smask, fmask_shard):
+            return forest_mod.build_forest.__wrapped__(  # un-jitted inner
+                binned_shard, g, h, smask, fmask_shard, cfg, backend=inner,
+                root_delta_rows=rdr,
+            )
+
+        return shard_map(
+            _forest_body,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=(P(), sample_spec),  # (trees replicated, train_pred)
+            check_vma=False,
         )
 
-    def _forest_body_per_tree(binned_shard, g, h, smask, fmask_shard):
-        return forest_mod._forest_per_tree(  # un-jitted per-tree inner
-            binned_shard, g, h, smask, fmask_shard, cfg, backend=inner,
-        )
-
-    sharded = shard_map(
-        _forest_body,
-        mesh=mesh,
-        in_specs=in_specs,
-        out_specs=(P(), sample_spec),  # (trees replicated, train_pred (n,))
-        check_vma=False,
-    )
     # Per-tree variant: predictions keep the tree axis (T, n) — replicated on
     # the party axis (each party computes the full routing via the psum'd
     # bitmaps), sharded like the samples on the data axes.
-    sharded_per_tree = shard_map(
-        _forest_body_per_tree,
-        mesh=mesh,
-        in_specs=in_specs,
-        out_specs=(P(), P(None, sample_spec[0] if data_axes else None)),
-        check_vma=False,
-    )
+    @lru_cache(maxsize=None)
+    def _sharded_per_tree(rdr: int):
+        def _forest_body_per_tree(binned_shard, g, h, smask, fmask_shard):
+            return forest_mod._forest_per_tree(  # un-jitted per-tree inner
+                binned_shard, g, h, smask, fmask_shard, cfg, backend=inner,
+                root_delta_rows=rdr,
+            )
 
-    @jax.jit
-    def _run(binned, g, h, sample_mask, feature_mask):
-        return sharded(binned, g, h, sample_mask, feature_mask)
+        return shard_map(
+            _forest_body_per_tree,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=(P(), P(None, sample_spec[0] if data_axes else None)),
+            check_vma=False,
+        )
 
-    @jax.jit
-    def _run_per_tree(binned, g, h, sample_mask, feature_mask):
-        return sharded_per_tree(binned, g, h, sample_mask, feature_mask)
+    @partial(jax.jit, static_argnames=("rdr",))
+    def _run(binned, g, h, sample_mask, feature_mask, rdr=0):
+        return _sharded(rdr)(binned, g, h, sample_mask, feature_mask)
+
+    @partial(jax.jit, static_argnames=("rdr",))
+    def _run_per_tree(binned, g, h, sample_mask, feature_mask, rdr=0):
+        return _sharded_per_tree(rdr)(binned, g, h, sample_mask, feature_mask)
 
     def _check(binned, _cfg):
         """The tree config is baked into the shard_map program, so a
@@ -185,7 +205,8 @@ def make_vfl_backend(
                 "pad columns with data.tabular.pad_features"
             )
 
-    def forest_builder(binned, g, h, sample_mask, feature_mask, _cfg=None):
+    def forest_builder(binned, g, h, sample_mask, feature_mask, _cfg=None,
+                       root_delta_rows=0):
         _check(binned, _cfg)
         if meter is not None:
             # The per-round (g, h) broadcast active -> each passive party.
@@ -193,16 +214,18 @@ def make_vfl_backend(
             # it is metered at the program boundary from the actual arrays.
             meter.record("grad_broadcast", g)
             meter.record("grad_broadcast", h)
-        return _run(binned, g, h, sample_mask.astype(jnp.float32), feature_mask)
+        return _run(binned, g, h, sample_mask.astype(jnp.float32),
+                    feature_mask, rdr=root_delta_rows)
 
     def forest_builder_per_tree(binned, g, h, sample_mask, feature_mask,
-                                _cfg=None):
+                                _cfg=None, root_delta_rows=0):
         _check(binned, _cfg)
         if meter is not None:
             meter.record("grad_broadcast", g)
             meter.record("grad_broadcast", h)
         return _run_per_tree(
-            binned, g, h, sample_mask.astype(jnp.float32), feature_mask
+            binned, g, h, sample_mask.astype(jnp.float32), feature_mask,
+            rdr=root_delta_rows,
         )
 
     # The per-node collectives live only on the INNER backend consumed inside
@@ -243,7 +266,7 @@ def make_federated_forest_fn(
 
 # Registry entries: vfl backends bind a mesh + tree config at construction,
 # e.g. ``get_backend("vfl-argmax", mesh=mesh, tree=TreeConfig(...))``.
-# Compressed-transport variants (DESIGN.md §7) are distinct registry names,
+# Compressed-transport variants (DESIGN.md §5) are distinct registry names,
 # not kwargs, so scaling work stays registry factories per DESIGN.md §1.
 def _vfl_factory(aggregation: str, shard_samples: bool, transport=None):
     def factory(mesh=None, tree=None, **kw):
@@ -255,7 +278,7 @@ def _vfl_factory(aggregation: str, shard_samples: bool, transport=None):
         explicit = kw.pop("transport", None)
         if (transport is not None and explicit is not None
                 and explicit != transport):
-            # The registry name encodes the transport (DESIGN.md §1/§7); a
+            # The registry name encodes the transport (DESIGN.md §1/§5); a
             # conflicting explicit spec would silently ship a different wire
             # format than the name promises.
             raise ValueError(

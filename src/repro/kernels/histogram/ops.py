@@ -11,10 +11,16 @@ Drop-in replacements for ``core.histogram.compute_histogram``:
   ``histogram_dispatch("pallas-fused")``; what the ``local-pallas`` backend
   runs);
 * ``compute_histogram_pallas_fused_child`` — its child-only variant for the
-  sibling-subtraction pipeline (DESIGN.md §8): left-mask and parent ids are
+  sibling-subtraction pipeline (DESIGN.md §6): left-mask and parent ids are
   formed in-kernel and the one-hot contraction runs at half-frontier width
   (``histogram_dispatch("pallas-fused-child")``; the ``local-pallas``
-  backend's ``child_histogram_fn``).
+  backend's ``child_histogram_fn``);
+* ``compute_round_histogram_pallas_fused[_child]`` — the round-native
+  variants (DESIGN.md §9): the tree axis is a kernel grid dimension, so ONE
+  launch accumulates the whole round's (T, nodes, d, B, 3) histogram with
+  the tree-invariant operands (binned, g, h) shared across the tree grid
+  (``histogram_dispatch("pallas-fused-round[-child]")``; what the
+  ``local-pallas`` backend's ``round_*`` providers run).
 
 Both handle padding to tile boundaries and un-padding of the result.
 ``interpret`` defaults to True off TPU so the same code paths validate on
@@ -33,7 +39,10 @@ from repro.kernels.histogram.histogram import (
     STATS_PAD,
     histogram_pallas_call,
 )
-from repro.kernels.histogram.train_histogram import fused_histogram_pallas_call
+from repro.kernels.histogram.train_histogram import (
+    fused_histogram_pallas_call,
+    fused_round_histogram_pallas_call,
+)
 
 
 def _on_tpu() -> bool:
@@ -160,5 +169,96 @@ def compute_histogram_pallas_fused_child(
     """Child-only provider for ``TreeBackend.child_histogram_fn``: left-child
     histograms at half-frontier width, all staging fused in-kernel."""
     return compute_histogram_pallas_fused(
+        binned, g, h, weight, assign, num_parents, num_bins, child=True, **kw
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "num_nodes", "num_bins", "tile_n", "feat_block", "interpret", "child",
+        "root_delta_rows", "level",
+    ),
+)
+def compute_round_histogram_pallas_fused(
+    binned: jnp.ndarray,
+    g: jnp.ndarray,
+    h: jnp.ndarray,
+    weight: jnp.ndarray,
+    assign: jnp.ndarray,
+    num_nodes: int,
+    num_bins: int,
+    *,
+    tile_n: int = 512,
+    feat_block: int = 8,
+    interpret: bool | None = None,
+    child: bool = False,
+    root_delta_rows: int = 0,
+    level: int = 0,
+) -> jnp.ndarray:
+    """Round-native provider (``core.histogram.compute_round_histogram``
+    contract) served by the tree-grid fused kernel: ONE kernel launch
+    accumulates all T trees' histograms, with ``binned``/``g``/``h`` blocks
+    shared across the tree grid axis (the round's trees differ only in
+    their (weight, assign) masks).
+
+    With ``child=True`` it is the subtraction pipeline's round child
+    provider; with ``root_delta_rows > 0`` (level 0) the shared-root
+    derivation routes through ``histogram.root_histogram_via_delta`` with
+    the per-tree fused kernel as the delta accumulator.
+
+    Args:
+      weight / assign: (T, n).
+    Returns:
+      (T, num_nodes, d, num_bins, 3) float32.
+    """
+    if root_delta_rows:
+        from repro.core.histogram import root_histogram_via_delta
+
+        return root_histogram_via_delta(
+            binned, g, h, weight, num_bins, root_delta_rows,
+            base_tree_fn=compute_histogram_pallas_fused,
+        )
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, d = binned.shape
+    t = weight.shape[0]
+    nb = num_nodes * num_bins
+    nb_pad = _round_up(nb, 128)  # MXU lane alignment (see kernel docstring)
+
+    n_pad = _round_up(n, tile_n)
+    d_pad = _round_up(d, feat_block)
+    pad_n = n_pad - n
+    binned_p = jnp.pad(binned, ((0, pad_n), (0, d_pad - d)))
+    col = lambda v: jnp.pad(v.astype(jnp.float32), (0, pad_n))[:, None]
+    tree_col = lambda v: jnp.pad(v, ((0, 0), (0, pad_n)))[:, :, None]
+    assign_p = tree_col(assign)
+    w_p = tree_col(weight.astype(jnp.float32))
+
+    hist = fused_round_histogram_pallas_call(
+        binned_p, assign_p, col(g), col(h), w_p, nb_pad, num_bins,
+        tile_n=tile_n, feat_block=feat_block, interpret=interpret,
+        child_mode=child,
+    )  # (T, d_pad, nb_pad, STATS_PAD)
+
+    hist = hist[:, :d, :nb, :STATS]
+    return hist.reshape(t, d, num_nodes, num_bins, STATS).transpose(
+        0, 2, 1, 3, 4
+    )
+
+
+def compute_round_histogram_pallas_fused_child(
+    binned: jnp.ndarray,
+    g: jnp.ndarray,
+    h: jnp.ndarray,
+    weight: jnp.ndarray,
+    assign: jnp.ndarray,
+    num_parents: int,
+    num_bins: int,
+    **kw,
+) -> jnp.ndarray:
+    """Round child provider for ``TreeBackend.round_child_histogram_fn``:
+    the whole round's left-child histograms in one tree-grid launch."""
+    return compute_round_histogram_pallas_fused(
         binned, g, h, weight, assign, num_parents, num_bins, child=True, **kw
     )

@@ -46,7 +46,7 @@ def _fused_histogram_kernel(
     out_ref: (feat_block, nb, STATS_PAD) float32 accumulated histogram.
 
     ``child_mode`` is the subtraction pipeline's left-child-only variant
-    (DESIGN.md §8): samples routed right (odd ``assign``) are weight-masked
+    (DESIGN.md §6): samples routed right (odd ``assign``) are weight-masked
     to zero and the node id halves to the parent index — both formed in
     VREGs, like the rest of the staging, so the half-width pass adds no HBM
     traffic.  ``nb`` is then ``num_parents * num_bins`` (half the frontier).
@@ -134,5 +134,114 @@ def fused_histogram_pallas_call(
         ],
         out_specs=pl.BlockSpec((feat_block, nb, STATS_PAD), lambda i, j: (j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((d_pad, nb, STATS_PAD), jnp.float32),
+        interpret=interpret,
+    )(binned, assign, g, h, w)
+
+
+def _fused_round_histogram_kernel(
+    binned_ref, assign_ref, g_ref, h_ref, w_ref, out_ref,
+    *, nb: int, num_bins: int, feat_block: int, child_mode: bool = False,
+):
+    """One grid step of the ROUND kernel (DESIGN.md §9): accumulate
+    ``feat_block`` features of one sample tile for one TREE of the round.
+
+    The tree axis is a grid dimension, not a vmap: ``binned``/``g``/``h``
+    blocks are shared across the tree grid (a round's trees differ only in
+    their masks, eq. 4), while ``assign``/``w`` (and the output block) index
+    by the tree id.  Same fused in-VREG staging as
+    ``_fused_histogram_kernel``; ``child_mode`` is the subtraction
+    pipeline's left-child variant (left-mask + parent ids in VREGs).
+
+    binned_ref: (tile_n, feat_block) int32 (tree-invariant block);
+    assign_ref / w_ref: (1, tile_n, 1) — this tree's slice;
+    g_ref / h_ref: (tile_n, 1) float32 shared derivatives;
+    out_ref: (1, feat_block, nb, STATS_PAD) — this tree's histogram block.
+    """
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tile_n = binned_ref.shape[0]
+    gv = g_ref[...]          # (T, 1)
+    hv = h_ref[...]
+    wv = w_ref[0]            # strip the tree block dim -> (T, 1)
+    assign = assign_ref[0]
+    if child_mode:
+        wv = wv * (assign % 2 == 0).astype(jnp.float32)
+        assign = assign // 2
+    data = jnp.concatenate(
+        [gv * wv, hv * wv, wv,
+         jnp.zeros((tile_n, STATS_PAD - 3), jnp.float32)],
+        axis=1,
+    )  # (T, STATS_PAD)
+    node = assign[:, 0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tile_n, nb), 1)
+
+    def body(f, carry):
+        ids_col = node * num_bins + binned_ref[:, f]
+        onehot = (ids_col[:, None] == iota).astype(jnp.float32)
+        acc = jax.lax.dot_general(
+            onehot, data,
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        out_ref[0, f, :, :] += acc
+        return carry
+
+    jax.lax.fori_loop(0, feat_block, body, 0)
+
+
+def fused_round_histogram_pallas_call(
+    binned: jnp.ndarray,
+    assign: jnp.ndarray,
+    g: jnp.ndarray,
+    h: jnp.ndarray,
+    w: jnp.ndarray,
+    nb: int,
+    num_bins: int,
+    *,
+    tile_n: int = 512,
+    feat_block: int = 8,
+    interpret: bool = False,
+    child_mode: bool = False,
+) -> jnp.ndarray:
+    """Raw round-kernel pallas_call. Caller guarantees padding invariants
+    (see ops.py):
+
+    binned (n_pad, d_pad) int32 shared by all trees; assign / w
+    (n_trees, n_pad, 1) per-tree; g / h (n_pad, 1) float32 shared.  Grid is
+    (n_trees, sample tiles, feature blocks) — for a fixed (tree, feature
+    block) the sample-tile dimension revisits the output block with the
+    standard sequential-grid accumulator pattern (init at tile 0).
+
+    Returns (n_trees, d_pad, nb, STATS_PAD) float32.
+    """
+    n_trees = assign.shape[0]
+    n_pad, d_pad = binned.shape
+    grid = (n_trees, n_pad // tile_n, d_pad // feat_block)
+    tree_vec_spec = pl.BlockSpec((1, tile_n, 1), lambda t, i, j: (t, i, 0))
+    shared_vec_spec = pl.BlockSpec((tile_n, 1), lambda t, i, j: (i, 0))
+
+    return pl.pallas_call(
+        functools.partial(
+            _fused_round_histogram_kernel,
+            nb=nb, num_bins=num_bins, feat_block=feat_block,
+            child_mode=child_mode,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, feat_block), lambda t, i, j: (i, j)),
+            tree_vec_spec,   # assign
+            shared_vec_spec,  # g
+            shared_vec_spec,  # h
+            tree_vec_spec,   # w
+        ],
+        out_specs=pl.BlockSpec(
+            (1, feat_block, nb, STATS_PAD), lambda t, i, j: (t, j, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (n_trees, d_pad, nb, STATS_PAD), jnp.float32
+        ),
         interpret=interpret,
     )(binned, assign, g, h, w)

@@ -31,7 +31,7 @@ from repro.launch.dryrun import REPORT_DIR
 
 
 def run(aggregation: str, n=150_000, d=16, n_trees=5, multi_pod=False,
-        hist_subtraction=False) -> dict:
+        hist_subtraction=False, max_depth=3, max_active_nodes=0) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.devices.size
     # round the sample count up to the data-sharding granularity (padded
@@ -41,8 +41,9 @@ def run(aggregation: str, n=150_000, d=16, n_trees=5, multi_pod=False,
         if a in mesh.shape:
             shards *= mesh.shape[a]
     n = ((n + shards - 1) // shards) * shards
-    cfg = TreeConfig(max_depth=3, num_bins=32,
-                     hist_subtraction=hist_subtraction)
+    cfg = TreeConfig(max_depth=max_depth, num_bins=32,
+                     hist_subtraction=hist_subtraction,
+                     max_active_nodes=max_active_nodes)
     backend = vfl.make_vfl_backend(
         mesh, cfg, aggregation=aggregation, shard_samples=True
     )
@@ -67,10 +68,14 @@ def run(aggregation: str, n=150_000, d=16, n_trees=5, multi_pod=False,
     mem = compiled.memory_analysis()
     report = {
         "tag": f"fedgbf__forest_round__{'2x16x16' if multi_pod else '16x16'}"
-               f"__{aggregation}{'__sub' if hist_subtraction else ''}",
+               f"__{aggregation}{'__sub' if hist_subtraction else ''}"
+               + (f"__d{max_depth}" if max_depth != 3 else "")
+               + (f"__a{max_active_nodes}" if max_active_nodes else ""),
         "status": "ok",
         "aggregation": aggregation,
         "hist_subtraction": hist_subtraction,
+        "max_depth": max_depth,
+        "max_active_nodes": max_active_nodes,
         "chips": chips,
         "n": n, "d": d, "n_trees": n_trees,
         "flops_per_dev": float(cost.get("flops", 0.0)),
@@ -101,13 +106,24 @@ def main() -> int:
             report = run(agg, multi_pod=multi_pod)
             if agg == "histogram" and not multi_pod:
                 base = report
-    # Sibling-subtraction pipeline (DESIGN.md §8) on the paper-faithful
+    # Sibling-subtraction pipeline (DESIGN.md §6) on the paper-faithful
     # histogram exchange: the before/after is the compiled collective-bytes
     # cut of shipping only the left children at levels >= 1.
     sub = run("histogram", multi_pod=False, hist_subtraction=True)
     if sub["collective_bytes_per_dev"]:
         cut = base["collective_bytes_per_dev"] / sub["collective_bytes_per_dev"]
         print(f"[OK] subtraction collective-bytes cut (histogram mode): "
+              f"{cut:.2f}x")
+    # Round engine (DESIGN.md §9): deep-tree frontier compaction — the
+    # before/after is the compiled collective-bytes cut of shipping only the
+    # static live-slot budget at depth 5 instead of the 2^L frontier.
+    deep = run("histogram", multi_pod=False, hist_subtraction=True,
+               max_depth=5)
+    comp = run("histogram", multi_pod=False, hist_subtraction=True,
+               max_depth=5, max_active_nodes=4)
+    if comp["collective_bytes_per_dev"]:
+        cut = deep["collective_bytes_per_dev"] / comp["collective_bytes_per_dev"]
+        print(f"[OK] depth-5 frontier-compaction collective-bytes cut: "
               f"{cut:.2f}x")
     return 0
 

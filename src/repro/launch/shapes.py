@@ -34,7 +34,7 @@ SHAPES = {
     "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
 }
 
-# long_500k applicability (DESIGN.md §5): SSM/hybrid/linear-attention archs
+# long_500k applicability (DESIGN.md §7): SSM/hybrid/linear-attention archs
 # plus dense archs with a sliding-window variant.
 LONG_OK = {"zamba2-7b", "rwkv6-7b", "gemma2-2b", "mixtral-8x22b"}
 
@@ -42,7 +42,7 @@ LONG_OK = {"zamba2-7b", "rwkv6-7b", "gemma2-2b", "mixtral-8x22b"}
 def applicable(arch_id: str, shape_name: str) -> tuple[bool, str]:
     """(runs?, reason-if-skipped)."""
     if shape_name == "long_500k" and arch_id not in LONG_OK:
-        return False, "full-attention arch: long_500k skipped (DESIGN.md §5)"
+        return False, "full-attention arch: long_500k skipped (DESIGN.md §7)"
     return True, ""
 
 

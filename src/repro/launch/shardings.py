@@ -1,6 +1,6 @@
 """Parameter / activation / cache PartitionSpecs for the LM substrate.
 
-Rules (DESIGN.md §6): weight matrices shard their contraction structure as
+Rules (DESIGN.md §8): weight matrices shard their contraction structure as
 (FSDP over "data", tensor-parallel over "model") —
 
   up-projections   (..., D_in, D_out):  P(..., "data", "model")

@@ -28,7 +28,7 @@ from repro.data import synthetic, tabular
 from repro.federation import vfl  # noqa: F401  (registers vfl-* backends)
 
 # All registered backends are launchable, incl. the compressed-transport
-# variants (vfl-histogram-q8/q16, vfl-argmax-topk; DESIGN.md §7).
+# variants (vfl-histogram-q8/q16, vfl-argmax-topk; DESIGN.md §5).
 VFL_BACKENDS = tuple(
     n for n in backend_mod.available_backends() if n.startswith("vfl")
 )
@@ -59,19 +59,36 @@ def main() -> None:
     ap.add_argument("--sampling", default="uniform",
                     choices=("uniform", "goss"),
                     help="rho_id sample policy: uniform (paper eq. 4) or "
-                         "GOSS (top-|g| + amplified random rest; DESIGN.md §7)")
-    ap.add_argument("--hist-subtraction", action="store_true",
+                         "GOSS (top-|g| + amplified random rest; DESIGN.md §5)")
+    ap.add_argument("--hist-subtraction", action=argparse.BooleanOptionalAction,
+                    default=True,
                     help="sibling-subtraction histogram pipeline (DESIGN.md "
-                         "§8): levels >= 1 compute/exchange only left-child "
-                         "histograms and derive the siblings — halves the "
-                         "per-level histogram work and, on vfl-* backends, "
-                         "the dominant wire message (1.75x phase cut at "
-                         "depth 3)")
+                         "§6, ON by default): levels >= 1 compute/exchange "
+                         "only left-child histograms and derive the siblings "
+                         "— halves the per-level histogram work and, on "
+                         "vfl-* backends, the dominant wire message (1.75x "
+                         "phase cut at depth 3).  --no-hist-subtraction "
+                         "restores the direct reference pass.")
+    ap.add_argument("--max-active-nodes", type=int, default=0,
+                    help="frontier-compaction budget for deep trees "
+                         "(DESIGN.md §9): static cap on live frontier nodes "
+                         "per level; dead nodes are masked out of histograms "
+                         "and the party exchange.  0 = uncompacted (use "
+                         "with --max-depth > 3).")
+    ap.add_argument("--shared-root", action="store_true",
+                    help="shared-root caching (DESIGN.md §9): the level-0 "
+                         "pass computes ONE unmasked histogram per round "
+                         "and derives each tree's root as shared - delta "
+                         "(masked-out rows); engaged per round when the "
+                         "rho_id schedule clears the 0.5 crossover "
+                         "(uniform sampling only).")
     args = ap.parse_args()
 
     ds = synthetic.load(args.dataset, n=args.n or None)
     tree = TreeConfig(max_depth=args.max_depth, num_bins=32,
-                      hist_subtraction=args.hist_subtraction)
+                      hist_subtraction=args.hist_subtraction,
+                      max_active_nodes=args.max_active_nodes,
+                      shared_root=args.shared_root)
     cfg = {
         "dynamic_fedgbf": lambda: boosting.dynamic_fedgbf_config(args.rounds, tree=tree),
         "fedgbf": lambda: boosting.FedGBFConfig(
@@ -113,7 +130,7 @@ def main() -> None:
               f"aggregation={aggregation}, "
               f"transport={backend.descriptor.transport}")
         # measured wire bytes reconciled against the wire model, plus the
-        # paper-world Paillier estimate — one shared entry (DESIGN.md §7)
+        # paper-world Paillier estimate — one shared entry (DESIGN.md §5)
         from repro.federation import compress
 
         ledger = compress.reconciled_ledger(

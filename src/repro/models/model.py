@@ -123,7 +123,7 @@ def forward(
     x = layers.embed_tokens(params["embed"], tokens, cfg)
     if cfg.frontend == "vision_stub" and patch_embeds is not None:
         # First num_patches positions carry projected patch embeddings
-        # (the ViT+projector is stubbed per the brief; DESIGN.md §5).
+        # (the ViT+projector is stubbed per the brief; DESIGN.md §7).
         P = patch_embeds.shape[1]
         x = jnp.concatenate(
             [patch_embeds.astype(x.dtype), x[:, P:, :]], axis=1

@@ -9,7 +9,7 @@ these constraints existed. Every helper:
   * silently no-ops when there is no mesh (CPU smoke tests) or when the dim
     is not divisible by the target axis size (MQA kv=1, batch=1, H=9, ...).
 
-Axis conventions match DESIGN.md §6: batch -> ("pod","data"), feature/head/
+Axis conventions match DESIGN.md §8: batch -> ("pod","data"), feature/head/
 expert fan-out -> "model".
 """
 

@@ -1,4 +1,4 @@
-"""Communication-efficiency subsystem (federation/compress.py, DESIGN.md §7).
+"""Communication-efficiency subsystem (federation/compress.py, DESIGN.md §5).
 
 Single-device coverage of the codec, the GOSS masks, the wire model and the
 measured-bytes reconciliation (on a 1-party mesh the full shard_map +
@@ -157,14 +157,15 @@ def test_probe_matches_wire_model(aggregation, transport):
     """Every collective's actual traced payload == the per-party wire-model
     formula, byte for byte (1-party mesh; multi-party in selftest.py)."""
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    cfg = TreeConfig(max_depth=3, num_bins=16)
+    cfg = TreeConfig(max_depth=3, num_bins=16)  # hist_subtraction default ON
     n, d = 500, 4
     per_tree, grad = compress.probe_tree_cost(
         mesh, cfg, aggregation=aggregation, transport=transport,
         n_samples=n, num_features=d,
     )
     wire = protocol.wire_party_tree_cost(n, d, cfg.num_bins, cfg.max_depth,
-                                         aggregation, transport)
+                                         aggregation, transport,
+                                         cfg.hist_subtraction)
     expected = {k: v for k, v in wire.items() if v and k != "grad_broadcast"}
     assert per_tree == expected
     assert grad == n * 2 * 4
@@ -206,6 +207,31 @@ def test_wire_model_quantized_reduction_factor():
     assert raw["histograms"] / q8["histograms"] >= 4.0
     q16 = protocol.wire_party_tree_cost(1000, 8, 32, 3, "histogram", compress.Q16)
     assert raw["histograms"] / q16["histograms"] >= 2.0
+
+
+def test_wire_model_compaction_active_width():
+    """Frontier compaction (DESIGN.md §9): the wire model ships the static
+    live-slot budget per level, not the 2^level frontier — at depth 5 with
+    budget 4 the direct pipeline drops 31 -> 15 node-histograms per tree
+    and the subtraction pipeline 16 -> 12 (left children at PARENT active
+    width), composing in one expression."""
+    full = protocol.wire_party_tree_cost(1000, 8, 32, 5, "histogram", None,
+                                         hist_subtraction=False)
+    comp = protocol.wire_party_tree_cost(1000, 8, 32, 5, "histogram", None,
+                                         hist_subtraction=False,
+                                         max_active_nodes=4)
+    assert full["histograms"] / comp["histograms"] == 31 / 15
+    sub = protocol.wire_party_tree_cost(1000, 8, 32, 5, "histogram", None,
+                                        hist_subtraction=True)
+    sub_comp = protocol.wire_party_tree_cost(1000, 8, 32, 5, "histogram",
+                                             None, hist_subtraction=True,
+                                             max_active_nodes=4)
+    assert sub["histograms"] / sub_comp["histograms"] == 16 / 12
+    # per-level profile: full root, parent-width left children, budget cap
+    levels = protocol.wire_hist_level_bytes(8, 32, 5, None, True, 4)
+    per_node = 32 * 3 * 4 * 8
+    assert levels == [1 * per_node, 1 * per_node, 2 * per_node,
+                      4 * per_node, 4 * per_node]
 
 
 # ---------------------------------------------------------------------------

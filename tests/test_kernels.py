@@ -145,8 +145,14 @@ def test_onehot_identity_matches_segment_sum():
 
 
 def test_kernel_inside_tree_builder():
-    """End-to-end: trees built with the Pallas histogram == segment-sum trees."""
+    """End-to-end: trees built with the Pallas histogram == segment-sum trees.
+
+    The staged kernel has no registry backend of its own, so it rides an
+    ad-hoc ``TreeBackend`` (the per-provider kwargs of the historical
+    ``build_tree`` shim are gone); ``build_round`` lifts the per-tree
+    provider over the tree axis itself."""
     from repro.core import tree
+    from repro.core.backend import BackendDescriptor, TreeBackend
     from repro.core.histogram import histogram_dispatch
     from repro.core.types import TreeConfig
 
@@ -159,10 +165,12 @@ def test_kernel_inside_tree_builder():
     w = jnp.ones(n, jnp.float32)
     fm = jnp.ones(d, bool)
 
-    t_ref, a_ref = tree.build_tree(binned, g, h, w, fm, cfg)
-    t_pal, a_pal = tree.build_tree(
-        binned, g, h, w, fm, cfg, histogram_fn=histogram_dispatch("pallas")
+    bk = TreeBackend(
+        BackendDescriptor(impl="adhoc-pallas-staged", histogram_impl="pallas"),
+        histogram_fn=histogram_dispatch("pallas"),
     )
+    t_ref, a_ref = tree.build_tree(binned, g, h, w, fm, cfg)
+    t_pal, a_pal = tree.build_tree(binned, g, h, w, fm, cfg, backend=bk)
     np.testing.assert_array_equal(np.asarray(t_ref.feature), np.asarray(t_pal.feature))
     np.testing.assert_array_equal(
         np.asarray(t_ref.threshold), np.asarray(t_pal.threshold)
@@ -172,6 +180,65 @@ def test_kernel_inside_tree_builder():
         rtol=1e-5, atol=1e-6,
     )
     np.testing.assert_array_equal(np.asarray(a_ref), np.asarray(a_pal))
+
+
+# ---------------------------------------------------------------------------
+# round (tree-grid) kernel
+# ---------------------------------------------------------------------------
+from repro.kernels.histogram.ops import (  # noqa: E402
+    compute_round_histogram_pallas_fused,
+    compute_round_histogram_pallas_fused_child,
+)
+
+
+@pytest.mark.parametrize(
+    "n,d,B,nodes,T",
+    [
+        (512, 8, 32, 1, 1),    # T = 1 degenerates to the per-tree kernel
+        (700, 9, 16, 4, 3),    # ragged n/d, multi-tree round
+        (513, 5, 8, 2, 5),     # off-by-one tile boundary, paper-width round
+    ],
+)
+def test_round_kernel_matches_round_ref(n, d, B, nodes, T):
+    """The tree-grid kernel (one launch, tree axis on the grid) agrees with
+    the round-native segment reference for every tree of the round."""
+    from repro.core.histogram import compute_round_histogram
+
+    rng = np.random.default_rng(n + d + T)
+    binned = jnp.asarray(rng.integers(0, B, (n, d)), jnp.int32)
+    g = jnp.asarray(rng.normal(size=n), jnp.float32)
+    h = jnp.asarray(rng.random(n) + 0.05, jnp.float32)
+    w = jnp.asarray(rng.integers(0, 2, (T, n)), jnp.float32)
+    assign = jnp.asarray(rng.integers(0, nodes, (T, n)), jnp.int32)
+    out = compute_round_histogram_pallas_fused(binned, g, h, w, assign, nodes, B)
+    ref = compute_round_histogram(binned, g, h, w, assign, nodes, B)
+    assert out.shape == (T, nodes, d, B, 3)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_round_child_kernel_matches_adapted_ref():
+    """The tree-grid child kernel (in-kernel left-mask + parent ids) agrees
+    with the generic ``as_round_child_fn`` adaptation."""
+    from repro.core.histogram import as_round_child_fn, compute_round_histogram
+
+    rng = np.random.default_rng(42)
+    n, d, B, parents, T = 700, 9, 16, 4, 3
+    binned = jnp.asarray(rng.integers(0, B, (n, d)), jnp.int32)
+    g = jnp.asarray(rng.normal(size=n), jnp.float32)
+    h = jnp.asarray(rng.random(n) + 0.05, jnp.float32)
+    w = jnp.asarray(rng.integers(0, 2, (T, n)), jnp.float32)
+    assign = jnp.asarray(rng.integers(0, 2 * parents, (T, n)), jnp.int32)
+    out = compute_round_histogram_pallas_fused_child(
+        binned, g, h, w, assign, parents, B
+    )
+    ref = as_round_child_fn(compute_round_histogram)(
+        binned, g, h, w, assign, parents, B
+    )
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5
+    )
 
 
 # ---------------------------------------------------------------------------

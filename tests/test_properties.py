@@ -80,7 +80,7 @@ def test_histogram_additivity_under_partition(n, d, nodes, parts, seed):
 )
 def test_sibling_subtraction_additive(n, d, parents, seed):
     """parent == left + right for ANY assignment/weights, and the derived
-    frontier matches the direct one (DESIGN.md §8) — the algebra behind
+    frontier matches the direct one (DESIGN.md §6) — the algebra behind
     ``TreeConfig.hist_subtraction``."""
     from repro.core.histogram import as_child_fn, derive_sibling
 
@@ -103,6 +103,43 @@ def test_sibling_subtraction_additive(n, d, parents, seed):
         np.asarray(derive_sibling(parent, left)),
         np.asarray(compute_histogram(binned, g, h, w, assign, 2 * parents, B)),
         rtol=1e-3, atol=1e-4,
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(16, 400),
+    d=st.integers(1, 5),
+    t=st.integers(1, 5),
+    rho=st.floats(0.5, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_shared_root_delta_equals_direct_root(n, d, t, rho, seed):
+    """Shared-root caching (DESIGN.md §9): for ANY uniform 0/1 masks with
+    keep-share >= 0.5, ``shared − delta(masked-out rows)`` equals the direct
+    per-tree root histogram — the linearity-in-weights identity behind
+    ``TreeConfig.shared_root``."""
+    import jax
+
+    from repro.core import forest
+    from repro.core.histogram import compute_round_histogram
+
+    rng = np.random.default_rng(seed)
+    B = 8
+    binned = jnp.asarray(rng.integers(0, B, (n, d)), jnp.int32)
+    g = jnp.asarray(rng.normal(size=n), jnp.float32)
+    h = jnp.asarray(rng.random(n), jnp.float32)
+    n_keep = max(1, int(round(n * rho)))
+    smask, _ = forest.sample_masks_counts(
+        jax.random.PRNGKey(seed % 2**31), n, d, t, n_keep, 1
+    )
+    zeros = jnp.zeros((t, n), jnp.int32)
+    direct = compute_round_histogram(binned, g, h, smask, zeros, 1, B)
+    via_delta = compute_round_histogram(
+        binned, g, h, smask, zeros, 1, B, root_delta_rows=n - n_keep + 1
+    )
+    np.testing.assert_allclose(
+        np.asarray(via_delta), np.asarray(direct), rtol=1e-3, atol=1e-3
     )
 
 

@@ -1,4 +1,4 @@
-"""Sibling-subtraction histogram pipeline (DESIGN.md §8).
+"""Sibling-subtraction histogram pipeline (DESIGN.md §6).
 
 The contract lattice, bottom up:
 
@@ -148,7 +148,7 @@ def test_subtraction_vs_direct_tree_parity(backend, seed):
     fm = jnp.ones(d, bool)
     bk = get_backend(backend)
 
-    cfg_d = TreeConfig(max_depth=3, num_bins=B)
+    cfg_d = TreeConfig(max_depth=3, num_bins=B, hist_subtraction=False)
     cfg_s = TreeConfig(max_depth=3, num_bins=B, hist_subtraction=True)
     t_d, a_d = tree.build_tree(binned, g, h, w, fm, cfg_d, backend=bk)
     t_s, a_s = tree.build_tree(binned, g, h, w, fm, cfg_s, backend=bk)
@@ -167,7 +167,7 @@ def test_subtraction_vs_direct_tree_parity(backend, seed):
 def test_subtraction_forest_and_engines_end_to_end():
     """Full training with hist_subtraction on: scan and loop engines stay
     metric-equivalent to each other, and the end metrics track the direct
-    pipeline within the §7/§8 tolerance class."""
+    pipeline within the §5/§6 tolerance class."""
     rng = np.random.default_rng(11)
     n, d = 1200, 6
     x = rng.normal(size=(n, d)).astype(np.float32)
@@ -175,7 +175,7 @@ def test_subtraction_forest_and_engines_end_to_end():
     x, y = jnp.asarray(x), jnp.asarray(y)
     base = FedGBFConfig(
         rounds=3, n_trees_max=3, n_trees_min=2, rho_id_min=0.5, rho_id_max=0.8,
-        tree=TreeConfig(max_depth=3, num_bins=16),
+        tree=TreeConfig(max_depth=3, num_bins=16, hist_subtraction=False),
     )
     import dataclasses
 
@@ -220,7 +220,7 @@ def test_masks_compose_with_subtraction():
     smask, fmask = forest.goss_masks(
         jax.random.PRNGKey(3), g, d, 3, n_top, n_rand, d
     )
-    cfg_d = TreeConfig(max_depth=3, num_bins=B)
+    cfg_d = TreeConfig(max_depth=3, num_bins=B, hist_subtraction=False)
     cfg_s = TreeConfig(max_depth=3, num_bins=B, hist_subtraction=True)
     trees_d, pred_d = forest.build_forest(binned, g, h, smask, fmask, cfg_d)
     trees_s, pred_s = forest.build_forest(binned, g, h, smask, fmask, cfg_s)

@@ -71,7 +71,7 @@ def test_scanned_engine_history_equals_loop(loss):
 
 
 def test_goss_sampling_scan_equals_loop():
-    """The GOSS rho-mask (DESIGN.md §7) rides the scan engine unchanged:
+    """The GOSS rho-mask (DESIGN.md §5) rides the scan engine unchanged:
     per-slot keys stay prefix-stable, so loop and scan draw identical GOSS
     masks from the round's gradients — trees come out bit-identical and the
     history metrics agree like the uniform path's."""

@@ -23,7 +23,15 @@ regresses on any of the contracts this repo has already banked:
     direct ``T·n``) and cuts >= 1.5x at the probed rho = 0.8 / T = 4
     point; and depth-5 frontier compaction cuts histogram-phase bytes vs
     the uncompacted 2^L frontier with exact reconciliation (all of these
-    are shape-determined, so equality/ratio checks are exact).
+    are shape-determined, so equality/ratio checks are exact);
+  * **sharding + async floors** (DESIGN.md §8/§10) — the bit-packed
+    id_partition broadcast cuts >= 8x vs the int32 wire and the measured
+    bytes sit on the packed model exactly; the async double-buffered
+    exchange matches the sync wire bytes/AUC with exact reconciliation;
+    and the >= 1M-row row-sharded training throughput stays above the
+    committed ``rows_per_s_floor`` in BENCH_train.json (half the banked
+    measurement, so machine variance passes but a sharded-pipeline
+    regression or a silent single-device fallback fails).
 
 Timing comparisons are deliberately ratio-of-the-same-run (subtraction on vs
 off inside one bench invocation), never absolute seconds across machines.
@@ -115,6 +123,34 @@ def main() -> int:
     if base_d5 is not None:
         check(d5 >= base_d5 - RATIO_EPS,
               f"depth-5 compaction cut {d5:.3f}x >= baseline {base_d5:.3f}x")
+
+    # -- sharding + async floors (ISSUE 6) -----------------------------------
+    check(acc.get("id_partition_cut_ge_8x") is True,
+          f"id_partition bit-packing cut "
+          f"{acc.get('id_partition_cut_x', 0):.1f}x >= 8x")
+    check(acc.get("id_partition_measured_on_packed_model") is True,
+          "id_partition measured bytes sit on the packed (1 bit/row) model")
+    check(acc.get("async_measured_match_predicted") is True,
+          "async exchange: measured == predicted (one logical collective "
+          "per level)")
+    check(acc.get("async_bytes_equal_sync") is True,
+          "async exchange: wire bytes == sync vfl-histogram exactly")
+    check(acc.get("async_auc_equal_sync") is True,
+          "async exchange: AUC == sync vfl-histogram exactly")
+
+    sh = fresh_train.get("sharded", {})
+    check(sh.get("n", 0) >= 1_000_000,
+          f"sharded throughput bench runs >= 1M rows (got {sh.get('n')})")
+    check(sh.get("data_shards", 0) >= 2,
+          f"sharded bench uses >= 2 data shards (got {sh.get('data_shards')})")
+    rows_floor = base_train.get("sharded", {}).get("rows_per_s_floor")
+    if rows_floor is not None:
+        got_rows = sh.get("rows_per_s", 0.0)
+        check(got_rows >= rows_floor,
+              f"sharded rows/s {got_rows:,.0f} >= committed floor "
+              f"{rows_floor:,.0f}")
+    else:
+        print("  [--] no committed sharded rows/s floor yet (first run)")
 
     # -- subtraction speedup floor -------------------------------------------
     floor = base_train.get("subtraction", {}).get("speedup_floor")

@@ -26,7 +26,11 @@ round engine): the ``round_engine`` section records the structural floors
 ``benchmarks/ci_guard.py`` enforces — exactly ONE histogram collective per
 level (not T), the shared-root level-0 row volume ``n + T·rdr`` vs the
 direct ``T·n``, and the depth-5 frontier-compaction histogram-byte cut vs
-the uncompacted 2^L frontier (exact reconciliation either way).
+the uncompacted 2^L frontier (exact reconciliation either way).  (ISSUE 6):
+the bit-packed id_partition broadcast cuts >= 8x vs the int32 wire (32x
+measured), and the ``vfl-histogram-async`` double-buffered exchange
+(DESIGN.md §10) matches the sync row's wire bytes and AUC exactly with an
+exact ledger reconciliation.
 
     PYTHONPATH=src python -m benchmarks.comm_bench [--smoke] [--dataset X]
 
@@ -62,30 +66,38 @@ from repro.federation import compress, protocol, vfl
 
 PARTIES = 2
 
-#: benchmarked backends: name -> (aggregation, transport, sampling, hist_sub)
+#: benchmarked backends:
+#:   name -> (aggregation, transport, sampling, hist_sub, async_exchange)
 #: ``+sub`` rows run the sibling-subtraction pipeline (DESIGN.md §6):
 #: same registry backend, ``TreeConfig.hist_subtraction`` switched on — the
 #: per-level exchange ships only the left children (1.75x histogram-phase
 #: cut at depth 3), composing multiplicatively with quantization.
+#: ``-async`` rows run the double-buffered level exchange (DESIGN.md §10):
+#: identical logical payload in two overlapping transfers — wire bytes,
+#: reconciliation, and AUC must all match the sync row exactly.
 BACKENDS = {
-    "vfl-histogram": ("histogram", None, "uniform", False),
-    "vfl-argmax": ("argmax", None, "uniform", False),
-    "vfl-histogram-q8": ("histogram", compress.Q8, "uniform", False),
-    "vfl-histogram-q16": ("histogram", compress.Q16, "uniform", False),
-    "vfl-argmax-topk": ("argmax", compress.TOPK, "uniform", False),
-    "vfl-histogram+goss": ("histogram", None, "goss", False),
-    "vfl-histogram-q8+goss": ("histogram", compress.Q8, "goss", False),
-    "vfl-histogram+sub": ("histogram", None, "uniform", True),
-    "vfl-histogram-q8+sub": ("histogram", compress.Q8, "uniform", True),
+    "vfl-histogram": ("histogram", None, "uniform", False, False),
+    "vfl-argmax": ("argmax", None, "uniform", False, False),
+    "vfl-histogram-q8": ("histogram", compress.Q8, "uniform", False, False),
+    "vfl-histogram-q16": ("histogram", compress.Q16, "uniform", False, False),
+    "vfl-argmax-topk": ("argmax", compress.TOPK, "uniform", False, False),
+    "vfl-histogram+goss": ("histogram", None, "goss", False, False),
+    "vfl-histogram-q8+goss": ("histogram", compress.Q8, "goss", False, False),
+    "vfl-histogram+sub": ("histogram", None, "uniform", True, False),
+    "vfl-histogram-q8+sub": ("histogram", compress.Q8, "uniform", True, False),
+    "vfl-histogram-async": ("histogram", None, "uniform", False, True),
+    "vfl-histogram-async-q8+sub": ("histogram", compress.Q8, "uniform", True,
+                                   True),
 }
 
 
 def run_backend(name, mesh, ds, x_train, x_test, d_pad, cfg, tree_cfg):
-    aggregation, transport, sampling, hist_sub = BACKENDS[name]
+    aggregation, transport, sampling, hist_sub, async_ex = BACKENDS[name]
     tree_cfg = dataclasses.replace(tree_cfg, hist_subtraction=hist_sub)
     run_cfg = dataclasses.replace(cfg, sampling=sampling, tree=tree_cfg)
     backend = vfl.make_vfl_backend(
-        mesh, tree_cfg, aggregation=aggregation, transport=transport
+        mesh, tree_cfg, aggregation=aggregation, transport=transport,
+        async_exchange=async_ex,
     )
     t0 = time.perf_counter()
     model, _ = boosting.train_fedgbf(
@@ -103,6 +115,7 @@ def run_backend(name, mesh, ds, x_train, x_test, d_pad, cfg, tree_cfg):
     ledger = compress.reconciled_ledger(
         mesh, tree_cfg, run_cfg, aggregation=aggregation, transport=transport,
         n_samples=x_train.shape[0], num_features=d_pad,
+        async_exchange=async_ex,
     )
     breakdown = ledger.breakdown()
     return {
@@ -290,6 +303,13 @@ def main(smoke: bool = False, dataset: str | None = None) -> list:
     q8 = results["backends"]["vfl-histogram-q8"]
     sub = results["backends"]["vfl-histogram+sub"]
     q8sub = results["backends"]["vfl-histogram-q8+sub"]
+    async_b = results["backends"]["vfl-histogram-async"]
+    # id_partition bit-packing (DESIGN.md §8): the routing broadcast ships
+    # 1 bit/row instead of the pre-packing int32 — both sides shape-exact,
+    # so the cut is measured-bytes vs the int32-equivalent volume.
+    id_meas = base["measured_bytes"].get("id_partition", 0)
+    id_packed_per_level = (n + 7) // 8
+    id_cut = (n * 4) / id_packed_per_level
     results["acceptance"] = {
         "q8_histogram_phase_reduction_x": q8["histogram_phase_reduction_x"],
         "q8_histogram_phase_reduction_ge_4x":
@@ -310,6 +330,22 @@ def main(smoke: bool = False, dataset: str | None = None) -> list:
         "sub_abs_auc_delta": abs(sub["auc_delta_vs_histogram"]),
         "q8_sub_histogram_phase_reduction_x":
             q8sub["histogram_phase_reduction_x"],
+        # ISSUE 6: bit-packed routing broadcast — >= 8x cut vs the int32
+        # id_partition wire (measured bytes must be on the packed model,
+        # i.e. an exact multiple of ceil(n/8) per level).
+        "id_partition_cut_x": id_cut,
+        "id_partition_cut_ge_8x": id_cut >= 8.0,
+        "id_partition_measured_on_packed_model":
+            id_meas > 0 and id_meas % id_packed_per_level == 0,
+        # ISSUE 6: async double-buffered exchange — the split transfer is
+        # a transport detail, not a payload change: wire bytes and AUC
+        # must equal the sync vfl-histogram row exactly, and the ledger
+        # (which counts ONE logical collective per level) reconciles.
+        "async_measured_match_predicted":
+            async_b["measured_matches_predicted"],
+        "async_bytes_equal_sync":
+            async_b["measured_total"] == base["measured_total"],
+        "async_auc_equal_sync": async_b["auc"] == base["auc"],
         # ISSUE 5: round-engine floors (all shape-exact quantities).
         "round_one_collective_per_level":
             results["round_engine"]["hist_collectives_per_level"] == 1.0,
@@ -359,6 +395,11 @@ def main(smoke: bool = False, dataset: str | None = None) -> list:
           f"(>=1.7x: {acc['sub_histogram_phase_reduction_ge_1.7x']}, "
           f"reconciled: {acc['sub_measured_match_predicted']}); "
           f"q8+sub combined: {acc['q8_sub_histogram_phase_reduction_x']:.1f}x")
+    print(f"  id_partition bit-packing cut: {acc['id_partition_cut_x']:.1f}x "
+          f"(>=8x: {acc['id_partition_cut_ge_8x']}); async exchange: "
+          f"bytes==sync {acc['async_bytes_equal_sync']}, "
+          f"auc==sync {acc['async_auc_equal_sync']}, "
+          f"reconciled {acc['async_measured_match_predicted']}")
     return [
         (f"comm/{name}", r["train_s"] * 1e6 / rounds,
          f"auc={r['auc']:.4f};kB_round={r['measured_bytes_per_round']/1e3:.0f}"

@@ -23,6 +23,14 @@ Reported:
 
 Results land in reports/train_bench.json and the repo-root BENCH_train.json.
 
+The ``sharded`` section (DESIGN.md §8) measures row-sharded multi-host
+throughput at >= 1M synthetic rows under ``vfl-histogram-sharded`` on a
+(data x model) grid of forced host devices — run in a subprocess so the
+parent's jax device state is untouched (same re-exec pattern as
+comm_bench).  The recorded ``rows_per_s_floor`` (half the measurement, so
+CI machine variance passes but a sharding regression fails) is enforced by
+benchmarks/ci_guard.py against the committed BENCH_train.json.
+
     PYTHONPATH=src python -m benchmarks.train_bench [--smoke]
 """
 
@@ -32,6 +40,8 @@ import argparse
 import dataclasses
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -42,6 +52,81 @@ from benchmarks.common import save_report, scale
 from repro.core import boosting
 from repro.core import forest as forest_mod
 from repro.core.types import TreeConfig
+
+#: sharded-throughput bench shape: >= 1M rows (the ISSUE floor), modest
+#: width/rounds so the CI smoke stays minutes, not hours, on one CPU.
+SHARDED_N = 1_048_576
+SHARDED_D = 8
+SHARDED_ROUNDS = 2
+SHARDED_GRID = (4, 2)  # (data_shards, parties) -> 8 forced host devices
+
+
+def _sharded_child() -> None:
+    """Child-process body: train vfl-histogram-sharded at >= 1M rows on a
+    (4 data x 2 model) grid of forced host devices and print one JSON line
+    (the parent parses stdout's last line)."""
+    from repro.compat import use_mesh
+    from repro.federation import vfl
+
+    data_shards, parties = SHARDED_GRID
+    mesh = jax.make_mesh((data_shards, parties), ("data", "model"),
+                         devices=jax.devices()[:data_shards * parties])
+    tree = TreeConfig(max_depth=3, num_bins=32, hist_subtraction=True)
+    cfg = boosting.FedGBFConfig(
+        rounds=SHARDED_ROUNDS, tree=tree, n_trees_max=2, n_trees_min=2,
+        rho_id_min=0.3, rho_id_max=0.3,
+    )
+    backend = vfl.make_vfl_backend(
+        mesh, tree, aggregation="histogram", shard_samples=True
+    )
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(SHARDED_N, SHARDED_D)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 2, SHARDED_N), jnp.float32)
+
+    with use_mesh(mesh):
+        t0 = time.perf_counter()
+        model, _ = boosting.train_fedgbf(
+            x, y, cfg, jax.random.PRNGKey(0), backend=backend,
+            eval_every=SHARDED_ROUNDS,
+        )
+        jax.block_until_ready(model.forests[-1].leaf_weight)
+        cold = time.perf_counter() - t0
+        warm = float("inf")
+        for _ in range(2):
+            t0 = time.perf_counter()
+            model, _ = boosting.train_fedgbf(
+                x, y, cfg, jax.random.PRNGKey(0), backend=backend,
+                eval_every=SHARDED_ROUNDS,
+            )
+            jax.block_until_ready(model.forests[-1].leaf_weight)
+            warm = min(warm, time.perf_counter() - t0)
+
+    print(json.dumps({
+        "backend": "vfl-histogram-sharded",
+        "n": SHARDED_N, "d": SHARDED_D, "rounds": SHARDED_ROUNDS,
+        "data_shards": data_shards, "parties": parties,
+        "cold_s": cold, "warm_s": warm,
+        "rows_per_s": SHARDED_N * SHARDED_ROUNDS / warm,
+    }))
+
+
+def _sharded_bench() -> dict:
+    """Run the >= 1M-row sharded throughput measurement in a subprocess with
+    forced host devices (the parent may already hold a 1-device jax)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count="
+        f"{SHARDED_GRID[0] * SHARDED_GRID[1]}"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.train_bench", "--sharded-child"],
+        env=env, check=True, capture_output=True, text=True,
+    )
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    # floor at half the measurement: CI machine variance passes, a real
+    # sharded-pipeline regression (or a silent fallback to 1 device) fails
+    out["rows_per_s_floor"] = round(0.5 * out["rows_per_s"], 1)
+    return out
 
 
 def _train(engine, x, y, cfg, eval_every):
@@ -142,6 +227,10 @@ def main(smoke: bool = False) -> list:
         # passes but a real pipeline regression does not
         "speedup_floor": round(0.75 * speedup, 3),
     }
+    # -- row-sharded multi-host throughput (DESIGN.md §8), >= 1M rows --------
+    results["sharded"] = _sharded_bench()
+    sh = results["sharded"]
+
     results["interpretation"] = (
         "the loop compiles one forest program per distinct scheduled tree "
         "count and host-syncs every round; the scanned engine factors the "
@@ -168,6 +257,9 @@ def main(smoke: bool = False) -> list:
         f"steady {sub['on_steady_round_s']*1e3:.1f} ms/round "
         f"({sub['on_off_speedup_x']:.2f}x vs direct, "
         f"metric |diff| {sub['metric_max_abs_diff_vs_direct']:.1e})\n"
+        f"  sharded ({sh['data_shards']}x{sh['parties']} grid, "
+        f"n={sh['n']:,}): {sh['rows_per_s']/1e3:.0f}k rows/s "
+        f"(floor {sh['rows_per_s_floor']/1e3:.0f}k)\n"
         f"  metric max |diff|: {results['metric_max_abs_diff']:.2e}"
     )
     return [
@@ -177,12 +269,21 @@ def main(smoke: bool = False) -> list:
          f"1 program, {results['steady_round_speedup_vs_loop']:.2f}x vs loop"),
         ("train/scan_round_subtraction", sub["on_steady_round_s"] * 1e6,
          f"1 program, {sub['on_off_speedup_x']:.2f}x vs direct pipeline"),
+        ("train/sharded_1M_rows", sh["warm_s"] * 1e6,
+         f"{sh['rows_per_s']/1e3:.0f}k rows/s on "
+         f"{sh['data_shards']}x{sh['parties']} grid"),
     ]
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="small shapes for CI (same comparisons)")
+                    help="small shapes for CI (same comparisons; the "
+                         "sharded section stays >= 1M rows)")
+    ap.add_argument("--sharded-child", action="store_true",
+                    help=argparse.SUPPRESS)  # internal: see _sharded_bench
     args = ap.parse_args()
-    main(smoke=args.smoke)
+    if args.sharded_child:
+        _sharded_child()
+    else:
+        main(smoke=args.smoke)

@@ -16,8 +16,15 @@ static argument.  Named backends come from a registry:
                       (lossy; federation/compress.py, DESIGN.md §5);
   ``"vfl-argmax-topk"`` each party ships its k best candidates per node
                       (lossless for any k >= 1);
+  ``"vfl-histogram-async[-q8|-q16]"`` the histogram exchange double-
+                      buffered: the per-level collective ships as two
+                      overlapping transfers (DESIGN.md §10), bit-identical
+                      results, one logical message either way;
   ``"vfl-*-sharded"`` the above with samples additionally sharded over the
-                      data axes (multi-worker extension).
+                      data axes (rows split ``(n/data_shards, ...)`` per
+                      host; histograms/leaf stats psum over the data axes,
+                      uneven row counts pad with weight-0 rows inside the
+                      backend — the multi-host extension, DESIGN.md §8).
 
 The ``vfl-*`` factories need a device mesh and a ``TreeConfig``
 (``get_backend(name, mesh=..., tree=...)``); they are registered lazily by
@@ -58,6 +65,11 @@ class BackendDescriptor:
     shard_samples: bool = False
     transport: str = "raw"
     transport_spec: Optional[object] = None  # compress.TransportSpec (non-raw)
+    # Double-buffered level exchange (DESIGN.md §10): the per-level party
+    # all_gather ships as two overlapping transfers instead of one barrier
+    # collective.  Payloads and results are bit-identical; only the
+    # schedule changes.
+    async_exchange: bool = False
 
     @property
     def is_federated(self) -> bool:

@@ -45,11 +45,17 @@ from repro.federation import mesh_roles
 # per-level party exchange is ONE collective carrying the whole round's
 # (T, active, d_party, B, 3) payload instead of a vmap-batched per-tree one.
 # ---------------------------------------------------------------------------
+def plain_gather(x, party_axis: str, axis: int):
+    """The default (synchronous) level exchange: one tiled all_gather."""
+    return jax.lax.all_gather(x, party_axis, axis=axis, tiled=True)
+
+
 def federated_round_histogram_fn(
     party_axis: str = mesh_roles.PARTY_AXIS,
     data_axes: tuple = (),
     base_fn: Callable = hist_mod.compute_round_histogram,
     meter=None,
+    gather: Callable = plain_gather,
 ):
     """Round histogram provider running *inside* shard_map.
 
@@ -62,6 +68,12 @@ def federated_round_histogram_fn(
     ``meter`` records the actual payload each party ships — the full local
     float32 (T, nodes, d_party, B, 3) histogram (per-tree bytes × T; the
     probes trace at T = 1, and the run ledger scales by the schedule).
+
+    ``gather`` is the exchange seam (DESIGN.md §10): ``plain_gather`` for
+    the synchronous single all_gather, or ``async_exchange
+    .double_buffered_gather`` to split the payload into two buffers whose
+    transfers overlap.  Either way the meter records the payload ONCE —
+    the split is a scheduling detail, not a protocol message.
     """
 
     def fn(binned_shard, g, h, weight, assign, num_nodes, num_bins,
@@ -73,7 +85,7 @@ def federated_round_histogram_fn(
             local = jax.lax.psum(local, ax)
         if meter is not None:
             meter.record("histograms", local)
-        return jax.lax.all_gather(local, party_axis, axis=2, tiled=True)
+        return gather(local, party_axis, 2)
 
     return fn
 
@@ -133,11 +145,42 @@ def centralized_round_choose_fn(
     return fn
 
 
+def pack_bits(x: jnp.ndarray) -> jnp.ndarray:
+    """Pack a (..., n) 0/1 array into (..., ceil(n/8)) uint8 bitmaps
+    (little-endian within each byte).  The id_partition wire format:
+    per-level go-right decisions are 1 bit/row, so the routing broadcast
+    ships ``ceil(n/8)`` bytes instead of ``4·n`` (int32) — a 32× cut."""
+    n = x.shape[-1]
+    n_bytes = -(-n // 8)
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, n_bytes * 8 - n)]
+    bits = jnp.pad(x.astype(jnp.uint8), pad)
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    return jnp.sum(
+        bits.reshape(x.shape[:-1] + (n_bytes, 8)) * weights,
+        axis=-1, dtype=jnp.uint8,
+    )
+
+
+def unpack_bits(packed: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Inverse of ``pack_bits``: (..., ceil(n/8)) uint8 → (..., n) int32."""
+    bits = (packed[..., None] >> jnp.arange(8, dtype=jnp.uint8)) & jnp.uint8(1)
+    return bits.reshape(packed.shape[:-1] + (-1,))[..., :n].astype(jnp.int32)
+
+
 def federated_round_route_fn(party_axis: str = mesh_roles.PARTY_AXIS,
                              meter=None):
     """Round ownership-masked routing: the whole round's (T, n) partition
     bitmaps travel in ONE psum per level (Alg. 2 step 3 / SecureBoost
-    step 4, batched over the tree axis)."""
+    step 4, batched over the tree axis).
+
+    Wire format: the go-right decisions are BIT-PACKED before the psum —
+    each row's splitting feature is owned by exactly one party, so across
+    parties every bit position has at most one non-zero contributor and the
+    uint8 byte-sum is carry-free (identical to the bitwise OR).  The psum
+    operand (and the metered payload) is the ``(T, ceil(n/8))`` bitmap the
+    protocol inventory prices (one n-bit bitmap per level), 32× smaller
+    than the unpacked int32 vector.
+    """
 
     def fn(binned_shard, assign, decision):
         n, d_party = binned_shard.shape
@@ -152,9 +195,10 @@ def federated_round_route_fn(party_axis: str = mesh_roles.PARTY_AXIS,
         go_right_local = jnp.where(
             owned & (f_global >= 0), (fv > thr).astype(jnp.int32), 0
         )
+        packed_local = pack_bits(go_right_local)  # (T, ceil(n/8)) uint8
         if meter is not None:
-            meter.record("id_partition", go_right_local)
-        go_right = jax.lax.psum(go_right_local, party_axis)
-        return assign * 2 + go_right
+            meter.record("id_partition", packed_local)
+        packed = jax.lax.psum(packed_local, party_axis)  # carry-free == OR
+        return assign * 2 + unpack_bits(packed, n)
 
     return fn

@@ -1,0 +1,97 @@
+"""Double-buffered async level exchange (DESIGN.md §10).
+
+The round engine's per-level party exchange (DESIGN.md §9) is ONE logical
+collective: the whole round's ``(T, active, d_party, B, ...)`` histogram
+payload all-gathered over the party axis.  Synchronously that collective is
+a barrier — every party waits for the full payload before the dequantize /
+sibling-derive / split-search chain can start.
+
+The async backends split the *transfer* without splitting the *message*:
+the payload is cut into two buffers along the bin axis and shipped as two
+independent all_gathers.  XLA lowers independent collectives to
+asynchronous start/done pairs, so the second buffer's transfer is in
+flight while the first buffer's downstream consumers (dequantize, the
+concat feeding sibling subtraction and split search) already run —
+the classic double-buffering overlap, expressed entirely inside the SPMD
+program.  Because the split is along a non-gathered axis, the concatenated
+result is elementwise identical to the single-gather payload: the async
+backends are bit-identical to their synchronous twins.
+
+Accounting contract: the ``MessageMeter`` records the payload ONCE, before
+the split — double-buffering is a scheduling detail of the transport, not
+an extra protocol message — so ``probe_round_collectives`` still counts
+one logical collective per level (two records under quantization: int
+payload + scales, same as the synchronous q8/q16 path) and the wire-model
+reconciliation (``protocol.ProtocolLedger``) stays exact byte-for-byte.
+
+Composition: the seam is the ``gather`` argument of the histogram
+providers (``aggregator.federated_round_histogram_fn``,
+``compress.quantized_round_histogram_fn``), which the sibling-subtraction
+adaptation (§6) and frontier compaction (§9) wrap *outside* of — so the
+double-buffered exchange automatically carries subtraction-halved and
+compacted payloads, and composes with q8/q16 (the int payload is split;
+the tiny scale vector ships whole).  The argmax/top-k candidate exchange
+already ships three small independent gathers (gain/feature/threshold)
+and needs no buffering — async is a histogram-aggregation lever.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.federation import aggregator, compress, mesh_roles
+
+
+def double_buffered_gather(x, party_axis: str, axis: int, split_axis: int = -2):
+    """All-gather ``x`` over ``party_axis`` as TWO independent transfers.
+
+    ``x`` is split at the midpoint of ``split_axis`` (the bin axis of a
+    histogram payload, by default) and each half rides its own tiled
+    all_gather; the halves concatenate back on the same axis.  Since
+    ``split_axis != axis`` the result is elementwise identical to the
+    single-gather exchange — the split only exposes transfer/compute
+    overlap to the scheduler.  Degenerate payloads (extent < 2 on the
+    split axis) fall back to the plain gather.
+    """
+    extent = x.shape[split_axis]
+    if extent < 2:
+        return aggregator.plain_gather(x, party_axis, axis)
+    lo, hi = jnp.split(x, [extent // 2], axis=split_axis)
+    g_lo = jax.lax.all_gather(lo, party_axis, axis=axis, tiled=True)
+    g_hi = jax.lax.all_gather(hi, party_axis, axis=axis, tiled=True)
+    return jnp.concatenate([g_lo, g_hi], axis=split_axis)
+
+
+def async_round_histogram_fn(
+    party_axis: str = mesh_roles.PARTY_AXIS,
+    data_axes: tuple = (),
+    transport: Optional[compress.TransportSpec] = None,
+    meter=None,
+):
+    """Histogram-mode round provider with the double-buffered exchange.
+
+    Raw transport: ``federated_round_histogram_fn`` with the buffered
+    gather.  Quantized (q8/q16): the int payload is double-buffered; the
+    scales ship whole.  Everything else (data-axis psums, metering, the
+    count-channel contract) is inherited from the synchronous providers —
+    this module only swaps the gather.
+    """
+    if transport is None:
+        transport = compress.RAW
+    gather = partial(double_buffered_gather, split_axis=-2)
+    if transport.kind == "quantized":
+        return compress.quantized_round_histogram_fn(
+            party_axis, data_axes, transport, meter=meter, gather=gather
+        )
+    if transport.kind == "raw":
+        return aggregator.federated_round_histogram_fn(
+            party_axis, data_axes, meter=meter, gather=gather
+        )
+    raise ValueError(
+        f"transport {transport.kind!r} does not apply to the async "
+        "histogram exchange (use 'raw' or 'quantized')"
+    )

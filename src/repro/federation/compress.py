@@ -116,12 +116,14 @@ def reconciled_ledger(
     n_samples: int = 1024,
     num_features: Optional[int] = None,
     shard_samples: bool = False,
+    async_exchange: bool = False,
 ):
     """One-call measured-vs-predicted accounting for a training run.
 
     Probes the backend's actual per-tree payloads (``probe_tree_cost``),
-    builds the matching even-shard ``ProtocolSpec`` (wire predictions need
-    the post-padding shard dims, not the logical partition), and returns a
+    builds the matching ``ProtocolSpec`` (wire predictions need the even
+    party shard dims and, under row sharding, the data-shard count — the
+    per-shard id_partition bitmaps round up independently), and returns a
     ``protocol.ProtocolLedger`` with the measured side recorded — ready for
     ``reconcile()`` / ``breakdown()``.  The shared entry point of every
     driver (launcher, example, comm_bench), so the reconciliation contract
@@ -136,12 +138,17 @@ def reconciled_ledger(
     per_tree, grad = probe_tree_cost(
         mesh, tree, aggregation=aggregation, transport=transport,
         n_samples=n_samples, num_features=d, shard_samples=shard_samples,
+        async_exchange=async_exchange,
     )
+    data_shards = 1
+    if shard_samples:
+        for ax in mesh_roles.data_axes(mesh):
+            data_shards *= mesh.shape[ax]
     spec = protocol.ProtocolSpec(
         n_samples=n_samples, party_dims=(d // num_parties,) * num_parties,
         num_bins=tree.num_bins, max_depth=tree.max_depth,
         aggregation=aggregation, hist_subtraction=tree.hist_subtraction,
-        max_active_nodes=tree.max_active_nodes,
+        max_active_nodes=tree.max_active_nodes, data_shards=data_shards,
     )
     ledger = protocol.ProtocolLedger(spec=spec, cfg=cfg, transport=transport)
     ledger.record_run(per_tree, grad)
@@ -237,6 +244,7 @@ def probe_tree_cost(
     n_samples: int = 1024,
     num_features: Optional[int] = None,
     shard_samples: bool = False,
+    async_exchange: bool = False,
 ) -> tuple[dict, int]:
     """Measure one tree's actual per-phase wire bytes by abstract evaluation.
 
@@ -263,6 +271,7 @@ def probe_tree_cost(
     backend = vfl.make_vfl_backend(
         mesh, tree, aggregation=aggregation, transport=transport,
         shard_samples=shard_samples, meter=meter,
+        async_exchange=async_exchange,
     )
     sds = jax.ShapeDtypeStruct
     with use_mesh(mesh):
@@ -277,9 +286,11 @@ def probe_tree_cost(
     totals = meter.phase_totals()
     if shard_samples and "id_partition" in totals:
         # The routing psum operand is the only data-sharded payload; the
-        # SPMD trace records one shard's (n/shards,) slice, but the protocol
-        # message covers all n samples (each shard ships its slice), so the
-        # full wire payload is the per-shard record times the shard count.
+        # SPMD trace records one shard's packed (ceil(n/shards/8),) bitmap
+        # slice, but the protocol message covers all n samples (each shard
+        # ships its bitmap), so the full wire payload is the per-shard
+        # record times the shard count — matching the wire model's
+        # per-shard ceil arithmetic (protocol.wire_party_tree_cost).
         shards = 1
         for ax in mesh_roles.data_axes(mesh):
             shards *= mesh.shape[ax]
@@ -296,13 +307,17 @@ def probe_round_collectives(
     transport: Optional[TransportSpec] = None,
     n_samples: int = 1024,
     num_features: Optional[int] = None,
+    async_exchange: bool = False,
 ) -> dict:
     """Trace a T-tree ROUND program and report per-phase collective counts
     and bytes — the round engine's structural contract (DESIGN.md §9): the
     per-level exchange is ONE collective carrying the whole round's
     ``(T, active, d_party, B, ...)`` payload, so the histogram-phase record
     count equals the number of histogram levels regardless of T (2 per
-    level under quantization: int payload + scales).
+    level under quantization: int payload + scales).  The async backends
+    (DESIGN.md §10) must preserve these counts: double-buffering splits the
+    transfer, not the logical message, and the meter records the payload
+    before the split.
 
     Returns {"counts": phase → records/trace, "totals": phase → bytes}.
     """
@@ -314,6 +329,7 @@ def probe_round_collectives(
     meter = MessageMeter()
     backend = vfl.make_vfl_backend(
         mesh, tree, aggregation=aggregation, transport=transport, meter=meter,
+        async_exchange=async_exchange,
     )
     sds = jax.ShapeDtypeStruct
     with use_mesh(mesh):
@@ -337,6 +353,7 @@ def quantized_round_histogram_fn(
     transport: TransportSpec = Q8,
     meter: Optional[MessageMeter] = None,
     base_fn: Callable = hist_mod.compute_round_histogram,
+    gather: Optional[Callable] = None,
 ):
     """Round-native quantized histogram provider (DESIGN.md §9): one party
     ``all_gather`` per level carries the whole round's int payload
@@ -349,9 +366,18 @@ def quantized_round_histogram_fn(
     the training rng so the provider keeps the plain histogram-fn
     signature (unbiased per element; inputs change every round).
     Shared-root caching (``root_delta_rows``) is a local transformation
-    applied *before* quantization, so the wire payload is unchanged."""
+    applied *before* quantization, so the wire payload is unchanged.
+
+    ``gather`` is the exchange seam (DESIGN.md §10): the int payload rides
+    the pluggable gather (double-buffered under the async backends); the
+    tiny per-(node, feature, channel) scale vector always ships in one
+    plain all_gather — splitting it would buy nothing."""
     if transport.kind != "quantized":
         raise ValueError(f"need a quantized TransportSpec, got {transport!r}")
+    from repro.federation import aggregator  # local: aggregator is sibling
+
+    if gather is None:
+        gather = aggregator.plain_gather
 
     def fn(binned_shard, g, h, weight, assign, num_nodes, num_bins,
            root_delta_rows=0, level=0):
@@ -372,7 +398,7 @@ def quantized_round_histogram_fn(
         if meter is not None:
             meter.record("histograms", q)
             meter.record("histograms", scale)
-        q_g = jax.lax.all_gather(q, party_axis, axis=2, tiled=True)
+        q_g = gather(q, party_axis, 2)
         s_g = jax.lax.all_gather(scale, party_axis, axis=2, tiled=True)
         deq = dequantize_stats(q_g, s_g)  # (T, nodes, d, B, 2)
         count = jnp.zeros(deq.shape[:-1] + (1,), deq.dtype)

@@ -91,6 +91,13 @@ class ProtocolSpec:
     # max_active_nodes), not the 2^level frontier.  0 = uncompacted.  Must
     # mirror ``TreeConfig.max_active_nodes``.
     max_active_nodes: int = 0
+    # Row sharding (DESIGN.md §8): number of sample shards the rows are
+    # distributed over (the mesh's data×pod extent under ``shard_samples``).
+    # Only the id_partition bitmap depends on it: each shard ships its own
+    # ``ceil(ceil(n/shards)/8)``-byte bitmap per level (rows pad to the
+    # shard granularity with weight-0 entries), so the per-shard byte
+    # rounding is visible in the wire total.  1 = single host.
+    data_shards: int = 1
 
     @property
     def ciphertext_bytes(self) -> int:
@@ -217,6 +224,7 @@ def wire_party_tree_cost(
     transport=None,
     hist_subtraction: bool = False,
     max_active_nodes: int = 0,
+    data_shards: int = 1,
 ) -> dict:
     """Predicted actual bytes ONE party ships to build ONE tree, mirroring
     the shard_map implementation payload-for-payload (the quantity
@@ -233,7 +241,11 @@ def wire_party_tree_cost(
       argmax mode      per level: ``nodes * k * 12`` candidate bytes
                        (gain f32 + feature i32 + threshold i32), k = 1 raw
                        or ``transport.k`` for top-k;
-      id_partition     per level: the int32 routing vector ``n * 4`` — the
+      id_partition     per level: the BIT-PACKED routing bitmap — 1 bit per
+                       sample, ``ceil(n_shard/8)`` uint8 bytes per data
+                       shard with ``n_shard = ceil(n/data_shards)`` (rows
+                       pad to the shard granularity with weight-0 entries;
+                       each shard ships its own byte-rounded slice).  The
                        SPMD psum operand covers every sample, masked or not
                        (counted once, not per party).
 
@@ -252,6 +264,8 @@ def wire_party_tree_cost(
         d_party, num_bins, max_depth, transport, hist_subtraction,
         max_active_nodes,
     )
+    n_shard = -(-n_samples // data_shards)  # rows pad to shard granularity
+    id_bytes = data_shards * ((n_shard + 7) // 8)
     for level in range(max_depth):
         nodes = _active_nodes(level, max_active_nodes)
         if aggregation == "histogram":
@@ -261,7 +275,7 @@ def wire_party_tree_cost(
             k = transport.k if kind == "topk" else 1
             k = min(k, d_party * num_bins)
             phases["split_candidates"] += nodes * k * (4 + 4 + 4)
-        phases["id_partition"] += n_samples * 4
+        phases["id_partition"] += id_bytes
     return phases
 
 
@@ -304,7 +318,7 @@ def wire_run_cost(spec: ProtocolSpec, cfg: FedGBFConfig, transport=None) -> dict
     per_tree = wire_party_tree_cost(
         spec.n_samples, d_party, spec.num_bins, spec.max_depth,
         spec.aggregation, transport, spec.hist_subtraction,
-        spec.max_active_nodes,
+        spec.max_active_nodes, spec.data_shards,
     )
     grad_per_round = spec.n_samples * 2 * 4
     return _assemble_run_cost(per_tree, grad_per_round,

@@ -33,6 +33,16 @@ shared-root caching is a *tolerance* relation like subtraction-vs-direct
 (``check_shared_root_tolerance``); and the active-width wire model
 reconciles exactly at depth 5 under compaction.
 
+Row sharding and the async exchange (DESIGN.md §8/§10) extend it once more:
+training under an explicit ``data_shards=2`` grid — including n uneven over
+the shards, padded with weight-0 rows inside the backend — stays
+*bit-identical* fed-vs-central; the async double-buffered backends are
+bit-identical to their synchronous twins, keep ONE logical histogram
+collective per level, and reconcile byte-for-byte; and the bit-packed
+id_partition bitmap measures ``ceil(n/8)`` per level (>= 8x under the
+legacy encodings, ``check_id_partition_packing``) with the per-shard ceil
+arithmetic exact for any shard count.
+
 Run in a subprocess with multiple CPU devices, e.g.:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -58,14 +68,19 @@ from repro.federation import compress, protocol, vfl
 
 def check(num_parties: int, aggregation: str, shard_samples: bool,
           subtraction: bool = False, max_depth: int = 3,
-          max_active_nodes: int = 0) -> None:
+          max_active_nodes: int = 0, data_shards: int = 0,
+          async_exchange: bool = False, n: int = 512) -> None:
+    """Fed-vs-central bit-identity.  ``data_shards`` pins the mesh's data
+    axis extent (0 = spread all remaining devices); an ``n`` not divisible
+    by the data extent exercises the backend's weight-0 row padding."""
     mesh_axes = ("data", "model")
     n_dev = len(jax.devices())
-    data_dim = n_dev // num_parties
-    mesh = jax.make_mesh((data_dim, num_parties), mesh_axes)
+    data_dim = data_shards or n_dev // num_parties
+    mesh = jax.make_mesh((data_dim, num_parties), mesh_axes,
+                         devices=jax.devices()[:data_dim * num_parties])
 
     rng = np.random.default_rng(0)
-    n, d = 512, num_parties * 3
+    d = num_parties * 3
     x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
     y = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
     cfg = TreeConfig(max_depth=max_depth, num_bins=16,
@@ -79,7 +94,8 @@ def check(num_parties: int, aggregation: str, shard_samples: bool,
     trees_c, pred_c = forest.build_forest(binned, g, h, smask, fmask, cfg)
 
     backend = vfl.make_vfl_backend(
-        mesh, cfg, aggregation=aggregation, shard_samples=shard_samples
+        mesh, cfg, aggregation=aggregation, shard_samples=shard_samples,
+        async_exchange=async_exchange,
     )
     with use_mesh(mesh):
         trees_f, pred_f = backend.build_forest(binned, g, h, smask, fmask, cfg)
@@ -101,7 +117,8 @@ def check(num_parties: int, aggregation: str, shard_samples: bool,
     print(
         f"OK lossless: parties={num_parties} aggregation={aggregation} "
         f"shard_samples={shard_samples} subtraction={subtraction} "
-        f"depth={max_depth} budget={max_active_nodes}"
+        f"depth={max_depth} budget={max_active_nodes} "
+        f"data_shards={data_dim} async={async_exchange} n={n}"
     )
 
 
@@ -322,18 +339,24 @@ def check_reconciliation(num_parties: int, aggregation: str, transport,
                          shard_samples: bool = False,
                          subtraction: bool = False,
                          max_depth: int = 3,
-                         max_active_nodes: int = 0) -> None:
+                         max_active_nodes: int = 0,
+                         async_exchange: bool = False,
+                         n: int = 1536) -> None:
     """Measured collective payloads == predicted wire model, exactly —
-    including the round engine's active-width model under compaction."""
+    including the round engine's active-width model under compaction, the
+    data-shard-aware bit-packed id_partition arithmetic (an ``n`` uneven
+    over the shards exercises the per-shard ceil), and the async exchange
+    (double-buffering must not change a byte)."""
     data_dim = len(jax.devices()) // num_parties if shard_samples else 1
     mesh = jax.make_mesh((data_dim, num_parties), ("data", "model"))
     tree = TreeConfig(max_depth=max_depth, num_bins=32,
                       hist_subtraction=subtraction,
                       max_active_nodes=max_active_nodes)
-    n, d = 1536, num_parties * 2
+    d = num_parties * 2
     per_tree, grad = compress.probe_tree_cost(
         mesh, tree, aggregation=aggregation, transport=transport,
         n_samples=n, num_features=d, shard_samples=shard_samples,
+        async_exchange=async_exchange,
     )
     cfg = FedGBFConfig(rounds=3, n_trees_max=4, n_trees_min=2,
                        rho_id_min=0.2, rho_id_max=0.5)
@@ -342,6 +365,7 @@ def check_reconciliation(num_parties: int, aggregation: str, transport,
         num_bins=tree.num_bins, max_depth=tree.max_depth,
         aggregation=aggregation, hist_subtraction=subtraction,
         max_active_nodes=max_active_nodes,
+        data_shards=data_dim if shard_samples else 1,
     )
     ledger = protocol.ProtocolLedger(spec=spec, cfg=cfg, transport=transport)
     ledger.record_run(per_tree, grad)
@@ -349,33 +373,63 @@ def check_reconciliation(num_parties: int, aggregation: str, transport,
     assert ledger.matches(), (
         f"measured != predicted for {aggregation}"
         f"/{transport.tag if transport else 'raw'}"
-        f"{'+sub' if subtraction else ''}: {rec}"
+        f"{'+sub' if subtraction else ''}"
+        f"{'+async' if async_exchange else ''}: {rec}"
     )
     tag = transport.tag if transport else "raw"
     print(
         f"OK reconciliation: parties={num_parties} {aggregation}/{tag} "
         f"shard_samples={shard_samples} subtraction={subtraction} "
         f"depth={max_depth} budget={max_active_nodes} "
+        f"async={async_exchange} n={n} "
         f"total={rec['total']['measured']} bytes (exact match)"
     )
 
 
-def check_round_collective_counts(num_parties: int, n_trees: int) -> None:
+def check_round_collective_counts(num_parties: int, n_trees: int,
+                                  transport=None,
+                                  async_exchange: bool = False) -> None:
     """Round-engine structural contract (DESIGN.md §9): the traced round
     program records exactly ONE histogram collective per level — the whole
-    round's (T, active, d_party, B, 3) payload — independent of T."""
+    round's (T, active, d_party, B, 3) payload — independent of T.  The
+    async backends (§10) must preserve the counts: double-buffering splits
+    the transfer, never the logical message (quantized transports record 2
+    per level either way: int payload + scales)."""
     mesh = jax.make_mesh((1, num_parties), ("data", "model"))
     tree = TreeConfig(max_depth=3, num_bins=16)
     rc = compress.probe_round_collectives(
-        mesh, tree, n_trees, aggregation="histogram",
+        mesh, tree, n_trees, aggregation="histogram", transport=transport,
         n_samples=512, num_features=num_parties * 2,
+        async_exchange=async_exchange,
     )
     counts = rc["counts"]
-    assert counts.get("histograms") == tree.max_depth, counts
+    per_level = 2 if transport is not None else 1
+    assert counts.get("histograms") == per_level * tree.max_depth, counts
     assert counts.get("feature_mask") == tree.max_depth, counts
     assert counts.get("id_partition") == tree.max_depth, counts
+    tag = transport.tag if transport else "raw"
     print(f"OK round collectives: parties={num_parties} T={n_trees} "
-          f"histogram records per level == 1 ({counts['histograms']} levels)")
+          f"transport={tag} async={async_exchange} histogram records per "
+          f"level == {per_level} ({tree.max_depth} levels)")
+
+
+def check_id_partition_packing(num_parties: int) -> None:
+    """The bit-packed routing broadcast: measured id_partition bytes are
+    the ceil(n/8) bitmap, >= 8x under the legacy 1-byte-per-row encoding
+    and 32x under the int32 vector the implementation used to psum."""
+    mesh = jax.make_mesh((1, num_parties), ("data", "model"))
+    tree = TreeConfig(max_depth=3, num_bins=16)
+    n, d = 1536, num_parties * 2
+    per_tree, _ = compress.probe_tree_cost(
+        mesh, tree, aggregation="histogram", n_samples=n, num_features=d,
+    )
+    packed = per_tree["id_partition"]
+    assert packed == tree.max_depth * ((n + 7) // 8), per_tree
+    unpacked_int32 = tree.max_depth * n * 4
+    cut = unpacked_int32 / packed
+    assert cut >= 8.0, f"id_partition cut {cut:.1f}x below the 8x bar"
+    print(f"OK id_partition packing: {unpacked_int32} -> {packed} B/tree "
+          f"({cut:.0f}x cut)")
 
 
 def check_shared_root_tolerance(num_parties: int, bound: float = 5e-3) -> None:
@@ -445,6 +499,27 @@ def main() -> int:
         for shard_samples in (False, True):
             check(num_parties=4, aggregation=aggregation, shard_samples=shard_samples)
     check(num_parties=2, aggregation="histogram", shard_samples=True)
+    # Row sharding (DESIGN.md §8): explicit data_shards=2 grid, both
+    # aggregations, plus an n uneven over the shards — the backend pads
+    # with weight-0 rows and the result stays bit-identical.
+    for aggregation in ("histogram", "argmax"):
+        check(num_parties=2, aggregation=aggregation, shard_samples=True,
+              data_shards=2)
+    check(num_parties=2, aggregation="histogram", shard_samples=True,
+          data_shards=2, n=509)
+    check(num_parties=4, aggregation="histogram", shard_samples=True,
+          data_shards=2, subtraction=True, n=507)
+    # Async double-buffered exchange (DESIGN.md §10): bit-identical to the
+    # synchronous path, composing with sharding, subtraction, compaction.
+    check(num_parties=4, aggregation="histogram", shard_samples=False,
+          async_exchange=True)
+    check(num_parties=4, aggregation="histogram", shard_samples=True,
+          async_exchange=True, subtraction=True)
+    check(num_parties=2, aggregation="histogram", shard_samples=True,
+          data_shards=2, async_exchange=True, n=509)
+    check(num_parties=4, aggregation="histogram", shard_samples=False,
+          async_exchange=True, subtraction=True, max_depth=4,
+          max_active_nodes=4)
     # Sibling subtraction (DESIGN.md §6): federated-vs-centralized stays
     # bit-identical with the pipeline enabled on BOTH sides; the
     # subtraction-vs-direct relation is a separate tolerance contract.
@@ -467,6 +542,12 @@ def main() -> int:
           subtraction=True, max_depth=4, max_active_nodes=4)
     for n_trees in (1, 4):
         check_round_collective_counts(num_parties=4, n_trees=n_trees)
+    # one logical collective per level survives the async double-buffering
+    for transport in (None, compress.Q8):
+        check_round_collective_counts(num_parties=4, n_trees=4,
+                                      transport=transport,
+                                      async_exchange=True)
+    check_id_partition_packing(num_parties=4)
     check_shared_root_tolerance(num_parties=2)
     for aggregation in ("histogram", "argmax"):
         for degenerate in ("gamma", "min_child_weight"):
@@ -508,6 +589,15 @@ def main() -> int:
     # payload (per-shard slice x shard count)
     check_reconciliation(4, "histogram", compress.Q8, shard_samples=True)
     check_reconciliation(2, "argmax", None, shard_samples=True)
+    # uneven n over the shards: the per-shard ceil(ceil(n/shards)/8) bitmap
+    # arithmetic must reconcile exactly (rows pad inside the backend)
+    check_reconciliation(4, "histogram", None, shard_samples=True, n=1531)
+    check_reconciliation(2, "argmax", None, shard_samples=True, n=999)
+    # async: double-buffering must not change a single byte
+    check_reconciliation(4, "histogram", None, async_exchange=True)
+    check_reconciliation(4, "histogram", compress.Q16, async_exchange=True)
+    check_reconciliation(4, "histogram", compress.Q8, shard_samples=True,
+                         subtraction=True, async_exchange=True, n=1531)
     print("ALL FEDERATION SELF-TESTS PASSED")
     return 0
 

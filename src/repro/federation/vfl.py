@@ -25,6 +25,7 @@ from repro.core import forest as forest_mod
 from repro.core.backend import BackendDescriptor, TreeBackend, register_backend
 from repro.core.types import TreeConfig
 from repro.federation import aggregator, compress, mesh_roles
+from repro.federation import async_exchange as async_mod
 
 
 def make_vfl_backend(
@@ -35,6 +36,7 @@ def make_vfl_backend(
     shard_samples: bool = False,
     transport=None,
     meter=None,
+    async_exchange: bool = False,
 ) -> TreeBackend:
     """Construct the vertically-federated TreeBackend (DESIGN.md §1).
 
@@ -59,18 +61,33 @@ def make_vfl_backend(
       meter: ``compress.MessageMeter`` — when given, every party-axis
         collective records its actual payload size at trace time (use via
         ``compress.probe_tree_cost``; see MessageMeter for semantics).
+      async_exchange: double-buffer the per-level histogram exchange
+        (DESIGN.md §10): the payload ships as two overlapping transfers
+        instead of one barrier all_gather.  Bit-identical results, one
+        logical metered message per level either way.  Histogram
+        aggregation only — the argmax/top-k candidate exchange already
+        ships small independent gathers.
     """
     cfg = tree
     num_parties = mesh.shape[party_axis]
     data_axes = mesh_roles.data_axes(mesh) if shard_samples else ()
     if transport is None:
         transport = compress.RAW
+    if async_exchange and aggregation != "histogram":
+        raise ValueError(
+            "async_exchange applies to the histogram aggregation only "
+            "(the argmax candidate exchange is already multi-buffered)"
+        )
 
     # Round-native providers (DESIGN.md §9): the tree axis is explicit, so
     # each level's party exchange is ONE collective carrying the whole
     # round's (T, active, d_party, B, ...) payload.
     if aggregation == "histogram":
-        if transport.kind == "quantized":
+        if async_exchange:
+            histogram_fn = async_mod.async_round_histogram_fn(
+                party_axis, data_axes, transport, meter=meter
+            )
+        elif transport.kind == "quantized":
             histogram_fn = compress.quantized_round_histogram_fn(
                 party_axis, data_axes, transport, meter=meter
             )
@@ -113,6 +130,8 @@ def make_vfl_backend(
     # right siblings locally after the merge.
 
     impl = f"vfl-{aggregation}"
+    if async_exchange:
+        impl += "-async"
     if transport.kind != "raw":
         impl += f"-{transport.tag}"
     descriptor = BackendDescriptor(
@@ -123,6 +142,7 @@ def make_vfl_backend(
         shard_samples=shard_samples,
         transport=transport.tag,
         transport_spec=None if transport.kind == "raw" else transport,
+        async_exchange=async_exchange,
     )
     inner = TreeBackend(
         descriptor=descriptor,
@@ -188,6 +208,32 @@ def make_vfl_backend(
     def _run_per_tree(binned, g, h, sample_mask, feature_mask, rdr=0):
         return _sharded_per_tree(rdr)(binned, g, h, sample_mask, feature_mask)
 
+    # Row padding for uneven shards (DESIGN.md §8): shard_map needs n
+    # divisible by the data-axis extent, but callers hand arbitrary n.  The
+    # pad happens HERE — inside the backend, *after* the boosting engine
+    # drew its exact-count subsampling masks over the real n rows — so the
+    # sampling semantics are untouched: padded rows enter with sample-mask
+    # weight 0 (histograms, leaf stats, liveness counts and shared-root
+    # deltas all weight by the mask, so they are inert) and the returned
+    # predictions slice back to the caller's n.
+    shard_count = 1
+    for _ax in data_axes:
+        shard_count *= mesh.shape[_ax]
+
+    def _pad_rows(binned, g, h, sample_mask):
+        n = binned.shape[0]
+        n_pad = -(-n // shard_count) * shard_count
+        if n_pad == n:
+            return binned, g, h, sample_mask, n
+        pad = n_pad - n
+        return (
+            jnp.pad(binned, ((0, pad), (0, 0))),
+            jnp.pad(g, (0, pad)),
+            jnp.pad(h, (0, pad)),
+            jnp.pad(sample_mask, ((0, 0), (0, pad))),
+            n,
+        )
+
     def _check(binned, _cfg):
         """The tree config is baked into the shard_map program, so a
         caller-passed cfg must match ``tree`` (a silent mismatch would build
@@ -211,11 +257,16 @@ def make_vfl_backend(
         if meter is not None:
             # The per-round (g, h) broadcast active -> each passive party.
             # Not a collective here (the derivatives enter replicated), so
-            # it is metered at the program boundary from the actual arrays.
+            # it is metered at the program boundary from the actual arrays
+            # — the REAL n rows, before any shard padding.
             meter.record("grad_broadcast", g)
             meter.record("grad_broadcast", h)
-        return _run(binned, g, h, sample_mask.astype(jnp.float32),
-                    feature_mask, rdr=root_delta_rows)
+        binned, g, h, sample_mask, n = _pad_rows(
+            binned, g, h, sample_mask.astype(jnp.float32)
+        )
+        trees, pred = _run(binned, g, h, sample_mask, feature_mask,
+                           rdr=root_delta_rows)
+        return trees, pred[:n]
 
     def forest_builder_per_tree(binned, g, h, sample_mask, feature_mask,
                                 _cfg=None, root_delta_rows=0):
@@ -223,10 +274,13 @@ def make_vfl_backend(
         if meter is not None:
             meter.record("grad_broadcast", g)
             meter.record("grad_broadcast", h)
-        return _run_per_tree(
-            binned, g, h, sample_mask.astype(jnp.float32), feature_mask,
-            rdr=root_delta_rows,
+        binned, g, h, sample_mask, n = _pad_rows(
+            binned, g, h, sample_mask.astype(jnp.float32)
         )
+        trees, per_tree = _run_per_tree(
+            binned, g, h, sample_mask, feature_mask, rdr=root_delta_rows
+        )
+        return trees, per_tree[:, :n]
 
     # The per-node collectives live only on the INNER backend consumed inside
     # the shard_map body; exposing them here would invite generic callers
@@ -268,7 +322,8 @@ def make_federated_forest_fn(
 # e.g. ``get_backend("vfl-argmax", mesh=mesh, tree=TreeConfig(...))``.
 # Compressed-transport variants (DESIGN.md §5) are distinct registry names,
 # not kwargs, so scaling work stays registry factories per DESIGN.md §1.
-def _vfl_factory(aggregation: str, shard_samples: bool, transport=None):
+def _vfl_factory(aggregation: str, shard_samples: bool, transport=None,
+                 async_exchange: bool = False):
     def factory(mesh=None, tree=None, **kw):
         if mesh is None or tree is None:
             raise ValueError(
@@ -288,26 +343,34 @@ def _vfl_factory(aggregation: str, shard_samples: bool, transport=None):
             )
         return make_vfl_backend(
             mesh, tree, aggregation=aggregation, shard_samples=shard_samples,
-            transport=transport if transport is not None else explicit, **kw
+            transport=transport if transport is not None else explicit,
+            async_exchange=async_exchange, **kw
         )
 
     return factory
 
 
+# The async double-buffered exchange (DESIGN.md §10) is a histogram-mode
+# lever, so only the histogram family grows "-async" names.
 _TRANSPORTS = {
     "histogram": (("", None), ("-q8", compress.Q8), ("-q16", compress.Q16)),
     "argmax": (("", None), ("-topk", compress.TOPK)),
 }
 for _agg, _variants in _TRANSPORTS.items():
     for _suffix, _transport in _variants:
-        register_backend(
-            f"vfl-{_agg}{_suffix}",
-            _vfl_factory(_agg, shard_samples=False, transport=_transport),
-        )
-        register_backend(
-            f"vfl-{_agg}{_suffix}-sharded",
-            _vfl_factory(_agg, shard_samples=True, transport=_transport),
-        )
+        _asyncs = (False, True) if _agg == "histogram" else (False,)
+        for _async in _asyncs:
+            _name = f"vfl-{_agg}" + ("-async" if _async else "") + _suffix
+            register_backend(
+                _name,
+                _vfl_factory(_agg, shard_samples=False, transport=_transport,
+                             async_exchange=_async),
+            )
+            register_backend(
+                _name + "-sharded",
+                _vfl_factory(_agg, shard_samples=True, transport=_transport,
+                             async_exchange=_async),
+            )
 
 
 def party_shardings(mesh: Mesh, party_axis: str = mesh_roles.PARTY_AXIS):

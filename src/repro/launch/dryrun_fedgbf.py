@@ -31,11 +31,18 @@ from repro.launch.dryrun import REPORT_DIR
 
 
 def run(aggregation: str, n=150_000, d=16, n_trees=5, multi_pod=False,
-        hist_subtraction=False, max_depth=3, max_active_nodes=0) -> dict:
-    mesh = make_production_mesh(multi_pod=multi_pod)
+        hist_subtraction=False, max_depth=3, max_active_nodes=0,
+        data_shards=0, async_exchange=False) -> dict:
+    if data_shards:
+        # explicit row-shard grid (--data-shards): data_shards x 16 parties
+        mesh = jax.make_mesh((data_shards, 16), ("data", "model"),
+                             devices=jax.devices()[:data_shards * 16])
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.devices.size
     # round the sample count up to the data-sharding granularity (padded
-    # rows carry zero sample-mask weight, semantically inert)
+    # rows carry zero sample-mask weight, semantically inert — the backend
+    # pads internally either way; pre-rounding keeps the report's n exact)
     shards = 1
     for a in ("pod", "data"):
         if a in mesh.shape:
@@ -45,7 +52,8 @@ def run(aggregation: str, n=150_000, d=16, n_trees=5, multi_pod=False,
                      hist_subtraction=hist_subtraction,
                      max_active_nodes=max_active_nodes)
     backend = vfl.make_vfl_backend(
-        mesh, cfg, aggregation=aggregation, shard_samples=True
+        mesh, cfg, aggregation=aggregation, shard_samples=True,
+        async_exchange=async_exchange,
     )
 
     binned = jax.ShapeDtypeStruct((n, d), jnp.int32)
@@ -66,14 +74,19 @@ def run(aggregation: str, n=150_000, d=16, n_trees=5, multi_pod=False,
         cost = cost[0]
     stats = roofline_mod.parse_collectives(compiled.as_text())
     mem = compiled.memory_analysis()
+    grid = (f"{data_shards}x16" if data_shards
+            else ("2x16x16" if multi_pod else "16x16"))
     report = {
-        "tag": f"fedgbf__forest_round__{'2x16x16' if multi_pod else '16x16'}"
+        "tag": f"fedgbf__forest_round__{grid}"
                f"__{aggregation}{'__sub' if hist_subtraction else ''}"
+               + ("__async" if async_exchange else "")
                + (f"__d{max_depth}" if max_depth != 3 else "")
                + (f"__a{max_active_nodes}" if max_active_nodes else ""),
         "status": "ok",
         "aggregation": aggregation,
         "hist_subtraction": hist_subtraction,
+        "async_exchange": async_exchange,
+        "data_shards": data_shards or shards,
         "max_depth": max_depth,
         "max_active_nodes": max_active_nodes,
         "chips": chips,
@@ -100,12 +113,32 @@ def run(aggregation: str, n=150_000, d=16, n_trees=5, multi_pod=False,
 
 
 def main() -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--data-shards", type=int, default=0,
+                    help="also dry-run an explicit (data_shards x 16) row-"
+                         "sharded grid (DESIGN.md §8) in addition to the "
+                         "production meshes")
+    args = ap.parse_args()
+
     base = None
     for multi_pod in (False, True):
         for agg in ("histogram", "argmax"):
             report = run(agg, multi_pod=multi_pod)
             if agg == "histogram" and not multi_pod:
                 base = report
+    # Async double-buffered exchange (DESIGN.md §10): same logical payload,
+    # two overlapping transfers — collective bytes must NOT grow.
+    async_r = run("histogram", multi_pod=False, async_exchange=True)
+    if base["collective_bytes_per_dev"]:
+        ratio = (async_r["collective_bytes_per_dev"]
+                 / base["collective_bytes_per_dev"])
+        print(f"[OK] async exchange collective-bytes ratio vs sync: "
+              f"{ratio:.3f}x (must stay ~1.0)")
+    if args.data_shards:
+        run("histogram", data_shards=args.data_shards)
+        run("histogram", data_shards=args.data_shards, async_exchange=True)
     # Sibling-subtraction pipeline (DESIGN.md §6) on the paper-faithful
     # histogram exchange: the before/after is the compiled collective-bytes
     # cut of shipping only the left children at levels >= 1.

@@ -27,6 +27,28 @@ def make_test_mesh(num_devices: int | None = None):
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def make_vfl_mesh(parties: int, data_shards: int = 0):
+    """2-D (data × party) training mesh for the vfl-* backends (DESIGN.md §8).
+
+    ``parties`` is the model-axis extent (the VFL party decomposition);
+    ``data_shards`` the data-axis extent rows shard over (``vfl-*-sharded``
+    backends).  0 = auto: spread the remaining devices over the data axis.
+    Raises if the device pool cannot host the requested grid.
+    """
+    n_dev = len(jax.devices())
+    if data_shards <= 0:
+        data_shards = max(1, n_dev // parties)
+    need = parties * data_shards
+    if n_dev < need:
+        raise ValueError(
+            f"mesh ({data_shards} data x {parties} model) needs {need} "
+            f"devices, got {n_dev} (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need})"
+        )
+    return jax.make_mesh((data_shards, parties), ("data", "model"),
+                         devices=jax.devices()[:need])
+
+
 def batch_axes(mesh: jax.sharding.Mesh) -> tuple:
     """Axes the global batch shards over (pod folds into data)."""
     return tuple(a for a in ("pod", "data") if a in mesh.shape)

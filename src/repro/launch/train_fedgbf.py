@@ -26,6 +26,7 @@ from repro.core import boosting, metrics
 from repro.core.types import TreeConfig
 from repro.data import synthetic, tabular
 from repro.federation import vfl  # noqa: F401  (registers vfl-* backends)
+from repro.launch import mesh as mesh_mod
 
 # All registered backends are launchable, incl. the compressed-transport
 # variants (vfl-histogram-q8/q16, vfl-argmax-topk; DESIGN.md §5).
@@ -49,6 +50,13 @@ def main() -> None:
                     help="named TreeBackend from the registry")
     ap.add_argument("--parties", type=int, default=2,
                     help="party count for vfl-* backends")
+    ap.add_argument("--data-shards", type=int, default=0,
+                    help="row shards over the mesh data axis for vfl-*-"
+                         "sharded backends (DESIGN.md §8): each host holds "
+                         "(n/data_shards, ...) rows and the per-level "
+                         "histogram psums over the data axis.  0 = auto "
+                         "(spread the remaining devices).  Uneven n pads "
+                         "with weight-0 rows inside the backend.")
     ap.add_argument("--engine", default="scan", choices=("scan", "loop"),
                     help="training engine: static-shape scanned (one XLA "
                          "program for all rounds) or the legacy per-round "
@@ -112,23 +120,22 @@ def main() -> None:
                 f"host_platform_device_count=...), got {n_dev}"
             )
         x_train, d_pad = tabular.pad_features(x_train, args.parties)
-        mesh = jax.make_mesh((n_dev // args.parties, args.parties),
-                             ("data", "model"))
-        if args.backend.endswith("-sharded"):
-            # shard_map needs n divisible by the data-axis size; truncate to
-            # the shard granularity (padding rows would perturb the exact-
-            # count subsampling masks, so dropping a remainder is the
-            # semantics-preserving option for training).
-            shards = n_dev // args.parties
-            n_keep = (x_train.shape[0] // shards) * shards
-            if n_keep != x_train.shape[0]:
-                print(f"sharded backend: truncating n {x_train.shape[0]} -> "
-                      f"{n_keep} (multiple of {shards} sample shards)")
-                x_train, y_train = x_train[:n_keep], y_train[:n_keep]
+        mesh = mesh_mod.make_vfl_mesh(args.parties, args.data_shards)
+        shards = mesh.shape["data"]
+        if args.backend.endswith("-sharded") and x_train.shape[0] % shards:
+            # shard_map needs n divisible by the data-axis extent; the
+            # backend pads the remainder with weight-0 rows internally
+            # (after the subsampling masks are drawn over the real n, so
+            # the exact-count sampling semantics are untouched).
+            print(f"sharded backend: n={x_train.shape[0]} pads to "
+                  f"{-(-x_train.shape[0] // shards) * shards} inside the "
+                  f"backend ({shards} sample shards, weight-0 rows)")
         backend = backend_mod.get_backend(args.backend, mesh=mesh, tree=tree)
-        print(f"backend={backend.name}: {args.parties} parties, "
-              f"aggregation={aggregation}, "
-              f"transport={backend.descriptor.transport}")
+        print(f"backend={backend.name}: {args.parties} parties x "
+              f"{shards} data shards, aggregation={aggregation}, "
+              f"transport={backend.descriptor.transport}"
+              + (", async exchange" if backend.descriptor.async_exchange
+                 else ""))
         # measured wire bytes reconciled against the wire model, plus the
         # paper-world Paillier estimate — one shared entry (DESIGN.md §5)
         from repro.federation import compress
@@ -138,6 +145,7 @@ def main() -> None:
             transport=backend.descriptor.transport_spec,
             n_samples=x_train.shape[0], num_features=d_pad,
             shard_samples=args.backend.endswith("-sharded"),
+            async_exchange=backend.descriptor.async_exchange,
         )
         cost = ledger.predicted_paillier()
         print(f"paillier-model bytes (ledger): {cost.total/1e6:.1f} MB "

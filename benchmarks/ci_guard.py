@@ -31,7 +31,11 @@ regresses on any of the contracts this repo has already banked:
     and the >= 1M-row row-sharded training throughput stays above the
     committed ``rows_per_s_floor`` in BENCH_train.json (half the banked
     measurement, so machine variance passes but a sharded-pipeline
-    regression or a silent single-device fallback fails).
+    regression or a silent single-device fallback fails);
+  * **K-channel floors** (DESIGN.md §11) — measured wire bytes reconcile
+    exactly against the K-generalized wire model at K=1 AND K=3 (the
+    softmax3 row's widened 2K+1-stat exchange), and the federated
+    multiclass accuracy beats the majority-class baseline.
 
 Timing comparisons are deliberately ratio-of-the-same-run (subtraction on vs
 off inside one bench invocation), never absolute seconds across machines.
@@ -123,6 +127,17 @@ def main() -> int:
     if base_d5 is not None:
         check(d5 >= base_d5 - RATIO_EPS,
               f"depth-5 compaction cut {d5:.3f}x >= baseline {base_d5:.3f}x")
+
+    # -- K-channel objective layer (ISSUE 7) ---------------------------------
+    check(acc.get("k1_measured_match_predicted") is True,
+          "K=1 (binary) measured bytes == wire model exactly")
+    check(acc.get("k3_measured_match_predicted") is True,
+          "K=3 (softmax3) measured bytes == wire model exactly "
+          "(widened 2K+1-stat exchange)")
+    mc_acc = acc.get("multiclass_acc", 0.0)
+    check(mc_acc >= 0.55,
+          f"softmax3 federated accuracy {mc_acc:.3f} beats the 3-class "
+          f"majority baseline")
 
     # -- sharding + async floors (ISSUE 6) -----------------------------------
     check(acc.get("id_partition_cut_ge_8x") is True,

@@ -1,0 +1,88 @@
+"""Fetch a public credit dataset into the CSV shape the benchmarks load.
+
+The paper evaluates on two Kaggle datasets (Give Me Some Credit, Default of
+Credit Card Clients; PAPER.md §4.1) that need authenticated downloads, so CI
+cannot fetch them.  This script grabs the closest openly downloadable
+stand-in — the UCI Statlog German Credit data (1000 rows, 24 numeric
+features, binary default label) — and writes it as a plain labelled CSV
+that ``repro.data.tabular.load_csv`` (and therefore
+``benchmarks/comm_bench.py --dataset``) consumes directly:
+
+    python data/fetch_public.py --out data/german_credit.csv
+    PYTHONPATH=src python -m benchmarks.comm_bench \
+        --dataset data/german_credit.csv
+
+The committed ``data/credit_sample.csv`` is the OFFLINE stand-in: a small
+deterministic sample drawn from the same credit-like generator the
+synthetic benchmarks use (``repro.data.synthetic``), committed so the
+``--dataset`` CSV path has a hermetic CI baseline without any network.
+Re-generate it with ``--sample`` (bit-reproducible: fixed seed).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import urllib.request
+
+UCI_URL = (
+    "https://archive.ics.uci.edu/ml/machine-learning-databases/"
+    "statlog/german/german.data-numeric"
+)
+
+
+def fetch_german_credit(out: str) -> None:
+    """Download the UCI numeric German Credit table -> labelled CSV.
+
+    The source is whitespace-separated, 24 integer features + a {1, 2}
+    label; the CSV gets a header row and a {0, 1} label (1 = bad credit)
+    in the LAST column, the ``load_csv`` default.
+    """
+    raw = urllib.request.urlopen(UCI_URL, timeout=60).read().decode()
+    rows = [line.split() for line in raw.strip().splitlines()]
+    d = len(rows[0]) - 1
+    with open(out, "w") as f:
+        f.write(",".join([f"f{i}" for i in range(d)] + ["label"]) + "\n")
+        for r in rows:
+            label = int(r[-1]) - 1  # {1,2} -> {0,1}
+            f.write(",".join(r[:-1] + [str(label)]) + "\n")
+    print(f"wrote {len(rows)} rows x {d} features -> {out}")
+
+
+def write_sample(out: str, n: int = 600, seed: int = 7) -> None:
+    """Deterministic committed sample from the synthetic credit generator."""
+    sys.path.insert(
+        0, os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src")
+    )
+    from repro.data import synthetic
+
+    x, y = synthetic._credit_like(
+        __import__("numpy").random.default_rng(seed), n, 10,
+        pos_rate=0.15, interaction_pairs=3,
+    )
+    with open(out, "w") as f:
+        f.write(",".join([f"f{i}" for i in range(x.shape[1])] + ["label"])
+                + "\n")
+        for row, label in zip(x, y):
+            f.write(",".join(f"{v:.6g}" for v in row)
+                    + f",{int(label)}\n")
+    print(f"wrote {n} rows x {x.shape[1]} features -> {out}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="data/german_credit.csv")
+    ap.add_argument("--sample", action="store_true",
+                    help="regenerate the committed offline sample CSV "
+                         "instead of downloading")
+    args = ap.parse_args()
+    if args.sample:
+        write_sample(args.out)
+    else:
+        fetch_german_credit(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -28,8 +28,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import backend as backend_mod
-from repro.core import binning, dynamic, losses, metrics
+from repro.core import binning, dynamic
 from repro.core import forest as forest_mod
+from repro.core import objective as objective_mod
 from repro.core.types import (
     EnsembleModel,
     FedGBFConfig,
@@ -63,37 +64,9 @@ class TrainHistory:
         return float(sum(self.wall_time_s))
 
 
-_METRIC_KEYS = {
-    "logistic": ("auc", "acc", "f1", "loss"),
-    "squared": ("rmse", "loss"),
-}
-
-
 def _evaluate(loss: str, y, margin) -> dict:
-    if loss == "logistic":
-        rep = metrics.classification_report(y, margin)
-    else:
-        rep = {"rmse": float(jnp.sqrt(jnp.mean((margin - y) ** 2)))}
-    rep["loss"] = float(losses.loss_value(loss, y, margin))
-    return rep
-
-
-def _metric_vector(loss: str, y, margin) -> jnp.ndarray:
-    """In-graph twin of ``_evaluate``: same quantities, stacked in the
-    ``_METRIC_KEYS[loss]`` order, so the scanned engine can evaluate under
-    ``lax.cond`` and fetch all history metrics in one device->host copy."""
-    if loss == "logistic":
-        prob = 1.0 / (1.0 + jnp.exp(-margin))  # as metrics.classification_report
-        return jnp.stack([
-            metrics.auc(y, margin),
-            metrics.accuracy(y, prob),
-            metrics.f1_score(y, prob),
-            losses.loss_value(loss, y, margin),
-        ])
-    return jnp.stack([
-        jnp.sqrt(jnp.mean((margin - y) ** 2)),
-        losses.loss_value(loss, y, margin),
-    ])
+    """Host-side metric dict — the objective's metric set (DESIGN.md §11)."""
+    return objective_mod.get_objective(loss).evaluate(y, margin)
 
 
 def train_fedgbf(
@@ -176,16 +149,17 @@ def _train_loop(
 ) -> tuple[EnsembleModel, TrainHistory]:
     """Legacy per-round training loop (the reference baseline)."""
     bk = backend_mod.resolve_backend(backend)
+    obj = objective_mod.get_objective(cfg.loss)
     n, d = x.shape
     binned, edges = binning.fit_bin(x, cfg.tree.num_bins)
     y = y.astype(jnp.float32)
 
-    y_hat = jnp.full((n,), cfg.base_score, dtype=jnp.float32)
+    y_hat = obj.init_raw(n, cfg.base_score)
     y_hat_valid = None
     binned_valid = None
     if x_valid is not None:
         binned_valid = binning.bin_data(x_valid, edges)
-        y_hat_valid = jnp.full((x_valid.shape[0],), cfg.base_score, jnp.float32)
+        y_hat_valid = obj.init_raw(x_valid.shape[0], cfg.base_score)
 
     forests = []
     history = TrainHistory(engine="loop")
@@ -198,7 +172,7 @@ def _train_loop(
         rho_id = dynamic.rho_id_schedule(cfg, m)
 
         rng, k_sample = jax.random.split(rng)
-        g, h = losses.grad_hess(cfg.loss, y, y_hat)
+        g, h = obj.grad_hess(y, y_hat)
         if cfg.sampling == "goss":
             n_top, n_rand = forest_mod.goss_counts(n, rho_id, cfg.goss_top_share)
             smask, fmask = forest_mod.goss_masks(
@@ -289,7 +263,7 @@ def _scan_train_program(
     All sampling masks are drawn up front in one batched vmap; the key
     chain replays the loop's split-per-round / fold_in-per-slot derivation
     exactly, so the scan builds mask-for-mask the legacy loop's trees.
-    Metrics are evaluated in-graph (``_metric_vector``) under ``lax.cond``,
+    Metrics are evaluated in-graph (``Objective.metric_vector``) under ``lax.cond``,
     gated to eval rounds — no per-round host sync; the caller fetches the
     whole history in one device->host copy.
 
@@ -305,9 +279,9 @@ def _scan_train_program(
 
     n, d = binned.shape
     d_keep = forest_mod.feature_keep_count(d, cfg.rho_feat)
-    loss = cfg.loss
+    obj = objective_mod.get_objective(cfg.loss)
     lr = cfg.learning_rate
-    nan_vec = jnp.full((len(_METRIC_KEYS[loss]),), jnp.nan, jnp.float32)
+    nan_vec = jnp.full((len(obj.metric_keys),), jnp.nan, jnp.float32)
     has_valid = binned_valid is not None
     y32 = y.astype(jnp.float32)
 
@@ -352,7 +326,7 @@ def _scan_train_program(
 
     def round_body(rdr, carry, xs):
         y_hat, y_hat_valid = carry
-        g, h = losses.grad_hess(loss, y32, y_hat)
+        g, h = obj.grad_hess(y32, y_hat)
         if use_goss:
             smask, fmask = forest_mod.goss_masks_from_keys(
                 xs["keys"], g, d, xs["n_top"], xs["n_rand"], d_keep
@@ -365,7 +339,7 @@ def _scan_train_program(
         y_hat = y_hat + lr * jnp.mean(per_pred, axis=0)
         tr_vec = jax.lax.cond(
             xs["do_eval"],
-            lambda m: _metric_vector(loss, y32, m),
+            lambda m: obj.metric_vector(y32, m),
             lambda m: nan_vec,
             y_hat,
         )
@@ -375,15 +349,15 @@ def _scan_train_program(
             y_hat_valid = y_hat_valid + lr * jnp.mean(vp, axis=0)
             va_vec = jax.lax.cond(
                 xs["do_eval"],
-                lambda m: _metric_vector(loss, y_valid.astype(jnp.float32), m),
+                lambda m: obj.metric_vector(y_valid.astype(jnp.float32), m),
                 lambda m: nan_vec,
                 y_hat_valid,
             )
         return (y_hat, y_hat_valid), (trees, tr_vec, va_vec)
 
-    y_hat0 = jnp.full((n,), cfg.base_score, dtype=jnp.float32)
+    y_hat0 = obj.init_raw(n, cfg.base_score)
     y_hat_valid0 = (
-        jnp.full((binned_valid.shape[0],), cfg.base_score, jnp.float32)
+        obj.init_raw(binned_valid.shape[0], cfg.base_score)
         if has_valid else None
     )
     carry = (y_hat0, y_hat_valid0)
@@ -482,7 +456,7 @@ def _train_scanned(
     # One program ran all rounds: amortise the single wall time uniformly so
     # sum(wall_time_s) stays the true total.
     history.wall_time_s = [wall / cfg.rounds] * cfg.rounds
-    keys = _METRIC_KEYS[cfg.loss]
+    keys = objective_mod.get_objective(cfg.loss).metric_keys
     for m in np.nonzero(do_eval)[0]:
         m = int(m)
         history.rounds.append(m + 1)
@@ -618,7 +592,9 @@ def predict_loop(
     if isinstance(model, PackedEnsemble):
         model = unpack_ensemble(model)
     binned = binning.bin_data(x, model.bin_edges)
-    out = jnp.full((x.shape[0],), model.base_score, dtype=jnp.float32)
+    out = objective_mod.get_objective(model.loss).init_raw(
+        x.shape[0], model.base_score
+    )
     for trees in model.forests:
         out = out + model.learning_rate * tree_mod.predict_forest(
             trees, binned, model.max_depth
@@ -631,4 +607,8 @@ def predict_proba(
     x: jnp.ndarray,
     impl: str = "packed",
 ) -> jnp.ndarray:
-    return jax.nn.sigmoid(predict(model, x, impl=impl))
+    """Prediction-space output: the model's objective activation applied to
+    the raw margin (sigmoid for logistic, softmax for multiclass, identity
+    for regression/quantile) — resolved from the registry, never hard-coded."""
+    obj = objective_mod.get_objective(model.loss)
+    return obj.activation(predict(model, x, impl=impl))

@@ -134,6 +134,10 @@ def goss_masks_from_keys(
     n = g.shape[0]
     n_top = jnp.broadcast_to(jnp.asarray(n_top), keys.shape[:1])
     n_rand = jnp.broadcast_to(jnp.asarray(n_rand), keys.shape[:1])
+    if g.ndim > 1:
+        # K-channel objectives: rank by the per-sample L1 gradient norm
+        # (reduces to |g| at K = 1, where the branch below stays bit-exact).
+        g = jnp.abs(g).sum(axis=-1)
     order = jnp.argsort(-jnp.abs(g))  # stable: ties toward lower index
     rank = jnp.zeros(n, jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
 
@@ -178,7 +182,12 @@ def _forest_per_tree(binned, g, h, sample_mask, feature_mask, cfg, backend=None,
         binned, g, h, sample_mask, feature_mask, cfg, backend=backend,
         root_delta_rows=root_delta_rows,
     )
-    per_tree_pred = jnp.take_along_axis(trees.leaf_weight, assign, axis=1)
+    if trees.leaf_weight.ndim == 3:  # K-channel leaf table: (T, L, K)
+        per_tree_pred = jnp.take_along_axis(
+            trees.leaf_weight, assign[..., None], axis=1
+        )  # (T, n, K)
+    else:
+        per_tree_pred = jnp.take_along_axis(trees.leaf_weight, assign, axis=1)
     return trees, per_tree_pred
 
 

@@ -9,9 +9,13 @@ VFL protocol ships between parties), so it has three implementations:
 * ``kernels/histogram/ref.py`` — the oracle the kernel is tested against
   (re-exports this module's function).
 
-Layout: ``hist[node, feature, bin, stat]`` with ``stat = (sum_g, sum_h, count)``.
-Histograms are *additive* in samples, which is what makes both the data-parallel
-``psum`` and the VFL per-party decomposition exact.
+Layout: ``hist[node, feature, bin, stat]`` with ``stat = (sum_g, sum_h, count)``
+for K = 1 objectives and ``stat = (g_1..g_K, h_1..h_K, count)`` — ``2K + 1``
+channels, count LAST — for K-channel objectives (DESIGN.md §11).  Every
+provider derives the channel extent from the gradient rank (``(n,)`` vs
+``(n, K)``), so the K = 1 path is byte-for-byte the historical 3-channel
+one.  Histograms are *additive* in samples, which is what makes both the
+data-parallel ``psum`` and the VFL per-party decomposition exact.
 """
 
 from __future__ import annotations
@@ -36,6 +40,29 @@ def _record_pass(tag: str, rows: int, trees: int) -> None:
         PASS_METER.append({"tag": tag, "rows": int(rows), "trees": int(trees)})
 
 
+def _stack_stats(g: jnp.ndarray, h: jnp.ndarray, weight: jnp.ndarray):
+    """Per-row stat channels: (n, 3) for (n,) gradients — the historical
+    K = 1 expression, unchanged — else (n, 2K+1) with the count LAST."""
+    if g.ndim == 1:
+        return jnp.stack([g * weight, h * weight, weight], axis=-1)  # (n, 3)
+    w = weight[:, None]
+    return jnp.concatenate([g * w, h * w, w], axis=-1)  # (n, 2K+1)
+
+
+def _stack_round_stats(g: jnp.ndarray, h: jnp.ndarray, weight: jnp.ndarray):
+    """Round-native twin of ``_stack_stats``: (T, n) weights folded flat to
+    (T*n, 2K+1) stat rows (K = 1 path byte-identical to the historical)."""
+    t, n = weight.shape
+    if g.ndim == 1:
+        return jnp.stack(
+            [g[None] * weight, h[None] * weight, weight], axis=-1
+        ).reshape(t * n, NUM_STATS)  # (T*n, 3)
+    w = weight[..., None]  # (T, n, 1)
+    return jnp.concatenate(
+        [g[None] * w, h[None] * w, w], axis=-1
+    ).reshape(t * n, 2 * g.shape[-1] + 1)
+
+
 def compute_histogram(
     binned: jnp.ndarray,
     g: jnp.ndarray,
@@ -49,24 +76,27 @@ def compute_histogram(
 
     Args:
       binned: (n, d) int32 bin indices in [0, num_bins).
-      g, h:   (n,) float32 first/second-order derivatives.
+      g, h:   (n,) float32 first/second-order derivatives — or (n, K) for
+        K-channel objectives, widening the stat axis to 2K+1.
       weight: (n,) float32 0/1 sample-subsampling mask (P_m(j) of eq. 4).
       assign: (n,) int32 node assignment at the current level, in [0, num_nodes).
       num_nodes: static frontier width (2**level).
       num_bins:  static B.
 
     Returns:
-      (num_nodes, d, num_bins, 3) float32 histogram.
+      (num_nodes, d, num_bins, 2K+1) float32 histogram (3 channels at K = 1).
     """
     n, d = binned.shape
-    data = jnp.stack([g * weight, h * weight, weight], axis=-1)  # (n, 3)
+    data = _stack_stats(g, h, weight)  # (n, 2K+1)
     ids = assign[None, :] * num_bins + binned.T  # (d, n)
 
     def per_feature(ids_col: jnp.ndarray) -> jnp.ndarray:
         return jax.ops.segment_sum(data, ids_col, num_segments=num_nodes * num_bins)
 
-    hist = jax.vmap(per_feature)(ids)  # (d, num_nodes * B, 3)
-    return hist.reshape(d, num_nodes, num_bins, NUM_STATS).transpose(1, 0, 2, 3)
+    hist = jax.vmap(per_feature)(ids)  # (d, num_nodes * B, 2K+1)
+    return hist.reshape(
+        d, num_nodes, num_bins, data.shape[-1]
+    ).transpose(1, 0, 2, 3)
 
 
 def compute_histogram_onehot(
@@ -86,11 +116,13 @@ def compute_histogram_onehot(
     algebraic identity itself is testable without Pallas.
     """
     n, d = binned.shape
-    data = jnp.stack([g * weight, h * weight, weight], axis=-1)  # (n, 3)
+    data = _stack_stats(g, h, weight)  # (n, 2K+1)
     ids = assign[:, None] * num_bins + binned  # (n, d)
     onehot = jax.nn.one_hot(ids, num_nodes * num_bins, dtype=data.dtype)  # (n, d, NB)
-    hist = jnp.einsum("ndk,ns->dks", onehot, data)  # (d, NB, 3)
-    return hist.reshape(d, num_nodes, num_bins, NUM_STATS).transpose(1, 0, 2, 3)
+    hist = jnp.einsum("ndk,ns->dks", onehot, data)  # (d, NB, 2K+1)
+    return hist.reshape(
+        d, num_nodes, num_bins, data.shape[-1]
+    ).transpose(1, 0, 2, 3)
 
 
 # ---------------------------------------------------------------------------
@@ -118,7 +150,8 @@ def compute_round_histogram(
 
     Args:
       binned: (n, d) int32 shared binned features.
-      g, h: (n,) float32 shared derivatives.
+      g, h: (n,) float32 shared derivatives — or (n, K), widening the stat
+        axis to 2K+1.
       weight: (T, n) float32 per-tree sample masks/weights.
       assign: (T, n) int32 per-tree node assignment in [0, num_nodes).
       num_nodes: static frontier (slot) width.
@@ -134,7 +167,7 @@ def compute_round_histogram(
         compaction made several levels share a width.
 
     Returns:
-      (T, num_nodes, d, num_bins, 3) float32.
+      (T, num_nodes, d, num_bins, 2K+1) float32.
     """
     if root_delta_rows:
         return root_histogram_via_delta(
@@ -143,9 +176,7 @@ def compute_round_histogram(
     n, d = binned.shape
     t = weight.shape[0]
     _record_pass("round", n, t)
-    data = jnp.stack(
-        [g[None] * weight, h[None] * weight, weight], axis=-1
-    ).reshape(t * n, NUM_STATS)  # (T*n, 3)
+    data = _stack_round_stats(g, h, weight)  # (T*n, 2K+1)
     # segment id = ((tree * num_nodes) + node) * B + bin, per feature column.
     tree_node = (
         jnp.arange(t, dtype=jnp.int32)[:, None] * num_nodes + assign
@@ -159,10 +190,10 @@ def compute_round_histogram(
             data, ids_col, num_segments=t * num_nodes * num_bins
         )
 
-    hist = jax.vmap(per_feature)(ids)  # (d, T*nodes*B, 3)
-    return hist.reshape(d, t, num_nodes, num_bins, NUM_STATS).transpose(
-        1, 2, 0, 3, 4
-    )
+    hist = jax.vmap(per_feature)(ids)  # (d, T*nodes*B, 2K+1)
+    return hist.reshape(
+        d, t, num_nodes, num_bins, data.shape[-1]
+    ).transpose(1, 2, 0, 3, 4)
 
 
 def root_histogram_via_delta(
@@ -255,16 +286,14 @@ def round_leaf_stats(
     num_leaves: int,
 ) -> jnp.ndarray:
     """Round-native ``leaf_stats``: (T, n) masks/assignment → (T, leaves, 3)
-    in one flat three-channel ``segment_sum`` (tree folded into segments)."""
+    in one flat stat-channel ``segment_sum`` (tree folded into segments)."""
     t, n = weight.shape
-    data = jnp.stack(
-        [g[None] * weight, h[None] * weight, weight], axis=-1
-    ).reshape(t * n, NUM_STATS)
+    data = _stack_round_stats(g, h, weight)
     ids = (
         jnp.arange(t, dtype=jnp.int32)[:, None] * num_leaves + assign
     ).reshape(t * n)
     out = jax.ops.segment_sum(data, ids, num_segments=t * num_leaves)
-    return out.reshape(t, num_leaves, NUM_STATS)
+    return out.reshape(t, num_leaves, data.shape[-1])
 
 
 # ---------------------------------------------------------------------------
@@ -336,9 +365,9 @@ def leaf_stats(
     ``compute_histogram`` call, which built an (n, 1) zeros operand and a
     4-D reshape just to read back ``hist[:, 0, 0, :]``.
 
-    Returns (num_leaves, 3) float32.
+    Returns (num_leaves, 2K+1) float32 (3 channels at K = 1).
     """
-    data = jnp.stack([g * weight, h * weight, weight], axis=-1)  # (n, 3)
+    data = _stack_stats(g, h, weight)  # (n, 2K+1)
     return jax.ops.segment_sum(data, assign, num_segments=num_leaves)
 
 

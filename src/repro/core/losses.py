@@ -1,13 +1,19 @@
-"""Second-order losses: per-sample gradients g_i and hessians h_i (Alg. 2 step 2).
+"""Deprecated shim over ``core.objective`` (kept for callers of the old API).
 
-In the VFL protocol these are the quantities the active party computes,
-encrypts and broadcasts; everything downstream consumes only (g, h).
+The two-dict dispatch that used to live here (separate name tables for
+``grad_hess`` and ``loss_value`` that could drift apart) is collapsed into
+the single Objective registry — ``repro.core.objective.get_objective`` is
+the one source of truth for gradients, loss values, activations and
+metrics.  These wrappers resolve through the registry so the two functions
+can never disagree again.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import objective as objective_mod
 
 
 def sigmoid(z: jnp.ndarray) -> jnp.ndarray:
@@ -16,34 +22,21 @@ def sigmoid(z: jnp.ndarray) -> jnp.ndarray:
 
 def logistic_grad_hess(y: jnp.ndarray, y_hat: jnp.ndarray):
     """Binary logloss on raw margins: g = p - y, h = p (1 - p)."""
-    p = sigmoid(y_hat)
-    return p - y, p * (1.0 - p)
+    return objective_mod.get_objective("logistic").grad_hess(y, y_hat)
 
 
 def squared_grad_hess(y: jnp.ndarray, y_hat: jnp.ndarray):
     """0.5 * (y_hat - y)^2: g = y_hat - y, h = 1."""
-    return y_hat - y, jnp.ones_like(y_hat)
-
-
-_LOSSES = {
-    "logistic": logistic_grad_hess,
-    "squared": squared_grad_hess,
-}
+    return objective_mod.get_objective("squared").grad_hess(y, y_hat)
 
 
 def grad_hess(loss: str, y: jnp.ndarray, y_hat: jnp.ndarray):
-    try:
-        fn = _LOSSES[loss]
-    except KeyError as e:  # pragma: no cover - config error
-        raise ValueError(f"unknown loss {loss!r}; options: {sorted(_LOSSES)}") from e
-    return fn(y.astype(jnp.float32), y_hat.astype(jnp.float32))
+    """Deprecated: use ``objective.get_objective(loss).grad_hess``."""
+    obj = objective_mod.get_objective(loss)
+    return obj.grad_hess(y.astype(jnp.float32), y_hat.astype(jnp.float32))
 
 
 def loss_value(loss: str, y: jnp.ndarray, y_hat: jnp.ndarray) -> jnp.ndarray:
-    y = y.astype(jnp.float32)
-    if loss == "logistic":
-        # stable logloss on margins
-        return jnp.mean(jnp.maximum(y_hat, 0) - y_hat * y + jnp.log1p(jnp.exp(-jnp.abs(y_hat))))
-    if loss == "squared":
-        return 0.5 * jnp.mean((y_hat - y) ** 2)
-    raise ValueError(f"unknown loss {loss!r}")
+    """Deprecated: use ``objective.get_objective(loss).loss_value``."""
+    obj = objective_mod.get_objective(loss)
+    return obj.loss_value(y.astype(jnp.float32), y_hat)

@@ -43,3 +43,26 @@ def classification_report(y: jnp.ndarray, margin: jnp.ndarray) -> dict:
         "acc": float(accuracy(y, prob)),
         "f1": float(f1_score(y, prob)),
     }
+
+
+def multiclass_report(y: jnp.ndarray, margin: jnp.ndarray) -> dict:
+    """Accuracy + macro-F1 from (n, K) margins (argmax decision rule).
+
+    AUC is a binary ranking statistic — it has no single canonical K-class
+    form, so the multiclass report drops it rather than invent one.
+    """
+    k = margin.shape[-1]
+    y = y.astype(jnp.int32)
+    pred = jnp.argmax(margin, axis=-1).astype(jnp.int32)
+    f1s = []
+    for c in range(k):
+        yc = (y == c).astype(jnp.float32)
+        pc = (pred == c).astype(jnp.float32)
+        tp = jnp.sum(pc * yc)
+        fp = jnp.sum(pc * (1.0 - yc))
+        fn = jnp.sum((1.0 - pc) * yc)
+        f1s.append(2.0 * tp / jnp.maximum(2.0 * tp + fp + fn, 1.0))
+    return {
+        "acc": float(jnp.mean((pred == y).astype(jnp.float32))),
+        "macro_f1": float(jnp.mean(jnp.stack(f1s))),
+    }

@@ -1,0 +1,278 @@
+"""Objective registry: the pluggable loss seam with K gradient channels.
+
+Every layer of the trainer consumes only second-order statistics, so an
+objective is a narrow interface (DESIGN.md §11): per-sample gradients and
+hessians, a loss value, a prediction-space activation, the leaf closed
+form, and the metric set.  The channel contract:
+
+* **K = 1 objectives** (``logistic``, ``squared``, ``quantile[@a]``)
+  return ``(n,)`` gradients/hessians and flow through the historical
+  3-channel ``(g, h, count)`` histogram layout byte-for-byte unchanged —
+  binary logloss through this registry is bit-identical to the
+  pre-registry dual-dispatch (`losses.py` is now a thin shim over it).
+* **K > 1 objectives** (``softmax{K}`` multiclass) return ``(n, K)`` each
+  and widen the histogram channel axis to ``2K + 1`` channels laid out
+  ``(g_1..g_K, h_1..h_K, count)``; margins, leaf values and the packed
+  leaf table grow a trailing K axis.  The count channel is always LAST,
+  so ``hist[..., -1]`` reads it at any K (and ``hist[..., 2]`` still
+  works at K = 1).
+
+Objectives are looked up by name.  Two names are parameterized:
+``"softmax{K}"`` (e.g. ``"softmax3"``) and ``"quantile[@alpha]"``
+(e.g. ``"quantile@0.25"``; bare ``"quantile"`` is the median,
+alpha = 0.5).  ``"softmax1"`` degenerates to the binary-logistic
+formulas exactly (one-channel softmax IS a sigmoid margin), so the K = 1
+special case is bit-exact, not merely equivalent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics
+
+
+# ---------------------------------------------------------------------------
+# grad/hess + loss formulas (moved verbatim from the old losses.py dispatch)
+# ---------------------------------------------------------------------------
+def _logistic_grad_hess(y, y_hat):
+    """Binary logloss on raw margins: g = p - y, h = p (1 - p)."""
+    p = jax.nn.sigmoid(y_hat)
+    return p - y, p * (1.0 - p)
+
+
+def _logistic_loss(y, y_hat):
+    # stable logloss on margins
+    return jnp.mean(
+        jnp.maximum(y_hat, 0) - y_hat * y + jnp.log1p(jnp.exp(-jnp.abs(y_hat)))
+    )
+
+
+def _squared_grad_hess(y, y_hat):
+    """0.5 * (y_hat - y)^2: g = y_hat - y, h = 1."""
+    return y_hat - y, jnp.ones_like(y_hat)
+
+
+def _squared_loss(y, y_hat):
+    return 0.5 * jnp.mean((y_hat - y) ** 2)
+
+
+def _quantile_grad_hess(alpha: float):
+    def fn(y, y_hat):
+        # Pinball loss: L = a (y - m) if y >= m else (1 - a)(m - y);
+        # dL/dm = -a below the quantile, (1 - a) above.  The hessian is 0
+        # a.e., so we use the standard constant-hessian surrogate h = 1
+        # (the Newton leaf becomes a damped mean of pinball gradients).
+        g = jnp.where(y > y_hat, -alpha, 1.0 - alpha)
+        return g, jnp.ones_like(y_hat)
+
+    return fn
+
+
+def _quantile_loss(alpha: float):
+    def fn(y, y_hat):
+        e = y - y_hat
+        return jnp.mean(jnp.maximum(alpha * e, (alpha - 1.0) * e))
+
+    return fn
+
+
+def _softmax_grad_hess(k: int):
+    def fn(y, y_hat):
+        # y: (n,) integer class labels (float-typed is fine — onehot casts);
+        # y_hat: (n, K) raw per-class margins.  Diagonal-hessian multiclass
+        # softmax (XGBoost-style): g_k = p_k - 1[y = k], h_k = p_k (1 - p_k).
+        p = jax.nn.softmax(y_hat, axis=-1)
+        onehot = jax.nn.one_hot(y.astype(jnp.int32), k, dtype=p.dtype)
+        return p - onehot, p * (1.0 - p)
+
+    return fn
+
+
+def _softmax_loss(k: int):
+    def fn(y, y_hat):
+        logp = jax.nn.log_softmax(y_hat, axis=-1)
+        onehot = jax.nn.one_hot(y.astype(jnp.int32), k, dtype=logp.dtype)
+        return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# metric vectors (in-graph) and host-side evaluation, per objective family
+# ---------------------------------------------------------------------------
+def _logistic_metric_vector(y, margin):
+    prob = 1.0 / (1.0 + jnp.exp(-margin))  # as metrics.classification_report
+    return jnp.stack([
+        metrics.auc(y, margin),
+        metrics.accuracy(y, prob),
+        metrics.f1_score(y, prob),
+        _logistic_loss(y, margin),
+    ])
+
+
+def _regression_metric_vector(loss_fn):
+    def fn(y, margin):
+        return jnp.stack([
+            jnp.sqrt(jnp.mean((margin - y) ** 2)),
+            loss_fn(y, margin),
+        ])
+
+    return fn
+
+
+def _softmax_metric_vector(k: int):
+    loss_fn = _softmax_loss(k)
+
+    def fn(y, margin):
+        pred = jnp.argmax(margin, axis=-1).astype(jnp.float32)
+        acc = jnp.mean(pred == y.astype(jnp.float32))
+        return jnp.stack([acc, loss_fn(y, margin)])
+
+    return fn
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    """One registered objective.
+
+    ``grad_hess(y, margin) -> (g, h)``: each ``(n,)`` when ``n_classes == 1``
+    else ``(n, K)``.  ``loss_value(y, margin) -> scalar``.  ``activation``
+    maps raw margins to prediction space (sigmoid / identity / softmax).
+    ``metric_keys`` names the entries of ``metric_vector`` in order (the
+    scanned engine's in-graph history rows and the loop engine's dicts use
+    the same keys).  ``init_margin`` is the margin value training starts
+    from before the config's ``base_score`` shift is applied.
+    """
+
+    name: str
+    n_classes: int
+    grad_hess: Callable
+    loss_value: Callable
+    activation: Callable
+    metric_keys: tuple
+    metric_vector: Callable
+    init_margin: float = 0.0
+
+    def leaf_from_stats(self, g_sum, h_sum, lambda_):
+        """Newton leaf closed form w* = -G / (H + lambda), per channel.
+
+        All shipped objectives use this default (``split.leaf_weights`` is
+        its vectorized-over-the-histogram twin); a custom objective that
+        overrides it must also swap the leaf provider.
+        """
+        return -g_sum / (h_sum + lambda_)
+
+    def init_raw(self, n: int, base_score: float = 0.0) -> jnp.ndarray:
+        """Initial margin carry: (n,) at K = 1, (n, K) otherwise."""
+        shape = (n,) if self.n_classes == 1 else (n, self.n_classes)
+        return jnp.full(shape, self.init_margin + base_score, jnp.float32)
+
+    def evaluate(self, y, margin) -> dict:
+        """Host-side metric dict — same quantities/order as metric_vector."""
+        vec = self.metric_vector(y.astype(jnp.float32), margin)
+        return dict(zip(self.metric_keys, (float(v) for v in vec)))
+
+
+_logistic = Objective(
+    name="logistic",
+    n_classes=1,
+    grad_hess=_logistic_grad_hess,
+    loss_value=_logistic_loss,
+    activation=jax.nn.sigmoid,
+    metric_keys=("auc", "acc", "f1", "loss"),
+    metric_vector=_logistic_metric_vector,
+)
+
+_REGISTRY = {
+    "logistic": _logistic,
+    "squared": Objective(
+        name="squared",
+        n_classes=1,
+        grad_hess=_squared_grad_hess,
+        loss_value=_squared_loss,
+        activation=lambda m: m,
+        metric_keys=("rmse", "loss"),
+        metric_vector=_regression_metric_vector(_squared_loss),
+    ),
+}
+
+
+def register(obj: Objective) -> Objective:
+    """Add an objective to the registry (name must be unused)."""
+    if obj.name in _REGISTRY:
+        raise ValueError(f"objective {obj.name!r} already registered")
+    _REGISTRY[obj.name] = obj
+    return obj
+
+
+def available_objectives() -> tuple:
+    """Registered fixed names (parameterized families add softmax{K} and
+    quantile[@alpha] on top)."""
+    return tuple(sorted(_REGISTRY)) + ("quantile", "softmax{K}")
+
+
+@lru_cache(maxsize=None)
+def _parameterized(name: str) -> Objective:
+    if name.startswith("softmax"):
+        try:
+            k = int(name[len("softmax"):])
+        except ValueError:
+            raise ValueError(f"bad softmax objective {name!r}: expected "
+                             "'softmax<K>' (e.g. 'softmax3')") from None
+        if k < 1:
+            raise ValueError(f"softmax needs K >= 1, got {k}")
+        if k == 1:
+            # One-channel softmax IS the sigmoid margin: alias the binary
+            # formulas so K = 1 is bit-exact, not just equivalent.
+            return dataclasses.replace(_logistic, name=name)
+        return Objective(
+            name=name,
+            n_classes=k,
+            grad_hess=_softmax_grad_hess(k),
+            loss_value=_softmax_loss(k),
+            activation=lambda m: jax.nn.softmax(m, axis=-1),
+            metric_keys=("acc", "loss"),
+            metric_vector=_softmax_metric_vector(k),
+        )
+    if name.startswith("quantile"):
+        alpha = 0.5
+        if name != "quantile":
+            if not name.startswith("quantile@"):
+                raise ValueError(f"bad quantile objective {name!r}: expected "
+                                 "'quantile' or 'quantile@<alpha>'")
+            alpha = float(name[len("quantile@"):])
+        if not 0.0 < alpha < 1.0:
+            raise ValueError(f"quantile alpha must be in (0, 1), got {alpha}")
+        loss_fn = _quantile_loss(alpha)
+        return Objective(
+            name=name,
+            n_classes=1,
+            grad_hess=_quantile_grad_hess(alpha),
+            loss_value=loss_fn,
+            activation=lambda m: m,
+            metric_keys=("rmse", "loss"),
+            metric_vector=_regression_metric_vector(loss_fn),
+        )
+    raise ValueError(
+        f"unknown objective {name!r}; options: {available_objectives()}"
+    )
+
+
+def get_objective(name: str) -> Objective:
+    """Resolve an objective by name (cached — objectives are singletons,
+    so configs keep storing plain strings and jit static args stay cheap)."""
+    obj = _REGISTRY.get(name)
+    if obj is not None:
+        return obj
+    return _parameterized(name)
+
+
+def num_stats(n_classes: int) -> int:
+    """Histogram channel count for K gradient channels: (g*K, h*K, count)."""
+    return 2 * n_classes + 1

@@ -27,7 +27,8 @@ def split_gains(hist: jnp.ndarray, cfg: TreeConfig) -> jnp.ndarray:
     """Gain of splitting each (node, feature) at each bin threshold.
 
     Args:
-      hist: (num_nodes, d, B, 3) histogram.
+      hist: (num_nodes, d, B, 3) histogram — or (num_nodes, d, B, 2K+1) for
+        K-channel objectives (per-class gains summed, diagonal hessian).
       cfg:  tree config (lambda_, gamma, min_child_weight).
 
     Returns:
@@ -35,21 +36,36 @@ def split_gains(hist: jnp.ndarray, cfg: TreeConfig) -> jnp.ndarray:
       Threshold semantics: left = {bin <= b}.
     """
     num_bins = hist.shape[2]
-    cum = jnp.cumsum(hist, axis=2)  # (nodes, d, B, 3): left stats at threshold b
-    total = cum[:, :, -1, :][:, :, None, :]  # (nodes, d, 1, 3)
-
-    gl, hl = cum[..., 0], cum[..., 1]
-    gt, ht = total[..., 0], total[..., 1]
-    gr, hr = gt - gl, ht - hl
-
+    cum = jnp.cumsum(hist, axis=2)  # (nodes, d, B, S): left stats at threshold b
+    total = cum[:, :, -1, :][:, :, None, :]  # (nodes, d, 1, S)
     lam = cfg.lambda_
-    gain = 0.5 * (
-        gl**2 / (hl + lam) + gr**2 / (hr + lam) - gt**2 / (ht + lam)
-    ) - cfg.gamma
+
+    if hist.shape[-1] == 3:  # K = 1: the historical scalar-channel path
+        gl, hl = cum[..., 0], cum[..., 1]
+        gt, ht = total[..., 0], total[..., 1]
+        gr, hr = gt - gl, ht - hl
+
+        gain = 0.5 * (
+            gl**2 / (hl + lam) + gr**2 / (hr + lam) - gt**2 / (ht + lam)
+        ) - cfg.gamma
+        hl_sum, hr_sum = hl, hr
+    else:
+        k = (hist.shape[-1] - 1) // 2
+        gl, hl = cum[..., :k], cum[..., k:2 * k]
+        gt, ht = total[..., :k], total[..., k:2 * k]
+        gr, hr = gt - gl, ht - hl
+
+        # Diagonal-hessian multiclass gain: per-class Newton gains summed
+        # (the K independent leaf values share one structural split).
+        gain = 0.5 * jnp.sum(
+            gl**2 / (hl + lam) + gr**2 / (hr + lam) - gt**2 / (ht + lam),
+            axis=-1,
+        ) - cfg.gamma
+        hl_sum, hr_sum = hl.sum(axis=-1), hr.sum(axis=-1)
 
     valid = (
-        (hl >= cfg.min_child_weight)
-        & (hr >= cfg.min_child_weight)
+        (hl_sum >= cfg.min_child_weight)
+        & (hr_sum >= cfg.min_child_weight)
         # threshold == B-1 sends everything left: not a split
         & (jnp.arange(num_bins)[None, None, :] < num_bins - 1)
     )
@@ -116,10 +132,17 @@ def leaf_weights(hist_leaf: jnp.ndarray, cfg: TreeConfig) -> jnp.ndarray:
     """Optimal leaf weights w = -G / (H + lambda) (Alg. 2 step 14).
 
     Args:
-      hist_leaf: (num_leaves, 3) aggregated (G, H, count) per leaf.
+      hist_leaf: (num_leaves, 3) aggregated (G, H, count) per leaf — or
+        (num_leaves, 2K+1) for K-channel objectives (K leaf values/node).
     Returns:
-      (num_leaves,) float32; empty leaves get 0.
+      (num_leaves,) float32 — (num_leaves, K) at K > 1; empty leaves get 0.
     """
-    g, h, c = hist_leaf[..., 0], hist_leaf[..., 1], hist_leaf[..., 2]
+    if hist_leaf.shape[-1] == 3:  # K = 1: the historical scalar path
+        g, h, c = hist_leaf[..., 0], hist_leaf[..., 1], hist_leaf[..., 2]
+        w = -g / (h + cfg.lambda_)
+        return jnp.where(c > 0, w, 0.0)
+    k = (hist_leaf.shape[-1] - 1) // 2
+    g, h = hist_leaf[..., :k], hist_leaf[..., k:2 * k]
+    c = hist_leaf[..., -1]
     w = -g / (h + cfg.lambda_)
-    return jnp.where(c > 0, w, 0.0)
+    return jnp.where((c > 0)[..., None], w, 0.0)

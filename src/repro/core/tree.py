@@ -345,7 +345,8 @@ def build_round(
             # through the leaf provider so sample-sharded backends psum to
             # the global count (a cheap (n,) pass, no party collective —
             # weights and routing are party-replicated).
-            counts = leaf_fn(g, h, sample_mask, assign, 2 ** next_level)[..., 2]
+            # count is the LAST stat channel at any K (index 2 when K = 1)
+            counts = leaf_fn(g, h, sample_mask, assign, 2 ** next_level)[..., -1]
             live = (counts > 0) & jnp.repeat(feature_lvl >= 0, 2, axis=1)
         else:
             live = None
@@ -357,8 +358,8 @@ def build_round(
     # in plaintext, so leaf weights are computed locally (Alg. 2 step 14);
     # the leaf provider is only overridden when samples are sharded over the
     # data axis (psum of the additive stats, no party gather).
-    leaf_hist = leaf_fn(g, h, sample_mask, assign, cfg.num_leaves)  # (T, L, 3)
-    weights = split_mod.leaf_weights(leaf_hist, cfg)                # (T, L)
+    leaf_hist = leaf_fn(g, h, sample_mask, assign, cfg.num_leaves)  # (T, L, 2K+1)
+    weights = split_mod.leaf_weights(leaf_hist, cfg)           # (T, L[, K])
 
     trees = TreeArrays(
         feature=jnp.concatenate(features, axis=1),
@@ -406,7 +407,8 @@ def predict_tree(tree: TreeArrays, binned: jnp.ndarray, max_depth: int) -> jnp.n
       binned: (n, d) int32 — binned with the training edges.
       max_depth: static tree depth.
     Returns:
-      (n,) float32 raw tree output.
+      (n,) float32 raw tree output — (n, K) when the leaf table carries K
+      values per leaf (K-channel objectives).
     """
     n = binned.shape[0]
     idx = jnp.zeros(n, dtype=jnp.int32)
@@ -436,6 +438,14 @@ def predict_forest(trees: TreeArrays, binned: jnp.ndarray, max_depth: int) -> jn
     return jnp.mean(predict_trees(trees, binned, max_depth), axis=0)
 
 
+def _margin_shape(n: int, packed_leaf_weight: jnp.ndarray) -> tuple:
+    """Margin accumulator shape from the packed leaf table: (n,) for the
+    2-D (trees, leaves) table, (n, K) for the K-channel 3-D one."""
+    if packed_leaf_weight.ndim == 2:
+        return (n,)
+    return (n, packed_leaf_weight.shape[-1])
+
+
 def predict_packed(packed: PackedEnsemble, binned: jnp.ndarray) -> jnp.ndarray:
     """Raw-margin prediction from the packed layout, bit-for-bit equal to the
     legacy per-round loop (asserted in tests/test_packed.py).
@@ -452,7 +462,10 @@ def predict_packed(packed: PackedEnsemble, binned: jnp.ndarray) -> jnp.ndarray:
     scanned body (O(1) compile cost), and the Pallas ``ensemble_predict``
     kernel fuses the whole ensemble on TPU.
     """
-    out = jnp.full((binned.shape[0],), packed.base_score, dtype=jnp.float32)
+    out = jnp.full(
+        _margin_shape(binned.shape[0], packed.leaf_weight),
+        packed.base_score, dtype=jnp.float32,
+    )
     for r in range(packed.rounds):
         s, e = packed.round_offsets[r], packed.round_offsets[r + 1]
         seg = TreeArrays(
@@ -487,7 +500,8 @@ def predict_packed_weighted(packed: PackedEnsemble, binned: jnp.ndarray) -> jnp.
 
     out, _ = jax.lax.scan(
         body,
-        jnp.full((n,), packed.base_score, dtype=jnp.float32),
+        jnp.full(_margin_shape(n, packed.leaf_weight), packed.base_score,
+                 dtype=jnp.float32),
         (packed.feature, packed.threshold, packed.leaf_weight,
          packed.tree_scale),
     )

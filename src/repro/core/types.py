@@ -26,7 +26,9 @@ class TreeArrays(NamedTuple):
     feature: jnp.ndarray      # (num_internal,) int32 — split feature, -1 = leaf-through
     threshold: jnp.ndarray    # (num_internal,) int32 — go left iff bin <= threshold
     gain: jnp.ndarray         # (num_internal,) float32 — split gain (eq. 1)
-    leaf_weight: jnp.ndarray  # (2**max_depth,) float32 — XGBoost leaf weights
+    leaf_weight: jnp.ndarray  # (2**max_depth,) float32 — XGBoost leaf weights;
+    #                           (2**max_depth, K) for K-channel objectives
+    #                           (DESIGN.md §11: one leaf value per class)
 
 
 def forest_size(trees: TreeArrays) -> int:
@@ -106,7 +108,9 @@ class FedGBFConfig:
     rounds: int = 20                  # M, boosting rounds
     learning_rate: float = 0.1
     tree: TreeConfig = dataclasses.field(default_factory=TreeConfig)
-    loss: str = "logistic"            # "logistic" | "squared"
+    loss: str = "logistic"            # objective registry name (core/objective.py):
+    #                                   "logistic" | "squared" | "quantile[@a]"
+    #                                   | "softmax{K}"
 
     # Forest size schedule (dynamic decay, eq. 7): t_max -> t_min at speed t_k.
     n_trees_max: int = 5
@@ -182,7 +186,7 @@ class PackedEnsemble:
     feature: jnp.ndarray      # (total_trees, num_internal) int32
     threshold: jnp.ndarray    # (total_trees, num_internal) int32
     gain: jnp.ndarray         # (total_trees, num_internal) float32
-    leaf_weight: jnp.ndarray  # (total_trees, num_leaves) float32
+    leaf_weight: jnp.ndarray  # (total_trees, num_leaves[, K]) float32
     tree_scale: jnp.ndarray   # (total_trees,) float32 = lr / n_trees(round)
     bin_edges: jnp.ndarray    # (d, num_bins - 1) training quantile edges
     round_offsets: tuple      # static: (rounds + 1,) tree-index boundaries

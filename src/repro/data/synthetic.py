@@ -95,9 +95,35 @@ def default_credit_card(seed: int = 1, n: int = 30_000) -> Dataset:
     return Dataset(xt, yt, xe, ye, "default_credit_card", active_dims=13)
 
 
+def credit_risk_tiers(seed: int = 2, n: int = 20_000) -> Dataset:
+    """20k x 12, THREE risk tiers (low/watch/default) — multiclass workload.
+
+    Same credit-like feature generator as the binary datasets; the latent
+    logit is cut at its 60th/85th percentiles into ordinal tiers, so the
+    class structure is feature-driven (not random labels) and imbalanced
+    like real delinquency buckets (~60/25/15).  Labels are float class ids
+    {0, 1, 2} for the ``softmax3`` objective (DESIGN.md §11).
+    """
+    rng = np.random.default_rng(seed)
+    d = 12
+    x, _ = _credit_like(rng, n, d, pos_rate=0.5, interaction_pairs=4)
+    z = (x - x.mean(axis=0)) / (x.std(axis=0) + 1e-9)
+    w = rng.normal(size=d) * (rng.random(d) < 0.7)
+    logit = z @ w * 0.8
+    for _ in range(4):
+        i, j = rng.integers(0, d, size=2)
+        logit += 0.5 * z[:, i] * z[:, j]
+    logit += rng.normal(scale=0.6, size=n)
+    lo, hi = np.quantile(logit, [0.60, 0.85])
+    y = (logit > lo).astype(np.float32) + (logit > hi).astype(np.float32)
+    xt, yt, xe, ye = _split(x, y, rng)
+    return Dataset(xt, yt, xe, ye, "credit_risk_tiers", active_dims=6)
+
+
 DATASETS = {
     "give_me_some_credit": give_me_some_credit,
     "default_credit_card": default_credit_card,
+    "credit_risk_tiers": credit_risk_tiers,
 }
 
 

@@ -60,8 +60,10 @@ from repro.core import split as split_mod
 from repro.core.types import TreeConfig
 from repro.federation import mesh_roles
 
-#: histogram stat channels that traverse the wire under quantization —
-#: split search needs only (sum_g, sum_h); the count channel stays local.
+#: histogram stat channels that traverse the wire under quantization for a
+#: SCALAR (K = 1) objective — split search needs only (sum_g, sum_h); the
+#: count channel stays local.  K-channel objectives ship 2K wire channels
+#: (the providers slice ``[..., :-1]``: everything but the trailing count).
 GH_STATS = 2
 
 
@@ -117,6 +119,7 @@ def reconciled_ledger(
     num_features: Optional[int] = None,
     shard_samples: bool = False,
     async_exchange: bool = False,
+    n_channels: int = 1,
 ):
     """One-call measured-vs-predicted accounting for a training run.
 
@@ -138,7 +141,7 @@ def reconciled_ledger(
     per_tree, grad = probe_tree_cost(
         mesh, tree, aggregation=aggregation, transport=transport,
         n_samples=n_samples, num_features=d, shard_samples=shard_samples,
-        async_exchange=async_exchange,
+        async_exchange=async_exchange, n_channels=n_channels,
     )
     data_shards = 1
     if shard_samples:
@@ -149,6 +152,7 @@ def reconciled_ledger(
         num_bins=tree.num_bins, max_depth=tree.max_depth,
         aggregation=aggregation, hist_subtraction=tree.hist_subtraction,
         max_active_nodes=tree.max_active_nodes, data_shards=data_shards,
+        n_channels=n_channels,
     )
     ledger = protocol.ProtocolLedger(spec=spec, cfg=cfg, transport=transport)
     ledger.record_run(per_tree, grad)
@@ -245,6 +249,7 @@ def probe_tree_cost(
     num_features: Optional[int] = None,
     shard_samples: bool = False,
     async_exchange: bool = False,
+    n_channels: int = 1,
 ) -> tuple[dict, int]:
     """Measure one tree's actual per-phase wire bytes by abstract evaluation.
 
@@ -274,12 +279,15 @@ def probe_tree_cost(
         async_exchange=async_exchange,
     )
     sds = jax.ShapeDtypeStruct
+    # K-channel objectives (DESIGN.md §11) carry (n, K) derivatives; K = 1
+    # keeps the historical (n,) vectors so the traced program is unchanged.
+    gh_shape = (n_samples,) if n_channels == 1 else (n_samples, n_channels)
     with use_mesh(mesh):
         jax.eval_shape(
             backend.forest_builder,
             sds((n_samples, d), jnp.int32),
-            sds((n_samples,), jnp.float32),
-            sds((n_samples,), jnp.float32),
+            sds(gh_shape, jnp.float32),
+            sds(gh_shape, jnp.float32),
             sds((1, n_samples), jnp.float32),
             sds((1, d), bool),
         )
@@ -386,7 +394,9 @@ def quantized_round_histogram_fn(
                         level=level)
         for ax in data_axes:
             local = jax.lax.psum(local, ax)
-        payload = local[..., :GH_STATS]  # (T, nodes, d_party, B, 2)
+        # everything but the trailing count channel traverses the wire:
+        # (T, nodes, d_party, B, 2K) — GH_STATS (= 2) at K = 1.
+        payload = local[..., :-1]
         # fold the LEVEL (not just the width) into the key: subtraction and
         # compaction make several levels share a num_nodes, and equal-shape
         # payloads would otherwise draw bit-identical rounding noise.

@@ -1,0 +1,237 @@
+"""Gradient-less party-local training with learnable per-tree rates.
+
+The no-gradient-sharing privacy point of the objective layer (DESIGN.md
+§11), after Ma et al.'s "Gradient-less Federated GBT with Learnable
+Learning Rates" (PAPERS.md): FedGBF's protocol ships per-sample (g, h)
+to every passive party and per-level histograms back — both are the
+attack surface SecureBoost encrypts.  This mode removes the messages
+instead of encrypting them:
+
+* **Per-party local trees.**  Every party runs ordinary (centralized)
+  FedGBF boosting on its OWN feature slice; gradients and histograms
+  exist only inside the party and never traverse the wire.  The trees a
+  party contributes reference only its local features (offset to global
+  column ids when the ensemble is assembled, so the packed model predicts
+  on the full feature matrix like any other checkpoint).
+
+* **Learnable per-tree rates.**  The collaboration happens at the
+  *margin* level: each party ships its trees' raw per-tree margin columns
+  on the training set — (T_p, n[, K]) floats, data-independent of the
+  feature values — and the active party fits one scalar rate per tree by
+  gradient descent on the global objective loss.  The learned rates land
+  in ``PackedEnsemble.tree_scale``, whose weighted combiner
+  (``margin = base + tree_scale @ per_tree``) is exactly the model this
+  mode trains — serving and checkpointing reuse the packed layout
+  verbatim.
+
+* **Ledger semantics.**  The wire inventory is per-party margins in and
+  rates back out; the histogram, grad-broadcast and id-partition phases
+  are identically ZERO — ``wire_cost`` prices them as such and the
+  selftest reconciles the measured payloads (the actual margin/rate
+  arrays, recorded by a ``compress.MessageMeter``) against that model
+  exactly, at any channel count K.
+
+The trade: no per-split cross-party feature interaction (a tree never
+mixes two parties' columns), so accuracy trails protocol FedGBF on
+feature-split-correlated data — the price of the privacy point, not a
+bug.  The rate fit recovers the cross-party *additive* structure.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binning, boosting
+from repro.core import objective as objective_mod
+from repro.core import tree as tree_mod
+from repro.core.types import FedGBFConfig, PackedEnsemble, pack_ensemble
+from repro.federation import compress
+
+
+def _party_slices(d: int, num_parties: int) -> list:
+    if d % num_parties:
+        raise ValueError(
+            f"d={d} must shard evenly over {num_parties} parties; "
+            "pad columns with data.tabular.pad_features"
+        )
+    d_party = d // num_parties
+    return [slice(p * d_party, (p + 1) * d_party) for p in range(num_parties)]
+
+
+@partial(jax.jit, static_argnames=("objective_name", "steps"))
+def fit_tree_scales(
+    margins: jnp.ndarray,
+    y: jnp.ndarray,
+    init_scale: jnp.ndarray,
+    objective_name: str,
+    base_score: float = 0.0,
+    steps: int = 300,
+    lr: float = 0.05,
+) -> jnp.ndarray:
+    """Learn one rate per tree by Adam on the global objective loss.
+
+    ``margins`` is the stacked per-tree raw output on the training set —
+    (T, n) for scalar objectives, (T, n, K) for K-channel ones — and the
+    model is the packed combiner itself:
+    ``loss(w) = objective.loss_value(y, base + einsum('t,tn...->n...', w, m))``.
+    Starting from the per-party packed scales (lr / n_trees) makes step 0
+    the plain concatenation of the local models, so the fit can only
+    improve on it (up to optimizer noise).
+    """
+    obj = objective_mod.get_objective(objective_name)
+
+    def loss_fn(w):
+        margin = jnp.einsum("t,tn...->n...", w, margins) + base_score
+        return obj.loss_value(y, margin)
+
+    grad_fn = jax.grad(loss_fn)
+
+    def step(_, state):
+        w, m, v, t = state
+        g = grad_fn(w)
+        t = t + 1.0
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        m_hat = m / (1.0 - 0.9 ** t)
+        v_hat = v / (1.0 - 0.999 ** t)
+        w = w - lr * m_hat / (jnp.sqrt(v_hat) + 1e-8)
+        return w, m, v, t
+
+    zeros = jnp.zeros_like(init_scale)
+    w, _, _, _ = jax.lax.fori_loop(
+        0, steps, step, (init_scale, zeros, zeros, 0.0)
+    )
+    return w
+
+
+def train_gradientless(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    cfg: FedGBFConfig,
+    rng: jax.Array,
+    num_parties: int,
+    scale_steps: int = 300,
+    scale_lr: float = 0.05,
+    meter: Optional[compress.MessageMeter] = None,
+    engine: str = "scan",
+) -> tuple[PackedEnsemble, dict]:
+    """Train the gradient-less party-local ensemble (module docstring).
+
+    Per party: centralized boosting on the party's feature slice (its own
+    rng stream via ``fold_in`` so parties stay independent); globally: one
+    learned rate per tree (``fit_tree_scales``).  ``meter`` records the
+    two payloads that DO traverse the wire — each passive party's margin
+    block in, the rate vector back out to each passive party — and nothing
+    else: there is no histogram, gradient or routing message to record.
+
+    Returns (packed, info): ``packed`` is a standard ``PackedEnsemble``
+    (global feature ids, learned ``tree_scale``, one logical round) and
+    ``info`` carries the before/after training loss and per-party tree
+    counts.
+    """
+    n, d = x.shape
+    slices = _party_slices(d, num_parties)
+    obj = objective_mod.get_objective(cfg.loss)
+
+    party_packed, party_margins, tree_counts = [], [], []
+    for p, sl in enumerate(slices):
+        x_p = x[:, sl]
+        model_p, _ = boosting.train_fedgbf(
+            x_p, y, cfg, jax.random.fold_in(rng, p), engine=engine
+        )
+        packed_p = pack_ensemble(model_p)
+        binned_p = binning.bin_data(x_p, packed_p.bin_edges)
+        margins_p = tree_mod.predict_trees(
+            packed_p.trees(), binned_p, packed_p.max_depth
+        )  # (T_p, n[, K])
+        if meter is not None and p > 0:
+            # the one inbound message of the protocol: a passive party's
+            # per-tree margin block (the active party's own stays local).
+            meter.record("tree_margins", margins_p)
+        party_packed.append(packed_p)
+        party_margins.append(margins_p)
+        tree_counts.append(packed_p.total_trees)
+
+    margins = jnp.concatenate(party_margins, axis=0)
+    init_scale = jnp.concatenate([pk.tree_scale for pk in party_packed])
+    base = float(cfg.base_score) + obj.init_margin
+    loss_before = float(obj.loss_value(
+        y, jnp.einsum("t,tn...->n...", init_scale, margins) + base
+    ))
+    scales = fit_tree_scales(
+        margins, y, init_scale, cfg.loss, base_score=base,
+        steps=scale_steps, lr=scale_lr,
+    )
+    if meter is not None:
+        # the one outbound message: the learned rate vector, to each
+        # passive party (so it can serve its own slice of the ensemble).
+        for _ in range(num_parties - 1):
+            meter.record("tree_scales", scales)
+    loss_after = float(obj.loss_value(
+        y, jnp.einsum("t,tn...->n...", scales, margins) + base
+    ))
+
+    # Assemble the global packed model: party p's features shift to global
+    # column ids (leaf-through nodes stay -1); bin edges concatenate
+    # feature-wise (per-column quantiles are slice-invariant).
+    d_party = d // num_parties
+    features = jnp.concatenate([
+        jnp.where(pk.feature >= 0, pk.feature + p * d_party, pk.feature)
+        for p, pk in enumerate(party_packed)
+    ])
+    packed = PackedEnsemble(
+        feature=features,
+        threshold=jnp.concatenate([pk.threshold for pk in party_packed]),
+        gain=jnp.concatenate([pk.gain for pk in party_packed]),
+        leaf_weight=jnp.concatenate([pk.leaf_weight for pk in party_packed]),
+        tree_scale=scales,
+        bin_edges=jnp.concatenate([pk.bin_edges for pk in party_packed]),
+        round_offsets=(0, int(sum(tree_counts))),
+        learning_rate=cfg.learning_rate,
+        base_score=base,
+        loss=cfg.loss,
+        max_depth=cfg.tree.max_depth,
+    )
+    info = {
+        "loss_before": loss_before,
+        "loss_after": loss_after,
+        "tree_counts": tree_counts,
+        "n_channels": obj.n_classes,
+    }
+    return packed, info
+
+
+def wire_cost(
+    n_samples: int,
+    tree_counts: list,
+    n_channels: int = 1,
+) -> dict:
+    """Predicted wire bytes of one gradient-less training run.
+
+    Phase inventory (module docstring): each PASSIVE party ships its
+    margin block once (``T_p * n * K * 4`` bytes; the active party — by
+    convention party 0 — keeps its own local) and receives the learned
+    rate vector (``T_total * 4`` bytes).  Every protocol phase of the
+    gradient-sharing mode is identically zero — the mode's ledger
+    contract, reconciled in ``federation/selftest.py``.
+    """
+    total_trees = int(sum(tree_counts))
+    passive = len(tree_counts) - 1
+    margins = sum(
+        int(t) * n_samples * n_channels * 4 for t in tree_counts[1:]
+    )
+    out = {
+        "tree_margins": margins,
+        "tree_scales": passive * total_trees * 4,
+        "histograms": 0,
+        "grad_broadcast": 0,
+        "id_partition": 0,
+        "feature_mask": 0,
+        "split_candidates": 0,
+    }
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out

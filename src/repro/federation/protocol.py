@@ -98,6 +98,13 @@ class ProtocolSpec:
     # shard granularity with weight-0 entries), so the per-shard byte
     # rounding is visible in the wire total.  1 = single host.
     data_shards: int = 1
+    # Gradient channels K of the objective (DESIGN.md §11): scalar
+    # objectives (logistic, squared, quantile) have K = 1; softmax{K} ships
+    # K per-class (g, h) pairs.  Scales the grad broadcast (2K values/row),
+    # the histogram payloads (2K wire channels + the local count) and the
+    # Paillier ciphertext counts (2K ciphertexts per bin).  Must mirror
+    # ``objective.get_objective(cfg.loss).n_classes``.
+    n_channels: int = 1
 
     @property
     def ciphertext_bytes(self) -> int:
@@ -146,7 +153,9 @@ def tree_cost(spec: ProtocolSpec, rho_id: float, rho_feat: float) -> ProtocolCos
         for d_p in spec.party_dims[1:]:  # passive parties only send histograms
             d_eff = max(1, int(round(d_p * rho_feat)))
             if spec.aggregation == "histogram":
-                hist_bytes += nodes_sent * d_eff * spec.num_bins * 2 * ct
+                # 2K ciphertexts per bin: one (g, h) pair per channel.
+                hist_bytes += (nodes_sent * d_eff * spec.num_bins
+                               * 2 * spec.n_channels * ct)
             else:  # argmax: gain (f32) + feature (i32) + threshold (i32)
                 hist_bytes += nodes * 12
         notify_bytes += nodes * 12
@@ -168,10 +177,11 @@ def run_cost(spec: ProtocolSpec, cfg: FedGBFConfig) -> ProtocolCosts:
         rho_id = dynamic.rho_id_schedule(cfg, m)
         n_eff = int(round(spec.n_samples * rho_id))
         # one encrypted (g, h) broadcast per round, to each passive party,
-        # restricted to the union of sampled ids (bounded by n_eff * trees)
+        # restricted to the union of sampled ids (bounded by n_eff * trees);
+        # 2K ciphertexts per sampled row under a K-channel objective.
         grad += spec.passive_parties * min(
             spec.n_samples, n_eff * n_trees
-        ) * 2 * ct
+        ) * 2 * spec.n_channels * ct
         for _ in range(n_trees):
             c = tree_cost(spec, rho_id, cfg.rho_feat)
             hist += c.histograms
@@ -225,19 +235,22 @@ def wire_party_tree_cost(
     hist_subtraction: bool = False,
     max_active_nodes: int = 0,
     data_shards: int = 1,
+    n_channels: int = 1,
 ) -> dict:
     """Predicted actual bytes ONE party ships to build ONE tree, mirroring
     the shard_map implementation payload-for-payload (the quantity
     ``compress.probe_tree_cost`` measures from the traced program):
 
       histogram mode   per level: the full local float32 (g, h, count)
-                       histogram ``nodes * d_party * B * 3 * 4`` — or, when
-                       quantized, ``nodes * d_party * (B * 2 * bits/8 +
-                       2 * 4)`` (int payload for the g/h channels + one
-                       float32 scale per (node, feature, channel)) — plus
+                       histogram ``nodes * d_party * B * (2K+1) * 4`` — or,
+                       when quantized, ``nodes * d_party * (B * 2K * bits/8
+                       + 2K * 4)`` (int payload for the 2K g/h wire
+                       channels + one float32 scale per (node, feature,
+                       channel); the count channel stays local) — plus
                        the bool feature-mask slice (``d_party`` bytes; the
                        mask rides the wire, it does not shrink the
-                       histogram, unlike the Paillier model's ``rho_feat``);
+                       histogram, unlike the Paillier model's ``rho_feat``).
+                       K = ``n_channels`` is 1 for scalar objectives;
       argmax mode      per level: ``nodes * k * 12`` candidate bytes
                        (gain f32 + feature i32 + threshold i32), k = 1 raw
                        or ``transport.k`` for top-k;
@@ -262,7 +275,7 @@ def wire_party_tree_cost(
     phases = dict.fromkeys(WIRE_PHASES, 0)
     hist_levels = wire_hist_level_bytes(
         d_party, num_bins, max_depth, transport, hist_subtraction,
-        max_active_nodes,
+        max_active_nodes, n_channels,
     )
     n_shard = -(-n_samples // data_shards)  # rows pad to shard granularity
     id_bytes = data_shards * ((n_shard + 7) // 8)
@@ -286,16 +299,20 @@ def wire_hist_level_bytes(
     transport=None,
     hist_subtraction: bool = False,
     max_active_nodes: int = 0,
+    n_channels: int = 1,
 ) -> list:
     """Per-LEVEL histogram-phase bytes one party ships for one tree
     (histogram aggregation) — the level profile benchmarks record so the
     subtraction pipeline's shape (full root, half everywhere below) and the
     compaction cap (active width, not 2^level) are visible, not just the
-    per-tree total."""
+    per-tree total.  ``n_channels`` (K) widens the stats lanes only: raw
+    payloads carry 2K+1 float32 channels, quantized ones 2K int channels +
+    2K float32 scales (count stays local)."""
     kind = "raw" if transport is None else transport.kind
+    gh = 2 * n_channels
     per_node = (
-        num_bins * 2 * transport.bits // 8 + 2 * 4 if kind == "quantized"
-        else num_bins * 3 * 4
+        num_bins * gh * transport.bits // 8 + gh * 4 if kind == "quantized"
+        else num_bins * (gh + 1) * 4
     )
     return [
         _nodes_sent(level, hist_subtraction, max_active_nodes)
@@ -318,9 +335,9 @@ def wire_run_cost(spec: ProtocolSpec, cfg: FedGBFConfig, transport=None) -> dict
     per_tree = wire_party_tree_cost(
         spec.n_samples, d_party, spec.num_bins, spec.max_depth,
         spec.aggregation, transport, spec.hist_subtraction,
-        spec.max_active_nodes, spec.data_shards,
+        spec.max_active_nodes, spec.data_shards, spec.n_channels,
     )
-    grad_per_round = spec.n_samples * 2 * 4
+    grad_per_round = spec.n_samples * 2 * spec.n_channels * 4
     return _assemble_run_cost(per_tree, grad_per_round,
                               spec.passive_parties, cfg)
 

@@ -43,6 +43,14 @@ id_partition bitmap measures ``ceil(n/8)`` per level (>= 8x under the
 legacy encodings, ``check_id_partition_packing``) with the per-shard ceil
 arithmetic exact for any shard count.
 
+The objective layer (DESIGN.md §11) widens the whole lattice by a channel
+axis: K-channel objectives (softmax3, constant-hessian quantile) must keep
+fed-vs-central *bit-identical* through every backend combination, the
+widened 2K+1-stat histograms and (n, K) grad broadcast must reconcile
+exactly at any K, and the gradient-less party-local mode must ship ZERO
+histogram/gradient/routing bytes — its margin/rate inventory reconciled
+against ``gradientless.wire_cost`` (``check_gradientless``).
+
 Run in a subprocess with multiple CPU devices, e.g.:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -62,17 +70,22 @@ import numpy as np
 
 from repro.compat import use_mesh
 from repro.core import binning, boosting, forest, losses, metrics
+from repro.core import objective as objective_mod
 from repro.core.types import FedGBFConfig, TreeConfig
-from repro.federation import compress, protocol, vfl
+from repro.federation import compress, gradientless, protocol, vfl
 
 
 def check(num_parties: int, aggregation: str, shard_samples: bool,
           subtraction: bool = False, max_depth: int = 3,
           max_active_nodes: int = 0, data_shards: int = 0,
-          async_exchange: bool = False, n: int = 512) -> None:
+          async_exchange: bool = False, n: int = 512,
+          loss: str = "logistic") -> None:
     """Fed-vs-central bit-identity.  ``data_shards`` pins the mesh's data
     axis extent (0 = spread all remaining devices); an ``n`` not divisible
-    by the data extent exercises the backend's weight-0 row padding."""
+    by the data extent exercises the backend's weight-0 row padding.
+    ``loss`` selects the objective (DESIGN.md §11): a K-channel objective
+    widens g/h to (n, K) and the exchanged histograms to 2K+1 stats, and
+    the bit-identity contract must hold unchanged."""
     mesh_axes = ("data", "model")
     n_dev = len(jax.devices())
     data_dim = data_shards or n_dev // num_parties
@@ -80,15 +93,16 @@ def check(num_parties: int, aggregation: str, shard_samples: bool,
                          devices=jax.devices()[:data_dim * num_parties])
 
     rng = np.random.default_rng(0)
+    obj = objective_mod.get_objective(loss)
     d = num_parties * 3
     x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
-    y = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+    y = jnp.asarray(rng.integers(0, max(2, obj.n_classes), n), jnp.float32)
     cfg = TreeConfig(max_depth=max_depth, num_bins=16,
                      hist_subtraction=subtraction,
                      max_active_nodes=max_active_nodes)
 
     binned, _ = binning.fit_bin(x, cfg.num_bins)
-    g, h = losses.grad_hess("logistic", y, jnp.zeros(n))
+    g, h = obj.grad_hess(y, obj.init_raw(n))
     smask, fmask = forest.sample_masks(jax.random.PRNGKey(7), n, d, 4, 0.8, 1.0)
 
     trees_c, pred_c = forest.build_forest(binned, g, h, smask, fmask, cfg)
@@ -118,7 +132,7 @@ def check(num_parties: int, aggregation: str, shard_samples: bool,
         f"OK lossless: parties={num_parties} aggregation={aggregation} "
         f"shard_samples={shard_samples} subtraction={subtraction} "
         f"depth={max_depth} budget={max_active_nodes} "
-        f"data_shards={data_dim} async={async_exchange} n={n}"
+        f"data_shards={data_dim} async={async_exchange} n={n} loss={loss}"
     )
 
 
@@ -341,12 +355,15 @@ def check_reconciliation(num_parties: int, aggregation: str, transport,
                          max_depth: int = 3,
                          max_active_nodes: int = 0,
                          async_exchange: bool = False,
-                         n: int = 1536) -> None:
+                         n: int = 1536,
+                         n_channels: int = 1) -> None:
     """Measured collective payloads == predicted wire model, exactly —
     including the round engine's active-width model under compaction, the
     data-shard-aware bit-packed id_partition arithmetic (an ``n`` uneven
-    over the shards exercises the per-shard ceil), and the async exchange
-    (double-buffering must not change a byte)."""
+    over the shards exercises the per-shard ceil), the async exchange
+    (double-buffering must not change a byte), and any channel count
+    (``n_channels=K`` widens histograms to 2K stats + count and the grad
+    broadcast to 2K floats per row; DESIGN.md §11)."""
     data_dim = len(jax.devices()) // num_parties if shard_samples else 1
     mesh = jax.make_mesh((data_dim, num_parties), ("data", "model"))
     tree = TreeConfig(max_depth=max_depth, num_bins=32,
@@ -356,7 +373,7 @@ def check_reconciliation(num_parties: int, aggregation: str, transport,
     per_tree, grad = compress.probe_tree_cost(
         mesh, tree, aggregation=aggregation, transport=transport,
         n_samples=n, num_features=d, shard_samples=shard_samples,
-        async_exchange=async_exchange,
+        async_exchange=async_exchange, n_channels=n_channels,
     )
     cfg = FedGBFConfig(rounds=3, n_trees_max=4, n_trees_min=2,
                        rho_id_min=0.2, rho_id_max=0.5)
@@ -366,6 +383,7 @@ def check_reconciliation(num_parties: int, aggregation: str, transport,
         aggregation=aggregation, hist_subtraction=subtraction,
         max_active_nodes=max_active_nodes,
         data_shards=data_dim if shard_samples else 1,
+        n_channels=n_channels,
     )
     ledger = protocol.ProtocolLedger(spec=spec, cfg=cfg, transport=transport)
     ledger.record_run(per_tree, grad)
@@ -381,8 +399,68 @@ def check_reconciliation(num_parties: int, aggregation: str, transport,
         f"OK reconciliation: parties={num_parties} {aggregation}/{tag} "
         f"shard_samples={shard_samples} subtraction={subtraction} "
         f"depth={max_depth} budget={max_active_nodes} "
-        f"async={async_exchange} n={n} "
+        f"async={async_exchange} n={n} K={n_channels} "
         f"total={rec['total']['measured']} bytes (exact match)"
+    )
+
+
+def check_gradientless(num_parties: int, loss: str = "logistic",
+                       n: int = 600) -> None:
+    """Gradient-less party-local mode (DESIGN.md §11): no gradient or
+    histogram message exists; the wire inventory is passive-party margin
+    blocks in + the learned rate vector out, and the measured payloads
+    must equal ``gradientless.wire_cost`` exactly (with every protocol
+    phase of the gradient-sharing mode identically zero).  The rate fit
+    must improve on the plain concatenation of the local models, and every
+    tree must reference only its owning party's global column range."""
+    obj = objective_mod.get_objective(loss)
+    rng = np.random.default_rng(23)
+    d = num_parties * 3
+    x_np = rng.normal(size=(n, d)).astype(np.float32)
+    logit = x_np[:, 0] - 0.8 * x_np[:, 1] + 0.5 * x_np[:, 2] * x_np[:, 3]
+    if obj.n_classes > 1:
+        cuts = np.quantile(logit, np.linspace(0, 1, obj.n_classes + 1)[1:-1])
+        y_np = np.searchsorted(cuts, logit).astype(np.float32)
+    else:
+        y_np = (logit + rng.normal(0, 0.7, n) > 0).astype(np.float32)
+    x, y = jnp.asarray(x_np), jnp.asarray(y_np)
+    cfg = FedGBFConfig(
+        rounds=3, n_trees_max=3, n_trees_min=2, rho_id_min=0.5,
+        rho_id_max=0.8, loss=loss,
+        tree=TreeConfig(max_depth=3, num_bins=16),
+    )
+    meter = compress.MessageMeter()
+    packed, info = gradientless.train_gradientless(
+        x, y, cfg, jax.random.PRNGKey(0), num_parties, meter=meter,
+    )
+    assert info["loss_after"] <= info["loss_before"] + 1e-6, info
+    # party-locality: party p's trees may only touch columns [p*dp, (p+1)*dp)
+    d_party = d // num_parties
+    offset = 0
+    for p, t_p in enumerate(info["tree_counts"]):
+        feats = np.asarray(packed.feature[offset:offset + t_p])
+        real = feats[feats >= 0]
+        assert ((real >= p * d_party) & (real < (p + 1) * d_party)).all(), (
+            f"party {p} tree references foreign columns"
+        )
+        offset += t_p
+    predicted = gradientless.wire_cost(n, info["tree_counts"],
+                                       n_channels=obj.n_classes)
+    measured = meter.phase_totals()
+    for phase in ("histograms", "grad_broadcast", "id_partition"):
+        assert measured.get(phase, 0) == 0 == predicted[phase], (
+            f"gradient-less mode must ship zero {phase} bytes"
+        )
+    for phase in ("tree_margins", "tree_scales"):
+        assert measured[phase] == predicted[phase], (
+            f"{phase}: measured {measured[phase]} != "
+            f"predicted {predicted[phase]}"
+        )
+    print(
+        f"OK gradientless: parties={num_parties} loss={loss} "
+        f"loss {info['loss_before']:.3f} -> {info['loss_after']:.3f}, "
+        f"wire={sum(measured.values())} bytes "
+        f"(margins+rates only, exact match)"
     )
 
 
@@ -520,6 +598,27 @@ def main() -> int:
     check(num_parties=4, aggregation="histogram", shard_samples=False,
           async_exchange=True, subtraction=True, max_depth=4,
           max_active_nodes=4)
+    # K-channel objectives (DESIGN.md §11): softmax3 widens g/h to (n, 3)
+    # and the exchanged histograms to 7 stats — bit-identity must survive
+    # every backend axis it composes with (sharding, subtraction, async,
+    # compaction), and quantile exercises the constant-hessian path.
+    for aggregation in ("histogram", "argmax"):
+        check(num_parties=4, aggregation=aggregation, shard_samples=False,
+              loss="softmax3")
+    check(num_parties=4, aggregation="histogram", shard_samples=True,
+          subtraction=True, loss="softmax3")
+    check(num_parties=4, aggregation="histogram", shard_samples=False,
+          async_exchange=True, subtraction=True, loss="softmax3")
+    check(num_parties=2, aggregation="histogram", shard_samples=True,
+          data_shards=2, loss="softmax3", n=509)
+    check(num_parties=4, aggregation="histogram", shard_samples=False,
+          subtraction=True, max_depth=4, max_active_nodes=4, loss="softmax3")
+    check(num_parties=4, aggregation="histogram", shard_samples=False,
+          loss="quantile@0.9")
+    # Gradient-less party-local mode (DESIGN.md §11): zero-histogram wire
+    # inventory, exact margin/rate byte accounting, party-local trees.
+    check_gradientless(num_parties=4, loss="logistic")
+    check_gradientless(num_parties=2, loss="softmax3")
     # Sibling subtraction (DESIGN.md §6): federated-vs-centralized stays
     # bit-identical with the pipeline enabled on BOTH sides; the
     # subtraction-vs-direct relation is a separate tolerance contract.
@@ -598,6 +697,15 @@ def main() -> int:
     check_reconciliation(4, "histogram", compress.Q16, async_exchange=True)
     check_reconciliation(4, "histogram", compress.Q8, shard_samples=True,
                          subtraction=True, async_exchange=True, n=1531)
+    # K channels: the widened stats axis (2K floats per bin + per-channel
+    # q8/q16 scales) and the (n, K) grad broadcast reconcile exactly at
+    # K=3, raw and quantized, composing with subtraction + sharding + async
+    check_reconciliation(4, "histogram", None, n_channels=3)
+    check_reconciliation(4, "histogram", compress.Q8, subtraction=True,
+                         n_channels=3)
+    check_reconciliation(4, "histogram", compress.Q8, shard_samples=True,
+                         subtraction=True, async_exchange=True, n=1531,
+                         n_channels=3)
     print("ALL FEDERATION SELF-TESTS PASSED")
     return 0
 

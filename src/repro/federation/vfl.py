@@ -226,10 +226,13 @@ def make_vfl_backend(
         if n_pad == n:
             return binned, g, h, sample_mask, n
         pad = n_pad - n
+        # g/h are (n,) for scalar objectives, (n, K) for K-channel ones —
+        # either way only the sample axis pads.
+        row_pad = lambda v: jnp.pad(v, ((0, pad),) + ((0, 0),) * (v.ndim - 1))
         return (
             jnp.pad(binned, ((0, pad), (0, 0))),
-            jnp.pad(g, (0, pad)),
-            jnp.pad(h, (0, pad)),
+            row_pad(g),
+            row_pad(h),
             jnp.pad(sample_mask, ((0, 0), (0, pad))),
             n,
         )

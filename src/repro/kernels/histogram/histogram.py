@@ -84,11 +84,15 @@ def histogram_pallas_call(
 
     ids  (n_pad, d_pad) int32, n_pad % tile_n == 0, d_pad % feat_block == 0,
          values in [0, nb); padded rows may hold any id because their data is 0.
-    data (n_pad, STATS_PAD) float32, zero rows where padded/masked.
+    data (n_pad, stats_pad) float32, zero rows where padded/masked.  The
+         stats width is read off the operand — ``STATS_PAD`` (= 8) for K = 1
+         objectives, ``round_up(2K+1, 8)`` sublanes for K-channel ones
+         (DESIGN.md §11: channels fold into the stats axis, grid unchanged).
 
-    Returns (d_pad, nb, STATS_PAD) float32.
+    Returns (d_pad, nb, stats_pad) float32.
     """
     n_pad, d_pad = ids.shape
+    stats_pad = data.shape[1]
     grid = (n_pad // tile_n, d_pad // feat_block)
 
     return pl.pallas_call(
@@ -96,9 +100,9 @@ def histogram_pallas_call(
         grid=grid,
         in_specs=[
             pl.BlockSpec((tile_n, feat_block), lambda i, j: (i, j)),
-            pl.BlockSpec((tile_n, STATS_PAD), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_n, stats_pad), lambda i, j: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((feat_block, nb, STATS_PAD), lambda i, j: (j, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((d_pad, nb, STATS_PAD), jnp.float32),
+        out_specs=pl.BlockSpec((feat_block, nb, stats_pad), lambda i, j: (j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d_pad, nb, stats_pad), jnp.float32),
         interpret=interpret,
     )(ids, data)

@@ -34,11 +34,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.histogram.histogram import (
-    STATS,
-    STATS_PAD,
-    histogram_pallas_call,
-)
+from repro.kernels.histogram.histogram import histogram_pallas_call
 from repro.kernels.histogram.train_histogram import (
     fused_histogram_pallas_call,
     fused_round_histogram_pallas_call,
@@ -51,6 +47,21 @@ def _on_tpu() -> bool:
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+def _num_stats(g: jnp.ndarray) -> int:
+    """Stats-lane count for the derivative layout: 3 for scalar (n,) g/h,
+    2K+1 for K-channel (n, K) objectives (count stays the last lane)."""
+    return 3 if g.ndim == 1 else 2 * g.shape[-1] + 1
+
+
+def _chan_pad(v: jnp.ndarray, pad_n: int) -> jnp.ndarray:
+    """Tile-pad a per-sample vector and give it an explicit channel axis:
+    (n,) -> (n_pad, 1); (n, K) -> (n_pad, K)."""
+    v = v.astype(jnp.float32)
+    if v.ndim == 1:
+        v = v[:, None]
+    return jnp.pad(v, ((0, pad_n), (0, 0)))
 
 
 @partial(
@@ -72,7 +83,7 @@ def compute_histogram_pallas(
 ) -> jnp.ndarray:
     """Same contract as ``core.histogram.compute_histogram``.
 
-    Returns (num_nodes, d, num_bins, 3) float32.
+    Returns (num_nodes, d, num_bins, 2K+1) float32 (3 for scalar g/h).
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -82,22 +93,30 @@ def compute_histogram_pallas(
     nb_pad = _round_up(nb, 128)
 
     ids = assign[:, None] * num_bins + binned  # (n, d)
-    data = jnp.stack(
-        [g * weight, h * weight, weight], axis=-1
-    ).astype(jnp.float32)  # (n, 3)
+    if g.ndim == 1:
+        data = jnp.stack(
+            [g * weight, h * weight, weight], axis=-1
+        ).astype(jnp.float32)  # (n, 3)
+    else:
+        w = weight[:, None]
+        data = jnp.concatenate(
+            [g * w, h * w, w], axis=-1
+        ).astype(jnp.float32)  # (n, 2K+1)
+    stats = data.shape[-1]
+    stats_pad = _round_up(stats, 8)
 
     n_pad = _round_up(n, tile_n)
     d_pad = _round_up(d, feat_block)
     ids = jnp.pad(ids, ((0, n_pad - n), (0, d_pad - d)))
-    data = jnp.pad(data, ((0, n_pad - n), (0, STATS_PAD - STATS)))
+    data = jnp.pad(data, ((0, n_pad - n), (0, stats_pad - stats)))
 
     hist = histogram_pallas_call(
         ids, data, nb_pad,
         tile_n=tile_n, feat_block=feat_block, interpret=interpret,
-    )  # (d_pad, nb_pad, STATS_PAD)
+    )  # (d_pad, nb_pad, stats_pad)
 
-    hist = hist[:d, :nb, :STATS]
-    return hist.reshape(d, num_nodes, num_bins, STATS).transpose(1, 0, 2, 3)
+    hist = hist[:d, :nb, :stats]
+    return hist.reshape(d, num_nodes, num_bins, stats).transpose(1, 0, 2, 3)
 
 
 @partial(
@@ -131,29 +150,30 @@ def compute_histogram_pallas_fused(
     parent-id staging happens in-kernel — the one-hot width (and therefore
     the MXU contraction) shrinks to the half frontier.
 
-    Returns (num_nodes, d, num_bins, 3) float32.
+    Returns (num_nodes, d, num_bins, 2K+1) float32 (3 for scalar g/h).
     """
     if interpret is None:
         interpret = not _on_tpu()
     n, d = binned.shape
     nb = num_nodes * num_bins
     nb_pad = _round_up(nb, 128)  # MXU lane alignment (see kernel docstring)
+    stats = _num_stats(g)
 
     n_pad = _round_up(n, tile_n)
     d_pad = _round_up(d, feat_block)
     pad_n = n_pad - n
     binned_p = jnp.pad(binned, ((0, pad_n), (0, d_pad - d)))
-    col = lambda v: jnp.pad(v.astype(jnp.float32), (0, pad_n))[:, None]
     assign_p = jnp.pad(assign, (0, pad_n))[:, None]
 
     hist = fused_histogram_pallas_call(
-        binned_p, assign_p, col(g), col(h), col(weight), nb_pad, num_bins,
+        binned_p, assign_p, _chan_pad(g, pad_n), _chan_pad(h, pad_n),
+        _chan_pad(weight, pad_n), nb_pad, num_bins,
         tile_n=tile_n, feat_block=feat_block, interpret=interpret,
         child_mode=child,
-    )  # (d_pad, nb_pad, STATS_PAD)
+    )  # (d_pad, nb_pad, stats_pad)
 
-    hist = hist[:d, :nb, :STATS]
-    return hist.reshape(d, num_nodes, num_bins, STATS).transpose(1, 0, 2, 3)
+    hist = hist[:d, :nb, :stats]
+    return hist.reshape(d, num_nodes, num_bins, stats).transpose(1, 0, 2, 3)
 
 
 def compute_histogram_pallas_fused_child(
@@ -210,7 +230,7 @@ def compute_round_histogram_pallas_fused(
     Args:
       weight / assign: (T, n).
     Returns:
-      (T, num_nodes, d, num_bins, 3) float32.
+      (T, num_nodes, d, num_bins, 2K+1) float32 (3 for scalar g/h).
     """
     if root_delta_rows:
         from repro.core.histogram import root_histogram_via_delta
@@ -225,24 +245,25 @@ def compute_round_histogram_pallas_fused(
     t = weight.shape[0]
     nb = num_nodes * num_bins
     nb_pad = _round_up(nb, 128)  # MXU lane alignment (see kernel docstring)
+    stats = _num_stats(g)
 
     n_pad = _round_up(n, tile_n)
     d_pad = _round_up(d, feat_block)
     pad_n = n_pad - n
     binned_p = jnp.pad(binned, ((0, pad_n), (0, d_pad - d)))
-    col = lambda v: jnp.pad(v.astype(jnp.float32), (0, pad_n))[:, None]
     tree_col = lambda v: jnp.pad(v, ((0, 0), (0, pad_n)))[:, :, None]
     assign_p = tree_col(assign)
     w_p = tree_col(weight.astype(jnp.float32))
 
     hist = fused_round_histogram_pallas_call(
-        binned_p, assign_p, col(g), col(h), w_p, nb_pad, num_bins,
+        binned_p, assign_p, _chan_pad(g, pad_n), _chan_pad(h, pad_n), w_p,
+        nb_pad, num_bins,
         tile_n=tile_n, feat_block=feat_block, interpret=interpret,
         child_mode=child,
-    )  # (T, d_pad, nb_pad, STATS_PAD)
+    )  # (T, d_pad, nb_pad, stats_pad)
 
-    hist = hist[:, :d, :nb, :STATS]
-    return hist.reshape(t, d, num_nodes, num_bins, STATS).transpose(
+    hist = hist[:, :d, :nb, :stats]
+    return hist.reshape(t, d, num_nodes, num_bins, stats).transpose(
         0, 2, 1, 3, 4
     )
 

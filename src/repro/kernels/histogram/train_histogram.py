@@ -30,7 +30,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.histogram.histogram import STATS_PAD
+
+def _stats_pad(k: int) -> int:
+    """Sublane-aligned stats width for K gradient channels: round_up(2K+1, 8)
+    (== STATS_PAD at K = 1, so the binary kernel is byte-identical)."""
+    return ((2 * k + 1 + 7) // 8) * 8
 
 
 def _fused_histogram_kernel(
@@ -41,9 +45,13 @@ def _fused_histogram_kernel(
 
     binned_ref: (tile_n, feat_block) int32 raw bin ids (NOT pre-fused);
     assign_ref: (tile_n, 1) int32 node assignment at the current level;
-    g_ref/h_ref/w_ref: (tile_n, 1) float32 raw derivatives / sample mask —
-        padded rows carry w == 0 so they contribute nothing;
-    out_ref: (feat_block, nb, STATS_PAD) float32 accumulated histogram.
+    g_ref/h_ref: (tile_n, K) float32 raw derivatives (K = 1 for scalar
+        objectives; K-channel objectives fold their channels into the
+        stats axis — the grid is unchanged, DESIGN.md §11);
+    w_ref: (tile_n, 1) float32 sample mask — padded rows carry w == 0 so
+        they contribute nothing;
+    out_ref: (feat_block, nb, stats_pad) float32 accumulated histogram,
+        stats_pad = round_up(2K+1, 8) (STATS_PAD = 8 at K = 1).
 
     ``child_mode`` is the subtraction pipeline's left-child-only variant
     (DESIGN.md §6): samples routed right (odd ``assign``) are weight-masked
@@ -57,19 +65,20 @@ def _fused_histogram_kernel(
         out_ref[...] = jnp.zeros_like(out_ref)
 
     tile_n = binned_ref.shape[0]
-    gv = g_ref[...]  # (T, 1)
+    gv = g_ref[...]  # (T, K) — K = 1 for scalar-channel objectives
     hv = h_ref[...]
-    wv = w_ref[...]
+    wv = w_ref[...]  # (T, 1)
     assign = assign_ref[...]  # (T, 1)
     if child_mode:
         wv = wv * (assign % 2 == 0).astype(jnp.float32)
         assign = assign // 2
-    # Fused stats staging: [g*w, h*w, w, 0...] built in registers, never HBM.
+    # Fused stats staging: [g*w, h*w, w, 0...] built in registers, never HBM
+    # ((T, K) * (T, 1) broadcasts per channel; count stays the LAST live lane).
+    pad = out_ref.shape[-1] - (2 * gv.shape[1] + 1)
     data = jnp.concatenate(
-        [gv * wv, hv * wv, wv,
-         jnp.zeros((tile_n, STATS_PAD - 3), jnp.float32)],
+        [gv * wv, hv * wv, wv, jnp.zeros((tile_n, pad), jnp.float32)],
         axis=1,
-    )  # (T, STATS_PAD)
+    )  # (T, stats_pad)
     node = assign[:, 0]  # (T,)
     iota = jax.lax.broadcasted_iota(jnp.int32, (tile_n, nb), 1)
 
@@ -110,13 +119,19 @@ def fused_histogram_pallas_call(
     assign (n_pad, 1) int32 in [0, nb // num_bins) — or, when ``child_mode``,
            the current-level assignment in [0, 2 * nb // num_bins) (the
            kernel halves it to parent ids and masks right-routed samples);
-           g/h/w (n_pad, 1) float32 with zero rows where padded/masked.
+           g/h (n_pad, K) float32 (K = 1 scalar objectives) and w (n_pad, 1)
+           float32 with zero rows where padded/masked.
 
-    Returns (d_pad, nb, STATS_PAD) float32.
+    Returns (d_pad, nb, round_up(2K+1, 8)) float32 (STATS_PAD at K = 1) —
+    K-channel objectives widen the stats (lane) axis only; the grid and
+    block structure are unchanged.
     """
     n_pad, d_pad = binned.shape
+    k = g.shape[1]
+    stats_pad = _stats_pad(k)
     grid = (n_pad // tile_n, d_pad // feat_block)
     vec_spec = pl.BlockSpec((tile_n, 1), lambda i, j: (i, 0))
+    chan_spec = pl.BlockSpec((tile_n, k), lambda i, j: (i, 0))
 
     return pl.pallas_call(
         functools.partial(
@@ -127,13 +142,13 @@ def fused_histogram_pallas_call(
         grid=grid,
         in_specs=[
             pl.BlockSpec((tile_n, feat_block), lambda i, j: (i, j)),
-            vec_spec,  # assign
-            vec_spec,  # g
-            vec_spec,  # h
-            vec_spec,  # w
+            vec_spec,   # assign
+            chan_spec,  # g
+            chan_spec,  # h
+            vec_spec,   # w
         ],
-        out_specs=pl.BlockSpec((feat_block, nb, STATS_PAD), lambda i, j: (j, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((d_pad, nb, STATS_PAD), jnp.float32),
+        out_specs=pl.BlockSpec((feat_block, nb, stats_pad), lambda i, j: (j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d_pad, nb, stats_pad), jnp.float32),
         interpret=interpret,
     )(binned, assign, g, h, w)
 
@@ -154,8 +169,9 @@ def _fused_round_histogram_kernel(
 
     binned_ref: (tile_n, feat_block) int32 (tree-invariant block);
     assign_ref / w_ref: (1, tile_n, 1) — this tree's slice;
-    g_ref / h_ref: (tile_n, 1) float32 shared derivatives;
-    out_ref: (1, feat_block, nb, STATS_PAD) — this tree's histogram block.
+    g_ref / h_ref: (tile_n, K) float32 shared derivatives (K = 1 scalar);
+    out_ref: (1, feat_block, nb, stats_pad) — this tree's histogram block,
+        stats_pad = round_up(2K+1, 8) (STATS_PAD at K = 1).
     """
 
     @pl.when(pl.program_id(1) == 0)
@@ -163,18 +179,18 @@ def _fused_round_histogram_kernel(
         out_ref[...] = jnp.zeros_like(out_ref)
 
     tile_n = binned_ref.shape[0]
-    gv = g_ref[...]          # (T, 1)
+    gv = g_ref[...]          # (T, K)
     hv = h_ref[...]
     wv = w_ref[0]            # strip the tree block dim -> (T, 1)
     assign = assign_ref[0]
     if child_mode:
         wv = wv * (assign % 2 == 0).astype(jnp.float32)
         assign = assign // 2
+    pad = out_ref.shape[-1] - (2 * gv.shape[1] + 1)
     data = jnp.concatenate(
-        [gv * wv, hv * wv, wv,
-         jnp.zeros((tile_n, STATS_PAD - 3), jnp.float32)],
+        [gv * wv, hv * wv, wv, jnp.zeros((tile_n, pad), jnp.float32)],
         axis=1,
-    )  # (T, STATS_PAD)
+    )  # (T, stats_pad)
     node = assign[:, 0]
     iota = jax.lax.broadcasted_iota(jnp.int32, (tile_n, nb), 1)
 
@@ -210,18 +226,22 @@ def fused_round_histogram_pallas_call(
     (see ops.py):
 
     binned (n_pad, d_pad) int32 shared by all trees; assign / w
-    (n_trees, n_pad, 1) per-tree; g / h (n_pad, 1) float32 shared.  Grid is
-    (n_trees, sample tiles, feature blocks) — for a fixed (tree, feature
-    block) the sample-tile dimension revisits the output block with the
-    standard sequential-grid accumulator pattern (init at tile 0).
+    (n_trees, n_pad, 1) per-tree; g / h (n_pad, K) float32 shared (K = 1
+    scalar objectives).  Grid is (n_trees, sample tiles, feature blocks) —
+    for a fixed (tree, feature block) the sample-tile dimension revisits the
+    output block with the standard sequential-grid accumulator pattern
+    (init at tile 0).  K-channel objectives widen only the stats lanes; the
+    grid is unchanged.
 
-    Returns (n_trees, d_pad, nb, STATS_PAD) float32.
+    Returns (n_trees, d_pad, nb, round_up(2K+1, 8)) float32.
     """
     n_trees = assign.shape[0]
     n_pad, d_pad = binned.shape
+    k = g.shape[1]
+    stats_pad = _stats_pad(k)
     grid = (n_trees, n_pad // tile_n, d_pad // feat_block)
     tree_vec_spec = pl.BlockSpec((1, tile_n, 1), lambda t, i, j: (t, i, 0))
-    shared_vec_spec = pl.BlockSpec((tile_n, 1), lambda t, i, j: (i, 0))
+    shared_chan_spec = pl.BlockSpec((tile_n, k), lambda t, i, j: (i, 0))
 
     return pl.pallas_call(
         functools.partial(
@@ -232,16 +252,16 @@ def fused_round_histogram_pallas_call(
         grid=grid,
         in_specs=[
             pl.BlockSpec((tile_n, feat_block), lambda t, i, j: (i, j)),
-            tree_vec_spec,   # assign
-            shared_vec_spec,  # g
-            shared_vec_spec,  # h
-            tree_vec_spec,   # w
+            tree_vec_spec,     # assign
+            shared_chan_spec,  # g
+            shared_chan_spec,  # h
+            tree_vec_spec,     # w
         ],
         out_specs=pl.BlockSpec(
-            (1, feat_block, nb, STATS_PAD), lambda t, i, j: (t, j, 0, 0)
+            (1, feat_block, nb, stats_pad), lambda t, i, j: (t, j, 0, 0)
         ),
         out_shape=jax.ShapeDtypeStruct(
-            (n_trees, d_pad, nb, STATS_PAD), jnp.float32
+            (n_trees, d_pad, nb, stats_pad), jnp.float32
         ),
         interpret=interpret,
     )(binned, assign, g, h, w)

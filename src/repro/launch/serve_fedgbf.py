@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.checkpoint import io as ckpt_io
 from repro.core import boosting
+from repro.core import objective as objective_mod
 from repro.core.types import PackedEnsemble
 from repro.data import synthetic
 
@@ -34,11 +35,16 @@ from repro.data import synthetic
 @partial(jax.jit, static_argnames=("impl",))
 def _score_batch(packed: PackedEnsemble, x: jnp.ndarray, impl: str) -> jnp.ndarray:
     """One compiled program per (microbatch shape, impl): bin + traverse,
-    via the same dispatch boosting.predict exposes."""
+    via the same dispatch boosting.predict exposes.
+
+    The activation comes from the objective registry keyed by the
+    checkpoint's stored loss name (DESIGN.md §11) — sigmoid for logistic,
+    softmax rows for softmax{K}, identity for the regression objectives —
+    instead of a hard-coded sigmoid, so a squared- or quantile-loss
+    checkpoint serves raw margins and a multiclass one serves (n, K)
+    probability rows."""
     margin = boosting.predict(packed, x, impl=impl)
-    if packed.loss == "logistic":
-        return jax.nn.sigmoid(margin)
-    return margin
+    return objective_mod.get_objective(packed.loss).activation(margin)
 
 
 def score_stream(
@@ -53,7 +59,7 @@ def score_stream(
     padding are dropped) so every step hits the same compiled program.
     """
     n = x.shape[0]
-    out = np.empty((n,), np.float32)
+    out = None  # allocated after the first batch: (n,) or (n, K) scores
     lat = []
     for start in range(0, n, batch_size):
         chunk = x[start:start + batch_size]
@@ -66,6 +72,8 @@ def score_stream(
             _score_batch(packed, jnp.asarray(chunk), impl)
         )
         lat.append(time.perf_counter() - t0)
+        if out is None:
+            out = np.empty((n,) + scores.shape[1:], np.float32)
         out[start:start + batch_size - pad] = np.asarray(
             scores[:batch_size - pad]
         )

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core import backend as backend_mod
 from repro.core import boosting, metrics
+from repro.core import objective as objective_mod
 from repro.core.types import TreeConfig
 from repro.data import synthetic, tabular
 from repro.federation import vfl  # noqa: F401  (registers vfl-* backends)
@@ -43,6 +44,12 @@ def main() -> None:
                                         "secureboost", "federated_forest"],
                     default="dynamic_fedgbf")
     ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--loss", default="logistic",
+                    help="objective registry name (DESIGN.md §11): logistic, "
+                         "squared, softmax<K> (e.g. softmax3 for "
+                         "--dataset credit_risk_tiers), quantile[@alpha]. "
+                         "K-channel objectives widen the histogram stats "
+                         "axis to 2K+1 through every backend.")
     ap.add_argument("--n", type=int, default=0, help="subsample dataset")
     ap.add_argument("--max-depth", type=int, default=3)
     ap.add_argument("--backend", default="local",
@@ -108,6 +115,9 @@ def main() -> None:
     }[args.model]()
     if args.sampling != "uniform":
         cfg = dataclasses.replace(cfg, sampling=args.sampling)
+    if args.loss != cfg.loss:
+        cfg = dataclasses.replace(cfg, loss=args.loss)
+    obj = objective_mod.get_objective(cfg.loss)
 
     x_train, y_train = ds.x_train, ds.y_train
     federated = args.backend in VFL_BACKENDS
@@ -146,6 +156,7 @@ def main() -> None:
             n_samples=x_train.shape[0], num_features=d_pad,
             shard_samples=args.backend.endswith("-sharded"),
             async_exchange=backend.descriptor.async_exchange,
+            n_channels=obj.n_classes,
         )
         cost = ledger.predicted_paillier()
         print(f"paillier-model bytes (ledger): {cost.total/1e6:.1f} MB "
@@ -168,9 +179,14 @@ def main() -> None:
     if federated:
         x_test, _ = tabular.pad_features(x_test, args.parties)
     margin = boosting.predict(model, jnp.asarray(x_test))
-    rep = metrics.classification_report(jnp.asarray(ds.y_test), margin)
-    print(f"TEST: auc={rep['auc']:.4f} acc={rep['acc']:.4f} f1={rep['f1']:.4f} "
-          f"(total trees: {model.total_trees})")
+    if obj.n_classes > 1:
+        rep = metrics.multiclass_report(jnp.asarray(ds.y_test), margin)
+        print(f"TEST: acc={rep['acc']:.4f} macro_f1={rep['macro_f1']:.4f} "
+              f"(total trees: {model.total_trees}, K={obj.n_classes})")
+    else:
+        rep = metrics.classification_report(jnp.asarray(ds.y_test), margin)
+        print(f"TEST: auc={rep['auc']:.4f} acc={rep['acc']:.4f} "
+              f"f1={rep['f1']:.4f} (total trees: {model.total_trees})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,284 @@
+"""Objective registry parity suite (DESIGN.md §11).
+
+Single-device contracts of the K-channel objective layer: the registry
+itself, the K=1 softmax == logistic reduction, per-objective training
+parity across the local backends and engines, the squared-checkpoint
+serving regression, the losses.py deprecation shims, and the gradient-less
+party-local mode (which needs no device mesh — its whole point is that
+nothing crosses a party boundary).  The federated axes (vfl-histogram,
+q8, async, sharded × softmax3/quantile) run in the multi-device selftest
+subprocess (tests/test_federation.py -> repro.federation.selftest).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import boosting, losses
+from repro.core import objective as objective_mod
+from repro.core.types import FedGBFConfig, TreeConfig
+
+OBJECTIVES = ["logistic", "squared", "softmax3", "quantile", "quantile@0.9"]
+
+
+def _labels(obj, rng, n):
+    k = obj.n_classes
+    if k > 1:
+        return jnp.asarray(rng.integers(0, k, n), jnp.float32)
+    if obj.name.startswith("quantile") or obj.name == "squared":
+        return jnp.asarray(rng.normal(size=n), jnp.float32)
+    return jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def toy():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(400, 6)).astype(np.float32)
+    return jnp.asarray(x), rng
+
+
+# ---------------------------------------------------------------- registry
+
+
+def test_registry_shapes_and_stats():
+    n = 32
+    for name in OBJECTIVES:
+        obj = objective_mod.get_objective(name)
+        y = jnp.zeros(n)
+        g, h = obj.grad_hess(y, obj.init_raw(n))
+        expect = (n,) if obj.n_classes == 1 else (n, obj.n_classes)
+        assert g.shape == expect and h.shape == expect, name
+        assert objective_mod.num_stats(obj.n_classes) == 2 * obj.n_classes + 1
+        assert jnp.isfinite(obj.loss_value(y, obj.init_raw(n)))
+
+
+def test_get_objective_is_cached_singleton():
+    assert objective_mod.get_objective("softmax3") is (
+        objective_mod.get_objective("softmax3")
+    )
+    with pytest.raises(ValueError, match="unknown objective"):
+        objective_mod.get_objective("not-an-objective")
+
+
+def test_softmax_hessian_nonnegative_property():
+    """p(1-p) per class: every per-class hessian entry must be >= 0 for any
+    margin — the split-gain denominator and leaf weights rely on it."""
+    rng = np.random.default_rng(11)
+    obj = objective_mod.get_objective("softmax4")
+    y = jnp.asarray(rng.integers(0, 4, 256), jnp.float32)
+    margin = jnp.asarray(rng.normal(scale=4.0, size=(256, 4)), jnp.float32)
+    _, h = obj.grad_hess(y, margin)
+    assert (h >= 0).all()
+    # rows of the activation are probability vectors
+    p = obj.activation(margin)
+    np.testing.assert_allclose(np.asarray(p.sum(-1)), 1.0, atol=1e-5)
+
+
+def test_quantile_constant_hessian_and_pinball():
+    obj = objective_mod.get_objective("quantile@0.9")
+    y = jnp.asarray([1.0, -2.0, 0.5])
+    pred = jnp.asarray([0.0, 0.0, 1.0])
+    g, h = obj.grad_hess(y, pred)
+    # gradient of pinball: -(alpha) under, (1-alpha) over
+    np.testing.assert_allclose(np.asarray(g), [-0.9, 0.1, 0.1], atol=1e-6)
+    assert (h == h[0]).all() and h[0] > 0
+    # pinball loss value: mean(alpha*max(r,0) + (1-alpha)*max(-r,0))
+    r = np.asarray(y - pred)
+    want = np.mean(np.where(r > 0, 0.9 * r, -0.1 * r))
+    np.testing.assert_allclose(float(obj.loss_value(y, pred)), want, atol=1e-6)
+
+
+def test_softmax1_is_logistic_bit_exact():
+    """K=1 softmax aliases the logistic formulas so the K-channel machinery
+    has an exact scalar reduction."""
+    rng = np.random.default_rng(5)
+    y = jnp.asarray(rng.integers(0, 2, 200), jnp.float32)
+    margin = jnp.asarray(rng.normal(size=200), jnp.float32)
+    s1 = objective_mod.get_objective("softmax1")
+    lg = objective_mod.get_objective("logistic")
+    gs, hs = s1.grad_hess(y, margin)
+    gl, hl = lg.grad_hess(y, margin)
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(gl))
+    np.testing.assert_array_equal(np.asarray(hs), np.asarray(hl))
+    assert float(s1.loss_value(y, margin)) == float(lg.loss_value(y, margin))
+
+
+# ------------------------------------------------------- deprecation shims
+
+
+def test_losses_shims_delegate_to_registry():
+    rng = np.random.default_rng(7)
+    y = jnp.asarray(rng.integers(0, 2, 100), jnp.float32)
+    margin = jnp.asarray(rng.normal(size=100), jnp.float32)
+    for name in ("logistic", "squared"):
+        obj = objective_mod.get_objective(name)
+        g_s, h_s = losses.grad_hess(name, y, margin)
+        g_o, h_o = obj.grad_hess(y, margin)
+        np.testing.assert_array_equal(np.asarray(g_s), np.asarray(g_o))
+        np.testing.assert_array_equal(np.asarray(h_s), np.asarray(h_o))
+        assert float(losses.loss_value(name, y, margin)) == float(
+            obj.loss_value(y, margin)
+        )
+
+
+# ------------------------------------------------------------ training parity
+
+
+@pytest.mark.parametrize("name", OBJECTIVES)
+def test_train_scan_equals_loop(toy, name):
+    x, rng = toy
+    obj = objective_mod.get_objective(name)
+    y = _labels(obj, rng, x.shape[0])
+    cfg = FedGBFConfig(
+        rounds=3, n_trees_max=2, n_trees_min=2, rho_id_min=0.5,
+        rho_id_max=0.8, loss=name, tree=TreeConfig(max_depth=3, num_bins=16),
+    )
+    from repro.core.types import pack_ensemble
+
+    m_scan, h_scan = boosting.train_fedgbf(
+        x, y, cfg, jax.random.PRNGKey(0), engine="scan"
+    )
+    m_loop, h_loop = boosting.train_fedgbf(
+        x, y, cfg, jax.random.PRNGKey(0), engine="loop"
+    )
+    p_scan, p_loop = pack_ensemble(m_scan), pack_ensemble(m_loop)
+    np.testing.assert_array_equal(
+        np.asarray(p_scan.feature), np.asarray(p_loop.feature)
+    )
+    np.testing.assert_allclose(
+        np.asarray(p_scan.leaf_weight), np.asarray(p_loop.leaf_weight),
+        rtol=1e-5, atol=1e-6,
+    )
+    assert h_scan.train[-1].keys() == h_loop.train[-1].keys()
+
+
+@pytest.mark.parametrize("name", ["logistic", "softmax3", "quantile@0.9"])
+def test_train_pallas_matches_local(toy, name):
+    """The channel-folded fused kernel must train the same model as the XLA
+    segment path for scalar AND K-channel objectives."""
+    from repro.core import backend as backend_mod
+
+    x, rng = toy
+    obj = objective_mod.get_objective(name)
+    y = _labels(obj, rng, x.shape[0])
+    cfg = FedGBFConfig(
+        rounds=2, n_trees_max=2, n_trees_min=2, rho_id_min=0.6,
+        rho_id_max=0.8, loss=name, tree=TreeConfig(max_depth=3, num_bins=16),
+    )
+    from repro.core.types import pack_ensemble
+
+    m_ref, _ = boosting.train_fedgbf(x, y, cfg, jax.random.PRNGKey(0))
+    m_pal, _ = boosting.train_fedgbf(
+        x, y, cfg, jax.random.PRNGKey(0),
+        backend=backend_mod.get_backend("local-pallas"),
+    )
+    p_ref, p_pal = pack_ensemble(m_ref), pack_ensemble(m_pal)
+    np.testing.assert_array_equal(
+        np.asarray(p_ref.feature), np.asarray(p_pal.feature)
+    )
+    np.testing.assert_allclose(
+        np.asarray(p_ref.leaf_weight), np.asarray(p_pal.leaf_weight),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_multiclass_training_reduces_loss_and_predicts_K(toy):
+    x, rng = toy
+    obj = objective_mod.get_objective("softmax3")
+    y = _labels(obj, rng, x.shape[0])
+    cfg = FedGBFConfig(
+        rounds=4, n_trees_max=3, n_trees_min=2, rho_id_min=0.5,
+        rho_id_max=0.8, loss="softmax3",
+        tree=TreeConfig(max_depth=3, num_bins=16),
+    )
+    model, hist = boosting.train_fedgbf(x, y, cfg, jax.random.PRNGKey(0))
+    assert hist.train[-1]["loss"] < hist.train[0]["loss"]
+    margin = boosting.predict(model, x)
+    assert margin.shape == (x.shape[0], 3)
+    prob = boosting.predict_proba(model, x)
+    np.testing.assert_allclose(np.asarray(prob.sum(-1)), 1.0, atol=1e-5)
+
+
+# --------------------------------------------------------- serving regression
+
+
+def test_squared_checkpoint_not_sigmoided(toy, tmp_path):
+    """Regression: serving used to hard-code sigmoid for anything it loaded
+    with loss == 'logistic' and pass margins otherwise — but the activation
+    must come from the registry keyed by the checkpoint's stored objective.
+    A squared-loss checkpoint's served scores must equal raw margins."""
+    from repro.checkpoint import io as ckpt_io
+    from repro.core.types import pack_ensemble
+    from repro.launch import serve_fedgbf
+
+    x, rng = toy
+    y = jnp.asarray(rng.normal(size=x.shape[0]), jnp.float32)
+    cfg = FedGBFConfig(
+        rounds=2, n_trees_max=2, n_trees_min=2, rho_id_min=0.6,
+        rho_id_max=0.8, loss="squared",
+        tree=TreeConfig(max_depth=3, num_bins=16),
+    )
+    model, _ = boosting.train_fedgbf(x, y, cfg, jax.random.PRNGKey(0))
+    path = str(tmp_path / "sq_ckpt")
+    ckpt_io.save_ensemble(path, pack_ensemble(model))
+    loaded = ckpt_io.load_ensemble(path)
+    assert loaded.loss == "squared"
+    scores, _ = serve_fedgbf.score_stream(loaded, np.asarray(x), batch_size=128)
+    margins = np.asarray(boosting.predict(loaded, x))
+    np.testing.assert_allclose(scores, margins, atol=1e-6)
+    # a sigmoided output would be confined to (0, 1); raw margins are not
+    assert scores.min() < 0 or scores.max() > 1
+
+
+def test_softmax_checkpoint_serves_probability_rows(toy, tmp_path):
+    from repro.checkpoint import io as ckpt_io
+    from repro.core.types import pack_ensemble
+    from repro.launch import serve_fedgbf
+
+    x, rng = toy
+    obj = objective_mod.get_objective("softmax3")
+    y = _labels(obj, rng, x.shape[0])
+    cfg = FedGBFConfig(
+        rounds=2, n_trees_max=2, n_trees_min=2, rho_id_min=0.6,
+        rho_id_max=0.8, loss="softmax3",
+        tree=TreeConfig(max_depth=3, num_bins=16),
+    )
+    model, _ = boosting.train_fedgbf(x, y, cfg, jax.random.PRNGKey(0))
+    path = str(tmp_path / "sm_ckpt")
+    ckpt_io.save_ensemble(path, pack_ensemble(model))
+    loaded = ckpt_io.load_ensemble(path)
+    scores, _ = serve_fedgbf.score_stream(loaded, np.asarray(x), batch_size=128)
+    assert scores.shape == (x.shape[0], 3)
+    np.testing.assert_allclose(scores.sum(-1), 1.0, atol=1e-5)
+
+
+# ------------------------------------------------------------- gradient-less
+
+
+def test_gradientless_party_local(toy):
+    """Gradient-less mode on a single device: rate fit improves the global
+    loss, trees stay party-local, and the meter records ONLY margin/rate
+    phases — priced exactly by gradientless.wire_cost."""
+    from repro.federation import compress, gradientless
+
+    x, rng = toy
+    y = jnp.asarray(rng.integers(0, 2, x.shape[0]), jnp.float32)
+    cfg = FedGBFConfig(
+        rounds=2, n_trees_max=2, n_trees_min=2, rho_id_min=0.6,
+        rho_id_max=0.8, tree=TreeConfig(max_depth=3, num_bins=16),
+    )
+    meter = compress.MessageMeter()
+    packed, info = gradientless.train_gradientless(
+        x, y, cfg, jax.random.PRNGKey(0), num_parties=2, meter=meter,
+    )
+    assert info["loss_after"] <= info["loss_before"] + 1e-6
+    measured = meter.phase_totals()
+    assert set(measured) == {"tree_margins", "tree_scales"}
+    predicted = gradientless.wire_cost(x.shape[0], info["tree_counts"])
+    assert measured["tree_margins"] == predicted["tree_margins"]
+    assert measured["tree_scales"] == predicted["tree_scales"]
+    assert predicted["histograms"] == 0 and predicted["grad_broadcast"] == 0
+    # the packed model predicts on the FULL feature matrix
+    margin = boosting.predict(packed, x)
+    assert margin.shape == (x.shape[0],)

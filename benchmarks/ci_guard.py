@@ -35,7 +35,12 @@ regresses on any of the contracts this repo has already banked:
   * **K-channel floors** (DESIGN.md §11) — measured wire bytes reconcile
     exactly against the K-generalized wire model at K=1 AND K=3 (the
     softmax3 row's widened 2K+1-stat exchange), and the federated
-    multiclass accuracy beats the majority-class baseline.
+    multiclass accuracy beats the majority-class baseline;
+  * **telemetry overhead** (DESIGN.md §12) — the traced scan engine
+    (telemetry block + live Tracer + segment ticks) must stay within 5%
+    of the untraced steady-round time of the SAME bench run (ratio of the
+    same run, machine-independent), and the traced variant must itself
+    compile exactly 1 program (the telemetry flag is jit-static).
 
 Timing comparisons are deliberately ratio-of-the-same-run (subtraction on vs
 off inside one bench invocation), never absolute seconds across machines.
@@ -87,6 +92,14 @@ def main() -> int:
     sub = fresh_train.get("subtraction", {})
     check(sub.get("scan_compiles") == 1,
           f"subtraction scan compiles == 1 (got {sub.get('scan_compiles')})")
+
+    # -- telemetry overhead (ISSUE 8) ----------------------------------------
+    tele = fresh_train.get("telemetry", {})
+    check(tele.get("scan_compiles") == 1,
+          f"traced scan compiles == 1 (got {tele.get('scan_compiles')})")
+    ovh = tele.get("overhead_x", float("inf"))
+    check(ovh <= 1.05,
+          f"traced steady round within 5% of untraced ({ovh:.3f}x <= 1.05x)")
 
     # -- wire-byte ratios + reconciliation -----------------------------------
     for name, fresh in fresh_comm.get("backends", {}).items():

@@ -19,6 +19,7 @@ def main() -> None:
         communication,
         figures,
         kernel_bench,
+        obs_bench,
         paper_tables,
         predict_bench,
         roofline_report,
@@ -32,6 +33,7 @@ def main() -> None:
         ("kernel_bench", kernel_bench),
         ("train_bench", train_bench),
         ("predict_bench", predict_bench),
+        ("obs_bench", obs_bench),
         ("runtime_model", runtime_model),
         ("paper_tables", paper_tables),
         ("figures", figures),

@@ -19,7 +19,12 @@ Reported:
   * ``subtraction``      — the sibling-subtraction pipeline (DESIGN.md §6)
     on/off steady-state round time under the scanned engine, its compile
     count (must stay 1), metric drift vs the direct pipeline, and the
-    conservative ``speedup_floor`` benchmarks/ci_guard.py enforces.
+    conservative ``speedup_floor`` benchmarks/ci_guard.py enforces;
+  * ``telemetry``        — the observability layer (DESIGN.md §12) on vs
+    off: traced steady-round time (telemetry=True + live Tracer + segment
+    ticks) against the untraced baseline, the overhead ratio ci_guard
+    gates at <= 1.05x, and the traced variant's own compile count (the
+    telemetry flag is jit-static, so each variant compiles exactly once).
 
 Results land in reports/train_bench.json and the repo-root BENCH_train.json.
 
@@ -52,6 +57,7 @@ from benchmarks.common import save_report, scale
 from repro.core import boosting
 from repro.core import forest as forest_mod
 from repro.core.types import TreeConfig
+from repro.obs import trace as obs_trace
 
 #: sharded-throughput bench shape: >= 1M rows (the ISSUE floor), modest
 #: width/rounds so the CI smoke stays minutes, not hours, on one CPU.
@@ -129,10 +135,11 @@ def _sharded_bench() -> dict:
     return out
 
 
-def _train(engine, x, y, cfg, eval_every):
+def _train(engine, x, y, cfg, eval_every, tracer=None, telemetry=False):
     t0 = time.perf_counter()
     model, hist = boosting.train_fedgbf(
-        x, y, cfg, jax.random.PRNGKey(0), eval_every=eval_every, engine=engine
+        x, y, cfg, jax.random.PRNGKey(0), eval_every=eval_every,
+        engine=engine, tracer=tracer, telemetry=telemetry,
     )
     jax.block_until_ready(model.forests[-1].leaf_weight)
     return model, hist, time.perf_counter() - t0
@@ -227,6 +234,40 @@ def main(smoke: bool = False) -> list:
         # passes but a real pipeline regression does not
         "speedup_floor": round(0.75 * speedup, 3),
     }
+    # -- observability overhead (DESIGN.md §12), scanned engine ---------------
+    # Traced = telemetry=True (in-graph liveness block through the scan ys)
+    # + a live Tracer + segment-tick callbacks.  Measured with a fresh cache
+    # so the traced variant's own compile count is visible: the telemetry
+    # flag is jit-STATIC, so the traced program also compiles exactly once.
+    # The overhead ratio ci_guard gates at <= 1.05x is taken from
+    # INTERLEAVED traced/untraced warm runs (min of each) — alternating the
+    # two variants inside one measurement window cancels machine drift that
+    # would otherwise swamp a ~1% effect when the baseline was timed in a
+    # different section of the bench.
+    jax.clear_caches()
+    tr = obs_trace.Tracer()
+    _, _, cold_tele = _train("scan", x, y, cfg, eval_every,
+                             tracer=tr, telemetry=True)
+    tele_compiles = boosting._scan_train_program._cache_size()
+    warm_tele = warm_plain = float("inf")
+    for _ in range(warm_repeats + 2):
+        _, h_tele, t = _train("scan", x, y, cfg, eval_every,
+                              tracer=obs_trace.Tracer(), telemetry=True)
+        warm_tele = min(warm_tele, t)
+        _, _, t = _train("scan", x, y, cfg, eval_every)
+        warm_plain = min(warm_plain, t)
+    traced_round = warm_tele / rounds
+    plain_round = warm_plain / rounds
+    results["telemetry"] = {
+        "scan_compiles": tele_compiles,
+        "cold_s": cold_tele,
+        "traced_steady_round_s": traced_round,
+        "untraced_steady_round_s": plain_round,
+        "overhead_x": traced_round / plain_round,
+        "liveness_rounds": len(h_tele.telemetry.get("sampled_entries", [])),
+        "segments": len(h_tele.segments),
+    }
+
     # -- row-sharded multi-host throughput (DESIGN.md §8), >= 1M rows --------
     results["sharded"] = _sharded_bench()
     sh = results["sharded"]
@@ -257,6 +298,9 @@ def main(smoke: bool = False) -> list:
         f"steady {sub['on_steady_round_s']*1e3:.1f} ms/round "
         f"({sub['on_off_speedup_x']:.2f}x vs direct, "
         f"metric |diff| {sub['metric_max_abs_diff_vs_direct']:.1e})\n"
+        f"  scan+telemetry: {results['telemetry']['scan_compiles']} compile, "
+        f"steady {results['telemetry']['traced_steady_round_s']*1e3:.1f} "
+        f"ms/round ({results['telemetry']['overhead_x']:.3f}x untraced)\n"
         f"  sharded ({sh['data_shards']}x{sh['parties']} grid, "
         f"n={sh['n']:,}): {sh['rows_per_s']/1e3:.0f}k rows/s "
         f"(floor {sh['rows_per_s_floor']/1e3:.0f}k)\n"
@@ -269,6 +313,10 @@ def main(smoke: bool = False) -> list:
          f"1 program, {results['steady_round_speedup_vs_loop']:.2f}x vs loop"),
         ("train/scan_round_subtraction", sub["on_steady_round_s"] * 1e6,
          f"1 program, {sub['on_off_speedup_x']:.2f}x vs direct pipeline"),
+        ("train/scan_round_traced", results["telemetry"]
+         ["traced_steady_round_s"] * 1e6,
+         f"{results['telemetry']['overhead_x']:.3f}x untraced "
+         f"(gate <= 1.05x)"),
         ("train/sharded_1M_rows", sh["warm_s"] * 1e6,
          f"{sh['rows_per_s']/1e3:.0f}k rows/s on "
          f"{sh['data_shards']}x{sh['parties']} grid"),

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as trace_mod
+
 _BF16 = "bfloat16"
 
 
@@ -76,40 +78,49 @@ def save_ensemble(path: str, model) -> None:
     """
     from repro.core.types import EnsembleModel, PackedEnsemble, pack_ensemble
 
-    if isinstance(model, EnsembleModel):
-        model = pack_ensemble(model)
-    if not isinstance(model, PackedEnsemble):
-        raise TypeError(f"expected EnsembleModel or PackedEnsemble, got {model!r}")
-    leaves, aux = model.tree_flatten()
-    save_pytree(path, list(leaves))
-    round_offsets, lr, base, loss, max_depth = aux
-    meta_path = _meta_path(path)
-    with open(meta_path) as f:
-        meta = json.load(f)
-    meta["packed_ensemble"] = {
-        "round_offsets": list(round_offsets),
-        "learning_rate": lr,
-        "base_score": base,
-        "loss": loss,
-        "max_depth": max_depth,
-    }
-    with open(meta_path, "w") as f:
-        json.dump(meta, f)
+    # spans on the process-global tracer: checkpoint I/O sits below the
+    # drivers, so it cannot be handed a tracer argument (DESIGN.md §12)
+    with trace_mod.global_tracer().span("checkpoint.save", cat="io",
+                                        args={"path": path}):
+        if isinstance(model, EnsembleModel):
+            model = pack_ensemble(model)
+        if not isinstance(model, PackedEnsemble):
+            raise TypeError(
+                f"expected EnsembleModel or PackedEnsemble, got {model!r}"
+            )
+        leaves, aux = model.tree_flatten()
+        save_pytree(path, list(leaves))
+        round_offsets, lr, base, loss, max_depth = aux
+        meta_path = _meta_path(path)
+        with open(meta_path) as f:
+            meta = json.load(f)
+        meta["packed_ensemble"] = {
+            "round_offsets": list(round_offsets),
+            "learning_rate": lr,
+            "base_score": base,
+            "loss": loss,
+            "max_depth": max_depth,
+        }
+        with open(meta_path, "w") as f:
+            json.dump(meta, f)
 
 
 def load_ensemble(path: str):
     """Load a packed FedGBF checkpoint; returns a PackedEnsemble."""
     from repro.core.types import PackedEnsemble
 
-    with open(_meta_path(path)) as f:
-        meta = json.load(f)
-    if "packed_ensemble" not in meta:
-        raise ValueError(
-            f"{path} is not a packed-ensemble checkpoint (missing "
-            "'packed_ensemble' metadata); use load_pytree with an example tree"
-        )
-    pe = meta["packed_ensemble"]
-    leaves = _load_leaves(path, meta)
-    aux = (tuple(pe["round_offsets"]), pe["learning_rate"], pe["base_score"],
-           pe["loss"], pe["max_depth"])
-    return PackedEnsemble.tree_unflatten(aux, tuple(leaves))
+    with trace_mod.global_tracer().span("checkpoint.load", cat="io",
+                                        args={"path": path}):
+        with open(_meta_path(path)) as f:
+            meta = json.load(f)
+        if "packed_ensemble" not in meta:
+            raise ValueError(
+                f"{path} is not a packed-ensemble checkpoint (missing "
+                "'packed_ensemble' metadata); use load_pytree with an "
+                "example tree"
+            )
+        pe = meta["packed_ensemble"]
+        leaves = _load_leaves(path, meta)
+        aux = (tuple(pe["round_offsets"]), pe["learning_rate"],
+               pe["base_score"], pe["loss"], pe["max_depth"])
+        return PackedEnsemble.tree_unflatten(aux, tuple(leaves))

@@ -31,6 +31,7 @@ from repro.core import backend as backend_mod
 from repro.core import binning, dynamic
 from repro.core import forest as forest_mod
 from repro.core import objective as objective_mod
+from repro.obs import trace as trace_mod
 from repro.core.types import (
     EnsembleModel,
     FedGBFConfig,
@@ -49,6 +50,27 @@ class TrainHistory:
     spent wall time are facts about training, not about evaluation.  Only
     the metric evals are gated: ``rounds`` lists the (1-based) rounds at
     which metrics were computed and ``train``/``valid`` align with it.
+
+    ``wall_time_s`` granularity: the loop engine times every round on the
+    host, so its entries are per-round exact.  The scan engine runs all
+    rounds inside ONE compiled program; it measures true PER-SEGMENT walls
+    via in-program host ticks (``jax.debug.callback`` at the segment
+    boundaries) and smears each segment's wall uniformly over its rounds —
+    per-round resolution inside a segment is fundamentally unavailable
+    without a per-round host sync, which the engine exists to avoid.
+    ``segments`` records the measured boundaries: one dict per segment
+    (``width``, ``first_round`` 0-based, ``rounds``, ``root_delta_rows``,
+    ``wall_s``, absolute host-clock ``t0``/``t1``) for the scan engine, one
+    single-round entry per round for the loop engine.  ``overhead_s`` is
+    the scan call's wall outside the segment ticks (trace + compile +
+    dispatch + history fetch) so ``sum(wall_time_s) + overhead_s``
+    reconstructs the full call.
+
+    ``telemetry`` (filled when training runs with ``telemetry=True``) holds
+    the in-graph per-round stats fetched in the engine's single host sync:
+    ``split_nodes_per_level`` ((M, max_depth) — the frontier liveness the
+    compaction/shared-root machinery acts on), ``sampled_entries`` (live
+    (tree, row) pairs per round) and ``grad_absmean``.
     """
 
     rounds: list = field(default_factory=list)    # eval rounds (1-based)
@@ -58,6 +80,9 @@ class TrainHistory:
     rho_id: list = field(default_factory=list)    # per round, length M
     wall_time_s: list = field(default_factory=list)  # per round, length M
     engine: str = "loop"
+    segments: list = field(default_factory=list)  # measured segment walls
+    telemetry: dict = field(default_factory=dict)  # in-graph per-round stats
+    overhead_s: float = 0.0                       # scan: wall outside ticks
 
     @property
     def total_wall_time_s(self) -> float:
@@ -80,6 +105,8 @@ def train_fedgbf(
     eval_every: int = 1,
     verbose: bool = False,
     engine: str = "scan",
+    tracer=None,
+    telemetry: bool = False,
 ) -> tuple[EnsembleModel, TrainHistory]:
     """Train (Dynamic) FedGBF. Set min == max on both schedules for static FedGBF.
 
@@ -93,18 +120,30 @@ def train_fedgbf(
     ``engine`` selects the training engine (module docstring): ``"scan"``
     (static-shape scanned engine, the default) or ``"loop"`` (legacy
     per-round reference).  Both drive the same ``TreeBackend``.
+
+    ``tracer`` (an ``obs.trace.Tracer``; None falls back to the process
+    global, default disabled) records host-side spans — binning, the
+    scan-program call, per-segment/per-round execution.  ``telemetry=True``
+    additionally threads the in-graph telemetry block through the training
+    program (``TrainHistory.telemetry``); it is a jit-STATIC flag, so the
+    default path compiles the exact same program as before (the 1-compile
+    property and its cost are untouched — gated by benchmarks/ci_guard.py).
     """
     if cfg.sampling not in ("uniform", "goss"):
         raise ValueError(
             f"unknown sampling {cfg.sampling!r}; options: 'uniform', 'goss'"
         )
+    if tracer is None:
+        tracer = trace_mod.global_tracer()
     if engine == "scan":
         return _train_scanned(
-            x, y, cfg, rng, x_valid, y_valid, backend, eval_every, verbose
+            x, y, cfg, rng, x_valid, y_valid, backend, eval_every, verbose,
+            tracer, telemetry,
         )
     if engine == "loop":
         return _train_loop(
-            x, y, cfg, rng, x_valid, y_valid, backend, eval_every, verbose
+            x, y, cfg, rng, x_valid, y_valid, backend, eval_every, verbose,
+            tracer, telemetry,
         )
     raise ValueError(f"unknown engine {engine!r}; options: 'scan', 'loop'")
 
@@ -144,14 +183,52 @@ def _root_delta_rows(cfg: FedGBFConfig, n: int, rho_id: float) -> int:
     return _delta_bucket(max(1, n - n_keep), n)
 
 
+def _round_telemetry(trees, smask, g, max_depth) -> list:
+    """The in-graph telemetry vector for one round's built forest.
+
+    Per-level live split-node counts over the round's T trees (the frontier
+    liveness the compaction/shared-root machinery acts on), the live
+    (tree, row) sample-mask entries, and the mean |g| — all O(T·nodes)
+    reductions over arrays the round already materialized, so the traced
+    cost is noise next to one histogram pass (the <=5% ci_guard gate).
+    Returns a list of scalar jnp values, length ``max_depth + 2``.
+    """
+    tele, off = [], 0
+    for level in range(max_depth):
+        width = 2 ** level
+        tele.append(jnp.sum(
+            (trees.feature[:, off:off + width] >= 0).astype(jnp.float32)
+        ))
+        off += width
+    tele.append(jnp.sum((smask > 0).astype(jnp.float32)))
+    tele.append(jnp.mean(jnp.abs(g)))
+    return tele
+
+
+#: telemetry slots beyond the per-level liveness counts
+_TELE_EXTRA = 2
+
+
+def _telemetry_dict(tele_np: "np.ndarray", max_depth: int) -> dict:
+    """Unpack the fetched (M, max_depth + 2) telemetry matrix."""
+    return {
+        "split_nodes_per_level":
+            tele_np[:, :max_depth].astype(np.int64).tolist(),
+        "sampled_entries": tele_np[:, max_depth].astype(np.int64).tolist(),
+        "grad_absmean": [float(v) for v in tele_np[:, max_depth + 1]],
+    }
+
+
 def _train_loop(
-    x, y, cfg, rng, x_valid, y_valid, backend, eval_every, verbose
+    x, y, cfg, rng, x_valid, y_valid, backend, eval_every, verbose,
+    tracer=trace_mod.NULL_TRACER, telemetry=False,
 ) -> tuple[EnsembleModel, TrainHistory]:
     """Legacy per-round training loop (the reference baseline)."""
     bk = backend_mod.resolve_backend(backend)
     obj = objective_mod.get_objective(cfg.loss)
     n, d = x.shape
-    binned, edges = binning.fit_bin(x, cfg.tree.num_bins)
+    with tracer.span("binning", cat="train"):
+        binned, edges = binning.fit_bin(x, cfg.tree.num_bins)
     y = y.astype(jnp.float32)
 
     y_hat = obj.init_raw(n, cfg.base_score)
@@ -183,13 +260,27 @@ def _train_loop(
             smask, fmask = forest_mod.sample_masks(
                 k_sample, n, d, n_trees, rho_id, cfg.rho_feat
             )
-        trees, train_pred = bk.build_forest(
-            binned, g, h, smask, fmask, cfg.tree,
-            root_delta_rows=_root_delta_rows(cfg, n, rho_id),
-        )
-        y_hat = y_hat + cfg.learning_rate * train_pred
-        forests.append(jax.block_until_ready(trees))
-        dt = time.perf_counter() - t0
+        rdr = _root_delta_rows(cfg, n, rho_id)
+        with tracer.span(f"round {m}", cat="train",
+                         args={"n_trees": n_trees,
+                               "rho_id": round(rho_id, 6)}):
+            trees, train_pred = bk.build_forest(
+                binned, g, h, smask, fmask, cfg.tree, root_delta_rows=rdr,
+            )
+            y_hat = y_hat + cfg.learning_rate * train_pred
+            forests.append(jax.block_until_ready(trees))
+        t1 = time.perf_counter()
+        dt = t1 - t0
+        history.segments.append({
+            "width": n_trees, "first_round": m - 1, "rounds": 1,
+            "root_delta_rows": rdr, "wall_s": dt, "t0": t0, "t1": t1,
+        })
+        if telemetry:
+            tele = np.asarray(jnp.stack(
+                _round_telemetry(trees, smask, g, cfg.tree.max_depth)
+            ))[None]
+            for k, v in _telemetry_dict(tele, cfg.tree.max_depth).items():
+                history.telemetry.setdefault(k, []).extend(v)
 
         if x_valid is not None:
             # predict_forest = the shared packed traversal (tree.predict_trees)
@@ -223,6 +314,35 @@ def _train_loop(
     return model, history
 
 
+#: host-side segment-boundary timestamps appended by the in-program
+#: ``jax.debug.callback`` ticks of the CURRENT scan-engine call: (seg_idx,
+#: perf_counter).  Cleared by ``_train_scanned`` before each program call and
+#: read back after ``jax.effects_barrier()`` — a probing device like
+#: ``MessageMeter``, not re-entrant across concurrent trains in one process.
+_SEGMENT_TICKS: list = []
+
+
+def _segment_tick(seg_idx, _anchor) -> None:
+    _SEGMENT_TICKS.append((int(seg_idx), time.perf_counter()))
+
+
+def _emit_tick(seg_idx: int, anchor) -> None:
+    """Stage a host tick anchored on ``anchor`` (a traced array).
+
+    The data dependency on the boosting carry pins the callback to the
+    point where the preceding segment's result exists, so the host
+    timestamps bracket real segment execution.  Deliberately UNordered:
+    ordered effects refuse to run on >1 device, and the vfl backends train
+    on a multi-device mesh — sequencing comes from the carry chain instead
+    (tick i+1's operand depends on everything tick i's did), and the reader
+    dedups per segment index.  One scalar rides per tick — a handful of
+    tiny host callbacks per *program execution*, which is why the
+    per-segment wall-time fix costs nothing measurable (ci_guard's
+    traced-vs-untraced gate).
+    """
+    jax.debug.callback(_segment_tick, seg_idx, anchor.ravel()[0])
+
+
 def _schedule_segments(n_trees: "np.ndarray", split_on=None):
     """Factor a per-round tree-count schedule into constant-width segments:
     [(width, first_round, n_rounds), ...].  Monotone schedules (the paper's
@@ -243,10 +363,53 @@ def _schedule_segments(n_trees: "np.ndarray", split_on=None):
     return segments
 
 
-@partial(jax.jit, static_argnames=("cfg", "bk", "eval_every"))
+def _keep_counts(cfg: FedGBFConfig, n: int) -> "np.ndarray":
+    """Per-round keep counts via the exact host expression the legacy loop
+    evaluates (full float64 rho — schedule_arrays' float32 rho_id could
+    round a .5 boundary the other way and break mask equivalence)."""
+    return np.array(
+        [max(1, int(round(n * dynamic.rho_id_schedule(cfg, m))))
+         for m in range(1, cfg.rounds + 1)],
+        np.int32,
+    )
+
+
+def _plan_segments(cfg: FedGBFConfig, n: int) -> list:
+    """The scan engine's segment plan: [(width, first_round, n_rounds,
+    root_delta_rows), ...] — ONE host-side derivation shared by the compiled
+    program and by the history/trace attribution of the segment ticks, so
+    the two can never disagree on segment boundaries.
+
+    Shared-root crossover (DESIGN.md §9): segments additionally split at
+    the rho >= 0.5 eligibility boundary, so every round takes EXACTLY the
+    delta-vs-direct path the loop engine takes for it (host arithmetic
+    identical; engine equivalence must not depend on segment packing).
+    Within an eligible segment the static buffer is the bucketed max of
+    its rounds' deltas — surplus rows are weight-0 inert, so differing
+    buffer widths between the engines cannot change a single bit.
+    """
+    sched, _ = dynamic.flat_schedule(cfg)
+    n_keep_round = _keep_counts(cfg, n)
+    use_shared_root = cfg.tree.shared_root and cfg.sampling != "goss"
+    delta_eligible = None
+    if use_shared_root:
+        delta_eligible = (n - n_keep_round) <= n // 2
+    plan = []
+    for width, first, n_rounds in _schedule_segments(
+        sched.n_trees, split_on=delta_eligible
+    ):
+        rdr = 0
+        if use_shared_root and delta_eligible[first]:
+            seg_delta = int(n - n_keep_round[first:first + n_rounds].min())
+            rdr = _delta_bucket(max(1, seg_delta), n)
+        plan.append((width, first, n_rounds, rdr))
+    return plan
+
+
+@partial(jax.jit, static_argnames=("cfg", "bk", "eval_every", "telemetry"))
 def _scan_train_program(
     binned, y, binned_valid, y_valid, rng, cfg: FedGBFConfig, bk,
-    eval_every: int,
+    eval_every: int, telemetry: bool = False,
 ):
     """The ONE compiled training program of the scanned engine.
 
@@ -269,7 +432,16 @@ def _scan_train_program(
 
     Returns (trees per segment — a tuple of (rounds_seg, width, ...) stacked
     TreeArrays — train metric matrix (M, len(keys)), valid metric matrix or
-    None); gated-off rounds hold NaN rows.
+    None, telemetry matrix (M, max_depth + 2) or None); gated-off rounds
+    hold NaN metric rows.
+
+    Observability (DESIGN.md §12): an ordered ``jax.debug.callback`` tick
+    fires at every segment boundary (anchored on the boosting carry) so the
+    caller recovers TRUE per-segment walls from one program execution; with
+    the jit-STATIC ``telemetry`` flag the per-round liveness block
+    (``_round_telemetry``) rides the scan ``ys`` and is fetched in the same
+    single host sync as the metrics — neither path adds a host round-trip
+    or a second compile.
 
     Top-level + jitted so a) it is the unit the compile-count benchmark
     inspects via ``_cache_size()``, and b) identical shapes/configs across
@@ -287,14 +459,7 @@ def _scan_train_program(
 
     sched, flat = dynamic.flat_schedule(cfg)
     use_goss = cfg.sampling == "goss"
-    # Per-round keep counts via the exact host expression the legacy loop
-    # evaluates (full float64 rho — schedule_arrays' float32 rho_id could
-    # round a .5 boundary the other way and break mask equivalence).
-    n_keep_round = np.array(
-        [max(1, int(round(n * dynamic.rho_id_schedule(cfg, m))))
-         for m in range(1, cfg.rounds + 1)],
-        np.int32,
-    )
+    n_keep_round = _keep_counts(cfg, n)
     n_keep = n_keep_round[flat.round_of_step]  # (S,)
     if use_goss:
         goss_round = np.array(
@@ -337,6 +502,9 @@ def _scan_train_program(
             binned, g, h, smask, fmask, cfg.tree, root_delta_rows=rdr
         )
         y_hat = y_hat + lr * jnp.mean(per_pred, axis=0)
+        tele_vec = (jnp.stack(_round_telemetry(trees, smask, g,
+                                               cfg.tree.max_depth))
+                    if telemetry else None)
         tr_vec = jax.lax.cond(
             xs["do_eval"],
             lambda m: obj.metric_vector(y32, m),
@@ -353,7 +521,9 @@ def _scan_train_program(
                 lambda m: nan_vec,
                 y_hat_valid,
             )
-        return (y_hat, y_hat_valid), (trees, tr_vec, va_vec)
+        ys = ((trees, tr_vec, va_vec, tele_vec) if telemetry
+              else (trees, tr_vec, va_vec))
+        return (y_hat, y_hat_valid), ys
 
     y_hat0 = obj.init_raw(n, cfg.base_score)
     y_hat_valid0 = (
@@ -362,20 +532,13 @@ def _scan_train_program(
     )
     carry = (y_hat0, y_hat_valid0)
     offsets = np.concatenate([[0], np.cumsum(sched.n_trees)])
-    trees_segs, tr_rows, va_rows = [], [], []
-    # Shared-root crossover (DESIGN.md §9): segments additionally split at
-    # the rho >= 0.5 eligibility boundary, so every round takes EXACTLY the
-    # delta-vs-direct path the loop engine takes for it (host arithmetic
-    # identical; engine equivalence must not depend on segment packing).
-    # Within an eligible segment the static buffer is the bucketed max of
-    # its rounds' deltas — surplus rows are weight-0 inert, so differing
-    # buffer widths between the engines cannot change a single bit.
-    use_shared_root = cfg.tree.shared_root and not use_goss
-    delta_eligible = None
-    if use_shared_root:
-        delta_eligible = (n - n_keep_round) <= n // 2
-    for width, first, n_rounds in _schedule_segments(
-        sched.n_trees, split_on=delta_eligible
+    trees_segs, tr_rows, va_rows, tele_rows = [], [], [], []
+    # Segment boundaries + shared-root crossover come from the ONE shared
+    # host-side plan (``_plan_segments``) the caller also uses to attribute
+    # the segment ticks back to rounds.
+    _emit_tick(0, y_hat0)
+    for seg_idx, (width, first, n_rounds, rdr) in enumerate(
+        _plan_segments(cfg, n)
     ):
         s, e = int(offsets[first]), int(offsets[first + n_rounds])
         xs = {"do_eval": jnp.asarray(do_eval[first:first + n_rounds])}
@@ -386,10 +549,6 @@ def _scan_train_program(
         else:
             xs["smask"] = smask_all[s:e].reshape(n_rounds, width, n)
             xs["fmask"] = fmask_all[s:e].reshape(n_rounds, width, d)
-        rdr = 0
-        if use_shared_root and delta_eligible[first]:
-            seg_delta = int(n - n_keep_round[first:first + n_rounds].min())
-            rdr = _delta_bucket(max(1, seg_delta), n)
         body = partial(round_body, rdr)
         if n_rounds == 1:
             carry, ys = body(
@@ -401,13 +560,18 @@ def _scan_train_program(
         trees_segs.append(ys[0])
         tr_rows.append(ys[1])
         va_rows.append(ys[2])
+        if telemetry:
+            tele_rows.append(ys[3])
+        _emit_tick(seg_idx + 1, carry[0])
     tr_mat = jnp.concatenate(tr_rows)  # (M, len(keys))
     va_mat = jnp.concatenate(va_rows) if has_valid else None
-    return tuple(trees_segs), tr_mat, va_mat
+    tele_mat = jnp.concatenate(tele_rows) if telemetry else None
+    return tuple(trees_segs), tr_mat, va_mat, tele_mat
 
 
 def _train_scanned(
-    x, y, cfg, rng, x_valid, y_valid, backend, eval_every, verbose
+    x, y, cfg, rng, x_valid, y_valid, backend, eval_every, verbose,
+    tracer=trace_mod.NULL_TRACER, telemetry=False,
 ) -> tuple[EnsembleModel, TrainHistory]:
     """Static-shape scanned training engine (DESIGN.md §4).
 
@@ -419,24 +583,33 @@ def _train_scanned(
     tests/test_train_engine.py).
     """
     bk = backend_mod.resolve_backend(backend)
-    binned, edges = binning.fit_bin(x, cfg.tree.num_bins)
-    binned_valid = binning.bin_data(x_valid, edges) if x_valid is not None else None
+    with tracer.span("binning", cat="train"):
+        binned, edges = binning.fit_bin(x, cfg.tree.num_bins)
+        binned_valid = (binning.bin_data(x_valid, edges)
+                        if x_valid is not None else None)
 
     sched = dynamic.schedule_arrays(cfg)
     rounds_idx = np.arange(1, cfg.rounds + 1)
     do_eval = (rounds_idx % eval_every == 0) | (rounds_idx == cfg.rounds)
 
+    _SEGMENT_TICKS.clear()
     t0 = time.perf_counter()
-    trees_segs, tr_mat, va_mat = _scan_train_program(
-        binned, y, binned_valid,
-        None if y_valid is None else jnp.asarray(y_valid),
-        rng, cfg, bk, eval_every,
-    )
-    jax.block_until_ready(trees_segs)
-    # ONE fetch for the whole metric history (the engine's only host sync).
-    tr_np = np.asarray(tr_mat)
-    va_np = np.asarray(va_mat) if va_mat is not None else None
+    with tracer.span("scan_program", cat="train",
+                     args={"rounds": cfg.rounds, "telemetry": telemetry}):
+        trees_segs, tr_mat, va_mat, tele_mat = _scan_train_program(
+            binned, y, binned_valid,
+            None if y_valid is None else jnp.asarray(y_valid),
+            rng, cfg, bk, eval_every, telemetry=telemetry,
+        )
+        jax.block_until_ready(trees_segs)
+    jax.effects_barrier()  # flush the in-program segment ticks
     wall = time.perf_counter() - t0
+    with tracer.span("fetch_history", cat="train"):
+        # ONE fetch for the whole metric (+ telemetry) history — the
+        # engine's only host sync.
+        tr_np = np.asarray(tr_mat)
+        va_np = np.asarray(va_mat) if va_mat is not None else None
+        tele_np = np.asarray(tele_mat) if tele_mat is not None else None
 
     # Unstack each segment's (rounds_seg, width, ...) trees into the ragged
     # per-round forests — structurally identical to the legacy loop's model.
@@ -453,9 +626,54 @@ def _train_scanned(
     history.n_trees = [int(v) for v in sched.n_trees]
     history.rho_id = [dynamic.rho_id_schedule(cfg, m)  # full-precision, as loop
                       for m in range(1, cfg.rounds + 1)]
-    # One program ran all rounds: amortise the single wall time uniformly so
-    # sum(wall_time_s) stays the true total.
-    history.wall_time_s = [wall / cfg.rounds] * cfg.rounds
+    if tele_np is not None:
+        history.telemetry = _telemetry_dict(tele_np, cfg.tree.max_depth)
+
+    # Per-SEGMENT walls from the in-program ticks: tick i and i+1 bracket
+    # segment i's execution, so each segment's wall is real, smeared
+    # uniformly only over the rounds INSIDE it (see the TrainHistory
+    # docstring for the granularity limit).  Everything the call spent
+    # outside the ticks — trace + compile + dispatch — lands in
+    # ``overhead_s``, so cold and warm calls stay comparable.
+    plan = _plan_segments(cfg, binned.shape[0])
+    # Unordered callbacks fire once per participating device: dedup to the
+    # earliest timestamp per segment index, then clamp to monotone (host
+    # callback delivery can jitter by microseconds across devices).
+    by_idx: dict = {}
+    for i, t in _SEGMENT_TICKS:
+        by_idx[i] = min(t, by_idx.get(i, t))
+    if set(by_idx) == set(range(len(plan) + 1)):
+        ticks = [(i, by_idx[i]) for i in range(len(plan) + 1)]
+        for k in range(1, len(ticks)):
+            ticks[k] = (k, max(ticks[k][1], ticks[k - 1][1]))
+        history.wall_time_s = []
+        for (width, first, n_rounds, rdr), (_, ta), (_, tb) in zip(
+            plan, ticks, ticks[1:]
+        ):
+            history.wall_time_s.extend([(tb - ta) / n_rounds] * n_rounds)
+            history.segments.append({
+                "width": width, "first_round": first, "rounds": n_rounds,
+                "root_delta_rows": rdr, "wall_s": tb - ta,
+                "t0": ta, "t1": tb,
+            })
+            tracer.add_span(
+                f"segment[T={width}]", ta, tb, cat="train", track="train",
+                args={"rounds": n_rounds, "first_round": first + 1,
+                      "root_delta_rows": rdr},
+            )
+        history.overhead_s = max(0.0, wall - (ticks[-1][1] - ticks[0][1]))
+        tracer.add_span("trace+compile+dispatch", t0, ticks[0][1],
+                        cat="train", track="train")
+    else:  # ticks unavailable (e.g. a backend without host callbacks):
+        # fall back to the uniform smear so the total stays true.
+        history.wall_time_s = [wall / cfg.rounds] * cfg.rounds
+        per = wall / cfg.rounds
+        for width, first, n_rounds, rdr in plan:
+            history.segments.append({
+                "width": width, "first_round": first, "rounds": n_rounds,
+                "root_delta_rows": rdr, "wall_s": per * n_rounds,
+                "t0": t0 + first * per, "t1": t0 + (first + n_rounds) * per,
+            })
     keys = objective_mod.get_objective(cfg.loss).metric_keys
     for m in np.nonzero(do_eval)[0]:
         m = int(m)

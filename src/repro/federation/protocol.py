@@ -360,14 +360,34 @@ def measured_run_cost(
     return _assemble_run_cost(per_tree, grad_per_round, passive_parties, cfg)
 
 
-def _assemble_run_cost(per_tree, grad_per_round, passive_parties, cfg) -> dict:
-    out = dict.fromkeys(WIRE_PHASES, 0)
+def per_round_cost(per_tree, grad_per_round, passive_parties, cfg) -> list:
+    """Per-ROUND wire bytes under the schedule: one {phase: bytes} dict per
+    round, m = 1..cfg.rounds.
+
+    This is the single schedule/passive-party scaling ``_assemble_run_cost``
+    sums — exported so the trace/log join (DESIGN.md §12) emits EXACTLY the
+    ledger's numbers per round: summing these rows reproduces
+    ``measured_run_cost``/``wire_run_cost`` phase-for-phase by construction,
+    which is what makes the Perfetto wire spans reconcile exactly with
+    ``ProtocolLedger.breakdown()``.
+    """
+    rows = []
     for m in range(1, cfg.rounds + 1):
         n_trees = dynamic.n_trees_schedule(cfg, m)
-        out["grad_broadcast"] += passive_parties * grad_per_round
+        row = dict.fromkeys(WIRE_PHASES, 0)
+        row["grad_broadcast"] += passive_parties * grad_per_round
         for phase, nbytes in per_tree.items():
             mult = passive_parties if phase in PER_PASSIVE_PHASES else 1
-            out[phase] = out.get(phase, 0) + mult * n_trees * nbytes
+            row[phase] = row.get(phase, 0) + mult * n_trees * nbytes
+        rows.append(row)
+    return rows
+
+
+def _assemble_run_cost(per_tree, grad_per_round, passive_parties, cfg) -> dict:
+    out = dict.fromkeys(WIRE_PHASES, 0)
+    for row in per_round_cost(per_tree, grad_per_round, passive_parties, cfg):
+        for phase, nbytes in row.items():
+            out[phase] = out.get(phase, 0) + nbytes
     out["total"] = sum(v for k, v in out.items() if k != "total")
     return out
 
@@ -389,18 +409,35 @@ class ProtocolLedger:
     cfg: FedGBFConfig
     transport: object = None     # compress.TransportSpec or None (raw)
     measured: dict = field(default_factory=dict)
+    #: the last ``record_run`` probe, kept so per-round views
+    #: (``per_round_measured``) are derivable from the ledger alone
+    probe: dict = field(default_factory=dict)
 
     def record_measured(self, phase: str, nbytes: int) -> None:
         self.measured[phase] = self.measured.get(phase, 0) + int(nbytes)
 
     def record_run(self, per_tree: dict, grad_per_round: int) -> None:
         """Accumulate a whole run's measured bytes from a per-tree probe."""
+        self.probe = {"per_tree": dict(per_tree),
+                      "grad_per_round": int(grad_per_round)}
         run = measured_run_cost(
             per_tree, grad_per_round, self.spec.passive_parties, self.cfg
         )
         for phase, nbytes in run.items():
             if phase != "total":
                 self.record_measured(phase, nbytes)
+
+    def per_round_measured(self) -> list:
+        """Measured bytes per round (``per_round_cost`` over the stored
+        probe) — the rows the trace exporter and ``--log-json`` consume;
+        their per-phase sums equal ``self.measured`` exactly.  Empty when
+        no ``record_run`` probe was taken."""
+        if not self.probe:
+            return []
+        return per_round_cost(
+            self.probe["per_tree"], self.probe["grad_per_round"],
+            self.spec.passive_parties, self.cfg,
+        )
 
     def predicted(self) -> dict:
         """Wire-model prediction (actual plaintext payloads)."""

@@ -26,6 +26,8 @@ from repro.core import forest as forest_mod
 from repro.core.types import TreeConfig
 from repro.federation import vfl
 from repro.launch.mesh import make_production_mesh
+from repro.obs import perfetto
+from repro.obs import trace as obs_trace
 from repro.tools import roofline as roofline_mod
 from repro.launch.dryrun import REPORT_DIR
 
@@ -62,12 +64,17 @@ def run(aggregation: str, n=150_000, d=16, n_trees=5, multi_pod=False,
     smask = jax.ShapeDtypeStruct((n_trees, n), jnp.float32)
     fmask = jax.ShapeDtypeStruct((n_trees, d), bool)
 
+    tracer = obs_trace.global_tracer()
     with use_mesh(mesh):
         # the backend's forest_builder wraps a jit; lower via a fresh jit
-        lowered = jax.jit(
-            lambda b, gg, hh, sm, fm: backend.build_forest(b, gg, hh, sm, fm)
-        ).lower(binned, g, h, smask, fmask)
-        compiled = lowered.compile()
+        with tracer.span(f"lower[{aggregation}]", cat="dryrun",
+                         args={"chips": chips, "n": n, "d": d}):
+            lowered = jax.jit(
+                lambda b, gg, hh, sm, fm: backend.build_forest(b, gg, hh, sm, fm)
+            ).lower(binned, g, h, smask, fmask)
+        with tracer.span(f"compile[{aggregation}]", cat="dryrun",
+                         args={"chips": chips}):
+            compiled = lowered.compile()
 
     cost = compiled.cost_analysis()
     if isinstance(cost, (list, tuple)):
@@ -100,6 +107,8 @@ def run(aggregation: str, n=150_000, d=16, n_trees=5, multi_pod=False,
         "memory_s": float(cost.get("bytes accessed", 0.0)) / 819e9,
         "collective_s": float(stats.total_bytes) / 50e9,
     }
+    tracer.counter("dryrun_collective_bytes_per_dev",
+                   {report["tag"]: report["collective_bytes_per_dev"]})
     os.makedirs(REPORT_DIR, exist_ok=True)
     with open(os.path.join(REPORT_DIR, report["tag"] + ".json"), "w") as f:
         json.dump(report, f, indent=1)
@@ -120,7 +129,16 @@ def main() -> int:
                     help="also dry-run an explicit (data_shards x 16) row-"
                          "sharded grid (DESIGN.md §8) in addition to the "
                          "production meshes")
+    ap.add_argument("--trace", nargs="?", const=os.path.join(
+                        REPORT_DIR, "dryrun_trace.json"),
+                    default=None, metavar="OUT.json",
+                    help="export per-phase lower/compile spans of the sweep "
+                         "as a Perfetto-loadable Chrome trace (default "
+                         "reports/dryrun_trace.json)")
     args = ap.parse_args()
+
+    if args.trace:
+        obs_trace.set_global_tracer(obs_trace.Tracer())
 
     base = None
     for multi_pod in (False, True):
@@ -158,6 +176,12 @@ def main() -> int:
         cut = deep["collective_bytes_per_dev"] / comp["collective_bytes_per_dev"]
         print(f"[OK] depth-5 frontier-compaction collective-bytes cut: "
               f"{cut:.2f}x")
+    if args.trace:
+        n_events = perfetto.export_chrome_trace(
+            args.trace, obs_trace.global_tracer(),
+            metadata={"entry": "dryrun_fedgbf"},
+        )
+        print(f"[OK] dryrun trace: {n_events} events -> {args.trace}")
     return 0
 
 

@@ -6,13 +6,22 @@ fused Pallas ``ensemble_predict`` kernel) + the scale combiner, compiled once
 for a fixed microbatch shape.  Requests are padded to the microbatch size so
 the whole serving loop replays a single XLA program.
 
+Observability (DESIGN.md §12): the stream records into a ``StreamMetrics``
+bundle — a log-bucketed latency histogram (p50/p90/p99 derived from bucket
+counts, NOT from a raw per-batch list, so memory stays constant under
+unbounded streams) plus rows/batches/padded-rows counters and occupancy /
+rows-per-second gauges.  ``--metrics-out`` writes the whole bundle in the
+Prometheus text exposition format — the scrape payload a metrics endpoint
+serves verbatim.
+
     # train a small model, save the packed checkpoint, score a request stream
     PYTHONPATH=src python -m repro.launch.serve_fedgbf \
         --dataset default_credit_card --rounds 10 --save /tmp/fedgbf_ckpt
 
     # serve an existing packed checkpoint with the Pallas kernel
     PYTHONPATH=src python -m repro.launch.serve_fedgbf \
-        --checkpoint /tmp/fedgbf_ckpt --impl pallas --requests 200000
+        --checkpoint /tmp/fedgbf_ckpt --impl pallas --requests 200000 \
+        --metrics-out /tmp/fedgbf_metrics.prom
 """
 
 from __future__ import annotations
@@ -30,6 +39,7 @@ from repro.core import boosting
 from repro.core import objective as objective_mod
 from repro.core.types import PackedEnsemble
 from repro.data import synthetic
+from repro.obs import metrics as obs_metrics
 
 
 @partial(jax.jit, static_argnames=("impl",))
@@ -47,20 +57,80 @@ def _score_batch(packed: PackedEnsemble, x: jnp.ndarray, impl: str) -> jnp.ndarr
     return objective_mod.get_objective(packed.loss).activation(margin)
 
 
+class StreamMetrics:
+    """Serving instruments for one scoring stream (bounded memory).
+
+    Latency lives ONLY in the log-bucketed histogram — p50/p90/p99 come
+    from ``latency.quantile`` with a bucket-width error bound (~4.5%
+    relative at the default growth), never from a raw list that grows with
+    the stream.  Batch occupancy = real rows / microbatch capacity, so
+    ``1 - occupancy`` is the fraction of traversal work spent on padding.
+    """
+
+    def __init__(self, batch_size: int) -> None:
+        r = obs_metrics.MetricsRegistry()
+        self.registry = r
+        self.latency = r.histogram(
+            "fedgbf_serve_batch_latency_seconds",
+            "Per-microbatch scoring latency (bin + traverse + combine).",
+            lo=1e-6, hi=60.0,
+        )
+        self.rows = r.counter("fedgbf_serve_rows_total",
+                              "Real (non-padding) rows scored.")
+        self.batches = r.counter("fedgbf_serve_batches_total",
+                                 "Microbatches dispatched.")
+        self.padded_rows = r.counter(
+            "fedgbf_serve_padded_rows_total",
+            "Zero-padding rows scored to keep the microbatch shape static.")
+        self.batch_size = r.gauge("fedgbf_serve_batch_size",
+                                  "Static microbatch capacity.")
+        self.occupancy = r.gauge(
+            "fedgbf_serve_batch_occupancy",
+            "Mean real-row fraction per microbatch (1 = no padding).")
+        self.rows_per_s = r.gauge("fedgbf_serve_rows_per_second",
+                                  "Stream throughput over the last run.")
+        self.batch_size.set(batch_size)
+        self._capacity = batch_size
+
+    def observe_batch(self, latency_s: float, real_rows: int) -> None:
+        self.latency.observe(latency_s)
+        self.rows.inc(real_rows)
+        self.batches.inc()
+        self.padded_rows.inc(self._capacity - real_rows)
+        total = self._capacity * self.batches.value
+        self.occupancy.set(self.rows.value / total if total else 0.0)
+
+    def finalize(self, wall_s: float) -> None:
+        if wall_s > 0:
+            self.rows_per_s.set(self.rows.value / wall_s)
+
+    def quantiles_ms(self, qs=(0.5, 0.9, 0.99)) -> dict:
+        return {q: self.latency.quantile(q) * 1e3 for q in qs}
+
+    def render(self) -> str:
+        """Prometheus text exposition of the whole bundle."""
+        return self.registry.render()
+
+
 def score_stream(
     packed: PackedEnsemble,
     x: np.ndarray,
     batch_size: int = 8192,
     impl: str = "packed",
-) -> tuple[np.ndarray, list]:
-    """Score ``x`` in fixed-shape microbatches; returns (scores, latencies_s).
+    metrics: StreamMetrics = None,
+) -> tuple[np.ndarray, StreamMetrics]:
+    """Score ``x`` in fixed-shape microbatches; returns (scores, metrics).
 
     The last partial batch is zero-padded to ``batch_size`` (scores of the
     padding are dropped) so every step hits the same compiled program.
+    Per-batch latency and occupancy land in ``metrics`` (a fresh
+    ``StreamMetrics`` unless one is passed in to accumulate across calls) —
+    fixed-size state, so an unbounded stream cannot grow it.
     """
     n = x.shape[0]
     out = None  # allocated after the first batch: (n,) or (n, K) scores
-    lat = []
+    if metrics is None:
+        metrics = StreamMetrics(batch_size)
     for start in range(0, n, batch_size):
         chunk = x[start:start + batch_size]
         pad = batch_size - chunk.shape[0]
@@ -71,13 +141,13 @@ def score_stream(
         scores = jax.block_until_ready(
             _score_batch(packed, jnp.asarray(chunk), impl)
         )
-        lat.append(time.perf_counter() - t0)
+        metrics.observe_batch(time.perf_counter() - t0, batch_size - pad)
         if out is None:
             out = np.empty((n,) + scores.shape[1:], np.float32)
         out[start:start + batch_size - pad] = np.asarray(
             scores[:batch_size - pad]
         )
-    return out, lat
+    return out, metrics
 
 
 def main() -> None:
@@ -95,6 +165,9 @@ def main() -> None:
     ap.add_argument("--batch-size", type=int, default=8192)
     ap.add_argument("--impl", choices=["packed", "weighted", "pallas"],
                     default="packed")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the Prometheus text exposition of the "
+                         "stream metrics here ('-' for stdout)")
     args = ap.parse_args()
 
     ds = synthetic.load(args.dataset)
@@ -130,20 +203,30 @@ def main() -> None:
               f"{args.batch_size} -> {batch_size}")
 
     # Warm-up compiles the single microbatch program (ONE batch, not the
-    # whole stream).
+    # whole stream); its metrics are thrown away so the reported histogram
+    # covers only steady-state batches.
     score_stream(packed, requests[:batch_size], batch_size, args.impl)
     t0 = time.perf_counter()
-    scores, lat = score_stream(packed, requests, batch_size, args.impl)
-    wall = time.perf_counter() - t0
-    # np.percentile interpolates between order statistics — correct for
-    # small / even-length latency streams, where hand-indexing the sorted
-    # list is biased (e.g. the "p50" of [1, 2] must be 1.5, not 2).
-    lat_ms = np.asarray(lat) * 1e3
-    p50 = float(np.percentile(lat_ms, 50))
-    p99 = float(np.percentile(lat_ms, 99))
+    scores, sm = score_stream(packed, requests, batch_size, args.impl)
+    sm.finalize(time.perf_counter() - t0)
+    # Quantiles from the log-bucket counts (geometric-midpoint estimate,
+    # error bounded by half the bucket growth) — the raw latency list is
+    # gone on purpose: it grew with the stream.
+    q = sm.quantiles_ms()
     print(f"impl={args.impl} batch={batch_size} "
-          f"requests={args.requests}: {args.requests / wall:,.0f} rows/s, "
-          f"batch latency p50={p50:.2f}ms p99={p99:.2f}ms")
+          f"requests={args.requests}: {sm.rows_per_s.value:,.0f} rows/s, "
+          f"batch latency p50={q[0.5]:.2f}ms p90={q[0.9]:.2f}ms "
+          f"p99={q[0.99]:.2f}ms "
+          f"({int(sm.batches.value)} batches, "
+          f"occupancy={sm.occupancy.value:.3f})")
+    if args.metrics_out:
+        text = sm.render()
+        if args.metrics_out == "-":
+            print(text, end="")
+        else:
+            with open(args.metrics_out, "w") as f:
+                f.write(text)
+            print(f"metrics exposition -> {args.metrics_out}")
     print(f"score head: {scores[:5]}")
 
 

@@ -28,6 +28,9 @@ from repro.core.types import TreeConfig
 from repro.data import synthetic, tabular
 from repro.federation import vfl  # noqa: F401  (registers vfl-* backends)
 from repro.launch import mesh as mesh_mod
+from repro.obs import log as obs_log
+from repro.obs import perfetto
+from repro.obs import trace as obs_trace
 
 # All registered backends are launchable, incl. the compressed-transport
 # variants (vfl-histogram-q8/q16, vfl-argmax-topk; DESIGN.md §5).
@@ -90,6 +93,18 @@ def main() -> None:
                          "per level; dead nodes are masked out of histograms "
                          "and the party exchange.  0 = uncompacted (use "
                          "with --max-depth > 3).")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Chrome-trace/Perfetto JSON timeline of "
+                         "the run (DESIGN.md §12): host spans (binning, "
+                         "compile, per-segment execution), per-round spans "
+                         "with metrics + frontier liveness, and — on vfl-* "
+                         "backends — per-phase wire-byte spans whose bytes "
+                         "reconcile exactly with ProtocolLedger.breakdown()")
+    ap.add_argument("--log-json", action="store_true",
+                    help="emit one structured JSON line per round (schedule, "
+                         "wall time, metrics, liveness, wire bytes) instead "
+                         "of the ad-hoc [round NNN] prints; parsed by "
+                         "benchmarks/obs_bench.py")
     ap.add_argument("--shared-root", action="store_true",
                     help="shared-root caching (DESIGN.md §9): the level-0 "
                          "pass computes ONE unmasked histogram per round "
@@ -98,6 +113,10 @@ def main() -> None:
                          "rho_id schedule clears the 0.5 crossover "
                          "(uniform sampling only).")
     args = ap.parse_args()
+
+    want_obs = bool(args.trace) or args.log_json
+    tracer = obs_trace.Tracer() if args.trace else obs_trace.NULL_TRACER
+    obs_trace.set_global_tracer(tracer)  # checkpoint I/O etc. hang off this
 
     ds = synthetic.load(args.dataset, n=args.n or None)
     tree = TreeConfig(max_depth=args.max_depth, num_bins=32,
@@ -170,11 +189,38 @@ def main() -> None:
 
     model, hist = boosting.train_fedgbf(
         jnp.asarray(x_train), jnp.asarray(y_train), cfg, jax.random.PRNGKey(0),
-        backend=backend, verbose=True, engine=args.engine,
-        eval_every=args.eval_every,
+        backend=backend, verbose=not args.log_json, engine=args.engine,
+        eval_every=args.eval_every, tracer=tracer, telemetry=want_obs,
     )
     print(f"engine={hist.engine}: total train wall {hist.total_wall_time_s:.2f}s "
           f"over {len(hist.n_trees)} rounds")
+
+    # --- unified telemetry outputs (DESIGN.md §12) --------------------------
+    per_round_bytes = ledger.per_round_measured() if federated else None
+    if args.log_json:
+        for line in obs_log.render_round_lines(hist, per_round_bytes):
+            print(line)
+    if args.trace:
+        perfetto.add_training_timeline(tracer, hist, per_round_bytes)
+        n_events = perfetto.export_chrome_trace(
+            args.trace, tracer,
+            metadata={"dataset": args.dataset, "backend": args.backend,
+                      "engine": hist.engine, "rounds": args.rounds},
+        )
+        print(f"trace: {n_events} events -> {args.trace} "
+              f"(open in ui.perfetto.dev)")
+        if federated:
+            # acceptance contract: the trace's histogram-phase span bytes
+            # are the ledger's own per-round rows, so they must sum to
+            # breakdown()["measured"] exactly
+            span_hist = perfetto.wire_span_phase_totals(tracer)
+            led_hist = ledger.breakdown()["measured"]
+            match = span_hist.get("histograms", 0) == led_hist["histograms"]
+            print(f"trace: histogram-phase span bytes "
+                  f"{span_hist.get('histograms', 0)} vs ledger "
+                  f"{led_hist['histograms']} (match={match})")
+            if not match:
+                raise SystemExit("trace/ledger histogram bytes diverged")
     x_test = ds.x_test
     if federated:
         x_test, _ = tabular.pad_features(x_test, args.parties)

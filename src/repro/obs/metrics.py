@@ -1,0 +1,157 @@
+"""Serving metrics: log-bucketed histograms, counters, Prometheus text
+exposition (DESIGN.md §12).
+
+The serving path scores unbounded request streams, so nothing here may grow
+with the stream: ``LogBucketHistogram`` stores a FIXED array of bucket
+counts (no raw samples), and quantiles are derived from the buckets — the
+estimate lands on the geometric midpoint of the covering bucket, so the
+relative error is bounded by half the bucket growth factor (~4.5% at the
+default 2**(1/8) growth), independent of stream length.
+
+``MetricsRegistry.render()`` writes the Prometheus text exposition format
+(the de-facto scrape payload), so wiring an HTTP endpoint later is just
+serving this string; ``serve_fedgbf --metrics-out`` dumps it to a file.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+class Counter:
+    """Monotonic counter."""
+
+    kind = "counter"
+
+    def __init__(self, name: str, help: str = "") -> None:
+        self.name = name
+        self.help = help
+        self.value = 0.0
+
+    def inc(self, v: float = 1.0) -> None:
+        if v < 0:
+            raise ValueError("counters only go up")
+        self.value += v
+
+    def render(self) -> list:
+        return [f"{self.name} {_fmt(self.value)}"]
+
+
+class Gauge:
+    """Last-write-wins instantaneous value."""
+
+    kind = "gauge"
+
+    def __init__(self, name: str, help: str = "") -> None:
+        self.name = name
+        self.help = help
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def render(self) -> list:
+        return [f"{self.name} {_fmt(self.value)}"]
+
+
+class LogBucketHistogram:
+    """Fixed-size log-bucketed histogram (bounded memory for any stream).
+
+    Bucket upper edges grow geometrically from ``lo`` by ``growth`` up to
+    ``hi``, plus one overflow bucket; values below ``lo`` land in the first
+    bucket.  ``quantile(q)`` walks the cumulative counts and returns the
+    geometric midpoint of the covering bucket — error ≤ (growth - 1) / 2
+    relative, by construction, with no raw-sample storage.
+    """
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "", lo: float = 1e-5,
+                 hi: float = 60.0, growth: float = 2 ** 0.125) -> None:
+        if not (lo > 0 and hi > lo and growth > 1):
+            raise ValueError("need 0 < lo < hi and growth > 1")
+        self.name = name
+        self.help = help
+        self.growth = growth
+        n = int(math.ceil(math.log(hi / lo) / math.log(growth))) + 1
+        #: upper bucket edges, seconds; the implicit last bucket is +Inf
+        self.bounds = lo * growth ** np.arange(n)
+        self.counts = np.zeros(n + 1, np.int64)
+        self.sum = 0.0
+
+    def observe(self, v: float) -> None:
+        self.counts[np.searchsorted(self.bounds, v)] += 1
+        self.sum += v
+
+    @property
+    def count(self) -> int:
+        return int(self.counts.sum())
+
+    def quantile(self, q: float) -> float:
+        """q-quantile estimate from bucket counts (NaN when empty)."""
+        total = self.count
+        if total == 0:
+            return float("nan")
+        rank = max(1, int(math.ceil(q * total)))
+        idx = int(np.searchsorted(np.cumsum(self.counts), rank))
+        if idx >= len(self.bounds):  # overflow bucket: report the hi edge
+            return float(self.bounds[-1])
+        upper = self.bounds[idx]
+        return float(upper / math.sqrt(self.growth))  # geometric midpoint
+
+    def render(self) -> list:
+        """Prometheus histogram series: cumulative ``_bucket`` lines for
+        occupied buckets (+ the mandatory +Inf), ``_sum``, ``_count``."""
+        lines, cum = [], 0
+        for i, c in enumerate(self.counts[:-1]):
+            if c:
+                cum += int(c)
+                lines.append(
+                    f'{self.name}_bucket{{le="{_fmt(self.bounds[i])}"}} {cum}'
+                )
+        lines.append(f'{self.name}_bucket{{le="+Inf"}} {self.count}')
+        lines.append(f"{self.name}_sum {_fmt(self.sum)}")
+        lines.append(f"{self.name}_count {self.count}")
+        return lines
+
+
+def _fmt(v: float) -> str:
+    """Prometheus sample formatting: integral values without the '.0'."""
+    f = float(v)
+    return str(int(f)) if f == int(f) else repr(f)
+
+
+class MetricsRegistry:
+    """Orders instruments and renders the text exposition."""
+
+    def __init__(self) -> None:
+        self._metrics: list = []
+        self._names: set = set()
+
+    def _register(self, metric):
+        if metric.name in self._names:
+            raise ValueError(f"duplicate metric {metric.name!r}")
+        self._names.add(metric.name)
+        self._metrics.append(metric)
+        return metric
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._register(Counter(name, help))
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._register(Gauge(name, help))
+
+    def histogram(self, name: str, help: str = "", **kw) -> LogBucketHistogram:
+        return self._register(LogBucketHistogram(name, help, **kw))
+
+    def render(self) -> str:
+        """Prometheus text exposition (version 0.0.4)."""
+        out = []
+        for m in self._metrics:
+            if m.help:
+                out.append(f"# HELP {m.name} {m.help}")
+            out.append(f"# TYPE {m.name} {m.kind}")
+            out.extend(m.render())
+        return "\n".join(out) + "\n"

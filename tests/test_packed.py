@@ -128,10 +128,11 @@ def test_serve_stream_matches_direct_predict():
     model, x_test = _train("logistic", dynamic=True, rounds=4)
     pe = pack_ensemble(model)
     x_np = np.asarray(x_test)  # 311 rows: 2 full batches of 128 + ragged 55
-    scores, lat = score_stream(pe, x_np, batch_size=128, impl="packed")
+    scores, sm = score_stream(pe, x_np, batch_size=128, impl="packed")
     direct = jax.nn.sigmoid(boosting.predict(pe, x_test))
     np.testing.assert_allclose(scores, np.asarray(direct), rtol=1e-6, atol=1e-7)
-    assert len(lat) == 3
+    assert sm.batches.value == 3 and sm.latency.count == 3
+    assert sm.rows.value == 311 and sm.padded_rows.value == 3 * 128 - 311
 
 
 # ---------------------------------------------------------------------------

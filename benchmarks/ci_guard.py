@@ -40,7 +40,14 @@ regresses on any of the contracts this repo has already banked:
     (telemetry block + live Tracer + segment ticks) must stay within 5%
     of the untraced steady-round time of the SAME bench run (ratio of the
     same run, machine-independent), and the traced variant must itself
-    compile exactly 1 program (the telemetry flag is jit-static).
+    compile exactly 1 program (the telemetry flag is jit-static);
+  * **chaos transport floors** (DESIGN.md §13) — the ``-chaos`` wrapper at
+    a zero-fault spec is bit-identical to the wrapped backend and within
+    5% of its warm train wall (ratio of the same run); under seeded
+    drop/corrupt faults the checksum-verified retransmission keeps the
+    model (and AUC) bit-identical to the raw backend, meters > 0 retry
+    bytes, and the ledger reconciles exactly including the ``retries``
+    phase.
 
 Timing comparisons are deliberately ratio-of-the-same-run (subtraction on vs
 off inside one bench invocation), never absolute seconds across machines.
@@ -151,6 +158,25 @@ def main() -> int:
     check(mc_acc >= 0.55,
           f"softmax3 federated accuracy {mc_acc:.3f} beats the 3-class "
           f"majority baseline")
+
+    # -- chaos transport floors (ISSUE 9) ------------------------------------
+    check(acc.get("chaos_zero_fault_bit_identical") is True,
+          "chaos wrapper at zero faults: model bit-identical to the "
+          "wrapped backend")
+    ch_ovh = acc.get("chaos_zero_fault_overhead_x", float("inf"))
+    check(ch_ovh <= 1.05,
+          f"chaos wrapper at zero faults within 5% of raw warm wall "
+          f"({ch_ovh:.3f}x <= 1.05x)")
+    check(acc.get("chaos_faulty_bit_identical") is True,
+          "chaos faulty run: checksum-verified retransmission keeps the "
+          "model bit-identical to the raw backend")
+    check(acc.get("chaos_faulty_auc_equal_raw") is True,
+          "chaos faulty run: AUC == raw backend exactly")
+    check(acc.get("chaos_faulty_reconciled") is True,
+          "chaos faulty run: measured == predicted incl. the retries phase")
+    check(acc.get("chaos_retry_bytes_gt_0") is True,
+          f"chaos faulty run meters retransmission bytes "
+          f"({acc.get('chaos_retry_bytes', 0)} B > 0)")
 
     # -- sharding + async floors (ISSUE 6) -----------------------------------
     check(acc.get("id_partition_cut_ge_8x") is True,

@@ -14,7 +14,12 @@ Reported:
     (the per-segment-true timings, not the old uniform smear);
   * ``log_line_bytes_mean`` — per-round log-line cost on the wire;
   * ``trace_events`` / ``trace_bytes`` — exported trace size and the
-    schema checks (X events per round, thread_name tracks, counters).
+    schema checks (X events per round, thread_name tracks, counters);
+  * ``faults_injected`` / ``fault_retries`` — a second federated run under
+    a pinned faulty chaos spec + party dropout (DESIGN.md §13): every
+    round line must carry the ``faults`` record (faults_injected /
+    retries / degraded_parties) through ``parse_round_log``, and the
+    Perfetto export must carry the ``faults`` track.
 
     PYTHONPATH=src python -m benchmarks.obs_bench
 """
@@ -76,6 +81,51 @@ def main(smoke: bool = False) -> list:
     assert any(e["ph"] == "M" and e["name"] == "thread_name" for e in events)
     assert any(e["ph"] == "C" for e in events), "liveness counters missing"
 
+    # -- fault telemetry (DESIGN.md §13): chaos + dropout run ----------------
+    # Re-run federated under a seeded faulty chaos spec + party dropout and
+    # assert the per-round fault fields survive the full pipeline: emitted
+    # in the --log-json lines, recovered by parse_round_log, and exported
+    # as the Perfetto "faults" track.  Seeds are pinned so the plan is
+    # deterministic: chaos seed 1 injects >= 1 fault over the 3-slot tree,
+    # dropout seed 0 degrades parties without ever losing a whole round.
+    fault_trace = os.path.join(os.path.dirname(trace_path),
+                               "fault_trace.json")
+    fault_cmd = [
+        sys.executable, "-m", "repro.launch.train_fedgbf",
+        "--dataset", "default_credit_card", "--n", str(min(n, 2_000)),
+        "--rounds", str(rounds), "--eval-every", "2",
+        "--backend", "vfl-histogram", "--parties", "2",
+        "--chaos-drop", "0.2", "--chaos-corrupt", "0.1", "--chaos-seed", "1",
+        "--party-dropout", "0.6", "--dropout-seed", "0", "--retry-max", "1",
+        "--log-json", "--trace", fault_trace,
+    ]
+    fault_env = dict(env)
+    fault_env.setdefault("XLA_FLAGS",
+                         "--xla_force_host_platform_device_count=8")
+    fproc = subprocess.run(fault_cmd, env=fault_env, check=True,
+                           capture_output=True, text=True, cwd=ROOT)
+    frecs = obs_log.parse_round_log(fproc.stdout)
+    assert len(frecs) == rounds, (
+        f"chaos run: expected {rounds} round lines, parsed {len(frecs)}:\n"
+        f"{fproc.stdout}"
+    )
+    assert all("faults" in r for r in frecs), (
+        "every round line of a chaos run must carry the faults record"
+    )
+    assert all({"faults_injected", "retries", "degraded_parties"}
+               <= set(r["faults"]) for r in frecs), (
+        "fault records must carry faults_injected/retries/degraded_parties"
+    )
+    faults_injected = sum(r["faults"]["faults_injected"] for r in frecs)
+    fault_retries = sum(r["faults"]["retries"] for r in frecs)
+    assert faults_injected > 0, "pinned chaos seed must inject faults"
+    assert fault_retries > 0, "injected faults must surface as retries"
+    with open(fault_trace) as f:
+        fdoc = json.load(f)
+    fault_spans = [e for e in fdoc["traceEvents"]
+                   if e["ph"] == "X" and e["name"].startswith("faults ")]
+    assert fault_spans, "Perfetto export must carry the faults track"
+
     results = {
         "rounds": rounds, "n": n,
         "rounds_parsed": len(recs),
@@ -85,6 +135,10 @@ def main(smoke: bool = False) -> list:
         "trace_events": len(events),
         "trace_bytes": os.path.getsize(trace_path),
         "liveness_in_log": all("liveness" in r for r in recs),
+        "fault_rounds_parsed": len(frecs),
+        "faults_injected": faults_injected,
+        "fault_retries": fault_retries,
+        "fault_trace_spans": len(fault_spans),
     }
     save_report("obs_bench", results)
     print(
@@ -92,7 +146,10 @@ def main(smoke: bool = False) -> list:
         f"{len(evaluated)} with metrics), total wall "
         f"{results['total_wall_s']*1e3:.1f} ms\n"
         f"  trace: {len(events)} events, "
-        f"{results['trace_bytes']/1e3:.1f} kB -> ui.perfetto.dev"
+        f"{results['trace_bytes']/1e3:.1f} kB -> ui.perfetto.dev\n"
+        f"  faults: {faults_injected} injected / {fault_retries} retries "
+        f"across {len(frecs)} chaos rounds, {len(fault_spans)} fault "
+        f"spans in the trace"
     )
     return [
         ("obs/log_line", line_bytes,

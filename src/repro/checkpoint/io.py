@@ -9,12 +9,27 @@ FedGBF models persist in the *packed* layout (``save_ensemble`` /
 goes into the json sidecar, so loading needs no example pytree and the
 serving entrypoint can mmap a checkpoint straight into the packed predictor
 (DESIGN.md §3).
+
+Durability contract (DESIGN.md §13): every write lands via temp file +
+``os.replace`` — npz first, sidecar second — so a kill at any instant leaves
+either the previous complete checkpoint or the new complete one, never a
+torn pair.  The sidecar records a sha256 of the npz payload; every load path
+re-hashes the npz and refuses a mismatched or truncated file with a clear
+``ValueError`` instead of deserializing garbage.
+
+``save_train_state`` / ``load_train_state`` persist the boosting resume
+carrier: the packed-ensemble prefix of the completed rounds, the exact
+float32 margin carry (train and optional valid), the RNG key state, and the
+completed-round count + config fingerprint that ``--resume`` validates.
 """
 
 from __future__ import annotations
 
+import hashlib
+import io as io_mod
 import json
 import os
+import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +40,36 @@ from repro.obs import trace as trace_mod
 _BF16 = "bfloat16"
 
 
-def save_pytree(path: str, tree) -> None:
+def _npz_path(path: str) -> str:
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def _meta_path(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".meta.json"
+
+
+def _atomic_write_bytes(path: str, data: bytes) -> None:
+    """Write ``data`` to ``path`` via temp file + rename (same directory, so
+    the replace is atomic on POSIX)."""
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(prefix=os.path.basename(path) + ".", dir=d)
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def save_pytree(path: str, tree, extra_meta: dict | None = None) -> None:
+    """Persist a pytree atomically; ``extra_meta`` merges into the sidecar
+    (written in the SAME json dump, so there is never a second read-modify-
+    rewrite window on the metadata)."""
     leaves, treedef = jax.tree.flatten(tree)
     arrays = {}
     meta = {"treedef": str(treedef), "leaves": []}
@@ -38,20 +82,49 @@ def save_pytree(path: str, tree) -> None:
         arrays[f"leaf_{i}"] = arr
         meta["leaves"].append(entry)
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    np.savez(path + ".npz" if not path.endswith(".npz") else path, **arrays)
-    with open(_meta_path(path), "w") as f:
-        json.dump(meta, f)
+    buf = io_mod.BytesIO()
+    np.savez(buf, **arrays)
+    payload = buf.getvalue()
+    meta["npz_sha256"] = hashlib.sha256(payload).hexdigest()
+    if extra_meta:
+        meta.update(extra_meta)
+    # npz first, sidecar second: a kill between the two leaves a new npz
+    # beside the OLD sidecar, whose stale sha256 makes the load refuse the
+    # pair loudly instead of mixing generations.
+    _atomic_write_bytes(_npz_path(path), payload)
+    _atomic_write_bytes(_meta_path(path), json.dumps(meta).encode())
 
 
 def _load_leaves(path: str, meta: dict) -> list:
-    """Load the npz leaves with dtype restoration (incl. the bf16 view)."""
-    npz = np.load(path + ".npz" if not path.endswith(".npz") else path)
-    leaves = []
-    for i, entry in enumerate(meta["leaves"]):
-        arr = npz[f"leaf_{i}"]
-        if entry["dtype"] == _BF16:
-            arr = arr.view(jnp.bfloat16)
-        leaves.append(jnp.asarray(arr))
+    """Load the npz leaves with dtype restoration (incl. the bf16 view),
+    verifying the sidecar's sha256 before touching the zip structure."""
+    npz_path = _npz_path(path)
+    with open(npz_path, "rb") as f:
+        payload = f.read()
+    want = meta.get("npz_sha256")
+    if want is not None:
+        got = hashlib.sha256(payload).hexdigest()
+        if got != want:
+            raise ValueError(
+                f"checkpoint {npz_path} is corrupt or truncated: npz sha256 "
+                f"{got[:12]}… does not match sidecar {want[:12]}… "
+                f"(file may be from a torn write; re-save the checkpoint)"
+            )
+    try:
+        npz = np.load(io_mod.BytesIO(payload))
+        leaves = []
+        for i, entry in enumerate(meta["leaves"]):
+            arr = npz[f"leaf_{i}"]
+            if entry["dtype"] == _BF16:
+                arr = arr.view(jnp.bfloat16)
+            leaves.append(jnp.asarray(arr))
+    except ValueError:
+        raise
+    except Exception as e:  # zipfile/format errors from a truncated payload
+        raise ValueError(
+            f"checkpoint {npz_path} failed to deserialize ({e!r}); the file "
+            "is corrupt or truncated"
+        ) from e
     return leaves
 
 
@@ -64,9 +137,32 @@ def load_pytree(path: str, like) -> object:
     return jax.tree.unflatten(treedef, leaves)
 
 
-def _meta_path(path: str) -> str:
-    base = path[:-4] if path.endswith(".npz") else path
-    return base + ".meta.json"
+def _packed_meta(aux) -> dict:
+    round_offsets, lr, base, loss, max_depth = aux
+    return {
+        "round_offsets": list(round_offsets),
+        "learning_rate": lr,
+        "base_score": base,
+        "loss": loss,
+        "max_depth": max_depth,
+    }
+
+
+def _packed_aux(pe: dict) -> tuple:
+    return (tuple(pe["round_offsets"]), pe["learning_rate"],
+            pe["base_score"], pe["loss"], pe["max_depth"])
+
+
+def _as_packed(model):
+    from repro.core.types import EnsembleModel, PackedEnsemble, pack_ensemble
+
+    if isinstance(model, EnsembleModel):
+        model = pack_ensemble(model)
+    if not isinstance(model, PackedEnsemble):
+        raise TypeError(
+            f"expected EnsembleModel or PackedEnsemble, got {model!r}"
+        )
+    return model
 
 
 def save_ensemble(path: str, model) -> None:
@@ -76,33 +172,14 @@ def save_ensemble(path: str, model) -> None:
     learning rate, base score, loss, max_depth) goes into the json sidecar
     under ``"packed_ensemble"`` so ``load_ensemble`` is self-describing.
     """
-    from repro.core.types import EnsembleModel, PackedEnsemble, pack_ensemble
-
     # spans on the process-global tracer: checkpoint I/O sits below the
     # drivers, so it cannot be handed a tracer argument (DESIGN.md §12)
     with trace_mod.global_tracer().span("checkpoint.save", cat="io",
                                         args={"path": path}):
-        if isinstance(model, EnsembleModel):
-            model = pack_ensemble(model)
-        if not isinstance(model, PackedEnsemble):
-            raise TypeError(
-                f"expected EnsembleModel or PackedEnsemble, got {model!r}"
-            )
+        model = _as_packed(model)
         leaves, aux = model.tree_flatten()
-        save_pytree(path, list(leaves))
-        round_offsets, lr, base, loss, max_depth = aux
-        meta_path = _meta_path(path)
-        with open(meta_path) as f:
-            meta = json.load(f)
-        meta["packed_ensemble"] = {
-            "round_offsets": list(round_offsets),
-            "learning_rate": lr,
-            "base_score": base,
-            "loss": loss,
-            "max_depth": max_depth,
-        }
-        with open(meta_path, "w") as f:
-            json.dump(meta, f)
+        save_pytree(path, list(leaves),
+                    extra_meta={"packed_ensemble": _packed_meta(aux)})
 
 
 def load_ensemble(path: str):
@@ -119,8 +196,79 @@ def load_ensemble(path: str):
                 "'packed_ensemble' metadata); use load_pytree with an "
                 "example tree"
             )
-        pe = meta["packed_ensemble"]
         leaves = _load_leaves(path, meta)
-        aux = (tuple(pe["round_offsets"]), pe["learning_rate"],
-               pe["base_score"], pe["loss"], pe["max_depth"])
-        return PackedEnsemble.tree_unflatten(aux, tuple(leaves))
+        return PackedEnsemble.tree_unflatten(
+            _packed_aux(meta["packed_ensemble"]), tuple(leaves))
+
+
+def save_train_state(path: str, model, margin, completed_rounds: int,
+                     fingerprint: str, rng_key=None, margin_valid=None,
+                     history: dict | None = None) -> None:
+    """Persist the boosting resume carrier at a segment boundary.
+
+    ``model`` is the ensemble prefix of the completed rounds (packed on
+    write); ``margin``/``margin_valid`` are the exact float32 score carries;
+    ``rng_key`` is the raw PRNG key state; ``fingerprint`` pins the training
+    config so ``--resume`` refuses to continue a different run; ``history``
+    is an optional JSON-serializable dict of the per-round metrics so far
+    (so a resumed process can stitch a full TrainHistory).
+    """
+    with trace_mod.global_tracer().span("checkpoint.save_state", cat="io",
+                                        args={"path": path,
+                                              "rounds": completed_rounds}):
+        model = _as_packed(model)
+        leaves, aux = model.tree_flatten()
+        arrays = list(leaves) + [np.asarray(margin)]
+        if margin_valid is not None:
+            arrays.append(np.asarray(margin_valid))
+        if rng_key is not None:
+            arrays.append(np.asarray(rng_key))
+        state = {
+            "completed_rounds": int(completed_rounds),
+            "config_fingerprint": fingerprint,
+            "n_ensemble_leaves": len(leaves),
+            "has_margin_valid": margin_valid is not None,
+            "has_rng_key": rng_key is not None,
+        }
+        if history is not None:
+            state["history"] = history
+        save_pytree(path, arrays,
+                    extra_meta={"packed_ensemble": _packed_meta(aux),
+                                "train_state": state})
+
+
+def load_train_state(path: str) -> dict:
+    """Load a resume carrier saved by ``save_train_state``.
+
+    Returns ``{"packed", "margin", "margin_valid", "rng_key",
+    "completed_rounds", "config_fingerprint", "history"}``.
+    """
+    from repro.core.types import PackedEnsemble
+
+    with trace_mod.global_tracer().span("checkpoint.load_state", cat="io",
+                                        args={"path": path}):
+        with open(_meta_path(path)) as f:
+            meta = json.load(f)
+        if "train_state" not in meta:
+            raise ValueError(
+                f"{path} is not a train-state checkpoint (missing "
+                "'train_state' metadata)"
+            )
+        state = meta["train_state"]
+        leaves = _load_leaves(path, meta)
+        ne = state["n_ensemble_leaves"]
+        packed = PackedEnsemble.tree_unflatten(
+            _packed_aux(meta["packed_ensemble"]), tuple(leaves[:ne]))
+        rest = [np.asarray(a) for a in leaves[ne:]]
+        margin = rest.pop(0)
+        margin_valid = rest.pop(0) if state["has_margin_valid"] else None
+        rng_key = rest.pop(0) if state["has_rng_key"] else None
+        return {
+            "packed": packed,
+            "margin": margin,
+            "margin_valid": margin_valid,
+            "rng_key": rng_key,
+            "completed_rounds": state["completed_rounds"],
+            "config_fingerprint": state["config_fingerprint"],
+            "history": state.get("history"),
+        }

@@ -70,6 +70,11 @@ class BackendDescriptor:
     # collective.  Payloads and results are bit-identical; only the
     # schedule changes.
     async_exchange: bool = False
+    # Chaos transport (DESIGN.md §13): the frozen ``chaos.ChaosSpec`` when
+    # the level exchange runs under the fault-injecting wrapper, else None.
+    # Carried here for the same reason as ``transport_spec``: byte
+    # accounting must replay the exact fault schedule, never guess it.
+    chaos: Optional[object] = None
 
     @property
     def is_federated(self) -> bool:

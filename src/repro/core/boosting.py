@@ -76,13 +76,20 @@ class TrainHistory:
     rounds: list = field(default_factory=list)    # eval rounds (1-based)
     train: list = field(default_factory=list)     # dict of metrics per eval
     valid: list = field(default_factory=list)
-    n_trees: list = field(default_factory=list)   # per round, length M
-    rho_id: list = field(default_factory=list)    # per round, length M
-    wall_time_s: list = field(default_factory=list)  # per round, length M
+    n_trees: list = field(default_factory=list)   # per executed round
+    rho_id: list = field(default_factory=list)    # per executed round
+    wall_time_s: list = field(default_factory=list)  # per executed round
     engine: str = "loop"
     segments: list = field(default_factory=list)  # measured segment walls
     telemetry: dict = field(default_factory=dict)  # in-graph per-round stats
     overhead_s: float = 0.0                       # scan: wall outside ticks
+    #: resume support (DESIGN.md §13): the 0-based round this (possibly
+    #: partial) history starts at — per-round lists cover rounds
+    #: ``start_round+1 .. start_round+len(n_trees)`` — and the EXACT final
+    #: margin carries (float32), which seed ``init_margin`` on resume.
+    start_round: int = 0
+    final_margin: Optional[np.ndarray] = None
+    final_margin_valid: Optional[np.ndarray] = None
 
     @property
     def total_wall_time_s(self) -> float:
@@ -107,6 +114,11 @@ def train_fedgbf(
     engine: str = "scan",
     tracer=None,
     telemetry: bool = False,
+    round_feature_mask=None,
+    start_round: int = 0,
+    stop_round: Optional[int] = None,
+    init_margin=None,
+    init_margin_valid=None,
 ) -> tuple[EnsembleModel, TrainHistory]:
     """Train (Dynamic) FedGBF. Set min == max on both schedules for static FedGBF.
 
@@ -128,22 +140,60 @@ def train_fedgbf(
     program (``TrainHistory.telemetry``); it is a jit-STATIC flag, so the
     default path compiles the exact same program as before (the 1-compile
     property and its cost are untouched — gated by benchmarks/ci_guard.py).
+
+    Fault tolerance (DESIGN.md §13):
+
+    ``round_feature_mask`` — optional (M, d) bool: round m (1-based row
+    m-1) restricts the split search to its True columns, composed (AND)
+    with the per-tree sampled feature masks.  This is the party-dropout
+    degradation hook: a degraded party's columns go False for the rest of
+    the round, and the result is bit-identical to a run whose sampled
+    masks never contained those candidates.
+
+    ``start_round``/``stop_round`` — train only rounds ``start_round+1 ..
+    stop_round`` (0-based window [start, stop)) of the FULL schedule: the
+    rng stream, sampling masks, schedule arithmetic and eval gating all
+    replay the full-run derivation, so chunked training stitches to a
+    byte-identical ensemble.  ``init_margin``/``init_margin_valid`` seed
+    the boosting carry (the previous chunk's ``history.final_margin``);
+    every history carries its exact final margins for exactly this.
     """
     if cfg.sampling not in ("uniform", "goss"):
         raise ValueError(
             f"unknown sampling {cfg.sampling!r}; options: 'uniform', 'goss'"
         )
+    stop = cfg.rounds if stop_round is None else int(stop_round)
+    start = int(start_round)
+    if not 0 <= start < stop <= cfg.rounds:
+        raise ValueError(
+            f"round window [{start}, {stop}) invalid for cfg.rounds="
+            f"{cfg.rounds}"
+        )
+    if (init_margin is None) != (start == 0):
+        raise ValueError(
+            "init_margin must be given exactly when start_round > 0 "
+            "(it is the previous chunk's final_margin)"
+        )
+    if round_feature_mask is not None:
+        round_feature_mask = np.asarray(round_feature_mask, bool)
+        if round_feature_mask.shape != (cfg.rounds, x.shape[1]):
+            raise ValueError(
+                f"round_feature_mask shape {round_feature_mask.shape} != "
+                f"(rounds, d) = ({cfg.rounds}, {x.shape[1]})"
+            )
     if tracer is None:
         tracer = trace_mod.global_tracer()
     if engine == "scan":
         return _train_scanned(
             x, y, cfg, rng, x_valid, y_valid, backend, eval_every, verbose,
-            tracer, telemetry,
+            tracer, telemetry, round_feature_mask, start, stop,
+            init_margin, init_margin_valid,
         )
     if engine == "loop":
         return _train_loop(
             x, y, cfg, rng, x_valid, y_valid, backend, eval_every, verbose,
-            tracer, telemetry,
+            tracer, telemetry, round_feature_mask, start, stop,
+            init_margin, init_margin_valid,
         )
     raise ValueError(f"unknown engine {engine!r}; options: 'scan', 'loop'")
 
@@ -222,28 +272,40 @@ def _telemetry_dict(tele_np: "np.ndarray", max_depth: int) -> dict:
 def _train_loop(
     x, y, cfg, rng, x_valid, y_valid, backend, eval_every, verbose,
     tracer=trace_mod.NULL_TRACER, telemetry=False,
+    round_feature_mask=None, start_round=0, stop_round=None,
+    init_margin=None, init_margin_valid=None,
 ) -> tuple[EnsembleModel, TrainHistory]:
     """Legacy per-round training loop (the reference baseline)."""
     bk = backend_mod.resolve_backend(backend)
     obj = objective_mod.get_objective(cfg.loss)
     n, d = x.shape
+    start = int(start_round)
+    stop = cfg.rounds if stop_round is None else int(stop_round)
     with tracer.span("binning", cat="train"):
         binned, edges = binning.fit_bin(x, cfg.tree.num_bins)
     y = y.astype(jnp.float32)
 
-    y_hat = obj.init_raw(n, cfg.base_score)
+    # Resume (DESIGN.md §13): replay the rng stream through the skipped
+    # rounds — one split per round, exactly what the loop below draws — so
+    # round m's key is identical whether or not rounds before it ran here.
+    for _ in range(start):
+        rng, _ = jax.random.split(rng)
+    y_hat = (obj.init_raw(n, cfg.base_score) if init_margin is None
+             else jnp.asarray(init_margin))
     y_hat_valid = None
     binned_valid = None
     if x_valid is not None:
         binned_valid = binning.bin_data(x_valid, edges)
-        y_hat_valid = obj.init_raw(x_valid.shape[0], cfg.base_score)
+        y_hat_valid = (obj.init_raw(x_valid.shape[0], cfg.base_score)
+                       if init_margin_valid is None
+                       else jnp.asarray(init_margin_valid))
 
     forests = []
-    history = TrainHistory(engine="loop")
+    history = TrainHistory(engine="loop", start_round=start)
 
     from repro.core import tree as tree_mod  # local to avoid cycle at import
 
-    for m in range(1, cfg.rounds + 1):
+    for m in range(start + 1, stop + 1):
         t0 = time.perf_counter()
         n_trees = dynamic.n_trees_schedule(cfg, m)
         rho_id = dynamic.rho_id_schedule(cfg, m)
@@ -260,6 +322,10 @@ def _train_loop(
             smask, fmask = forest_mod.sample_masks(
                 k_sample, n, d, n_trees, rho_id, cfg.rho_feat
             )
+        if round_feature_mask is not None:
+            # party-dropout degradation: the round's surviving columns,
+            # composed with the sampled masks (DESIGN.md §13)
+            fmask = fmask & jnp.asarray(round_feature_mask[m - 1])[None, :]
         rdr = _root_delta_rows(cfg, n, rho_id)
         with tracer.span(f"round {m}", cat="train",
                          args={"n_trees": n_trees,
@@ -288,8 +354,10 @@ def _train_loop(
             vpred = tree_mod.predict_forest(trees, binned_valid, cfg.tree.max_depth)
             y_hat_valid = y_hat_valid + cfg.learning_rate * vpred
 
-        # Schedule and timing are recorded for EVERY round; only the metric
-        # evals are gated by eval_every.
+        # Schedule and timing are recorded for EVERY executed round; only
+        # the metric evals are gated by eval_every.  The eval condition is
+        # ABSOLUTE (cfg.rounds, not the chunk's stop), so a chunked run
+        # evaluates at exactly the rounds the uninterrupted run does.
         history.n_trees.append(n_trees)
         history.rho_id.append(rho_id)
         history.wall_time_s.append(dt)
@@ -303,6 +371,9 @@ def _train_loop(
                 msg = ", ".join(f"{k}={v:.4f}" for k, v in tr.items())
                 print(f"[round {m:3d}] trees={n_trees} rho_id={rho_id:.2f} {msg}")
 
+    history.final_margin = np.asarray(y_hat)
+    if y_hat_valid is not None:
+        history.final_margin_valid = np.asarray(y_hat_valid)
     model = EnsembleModel(
         forests=tuple(forests),
         learning_rate=cfg.learning_rate,
@@ -374,7 +445,8 @@ def _keep_counts(cfg: FedGBFConfig, n: int) -> "np.ndarray":
     )
 
 
-def _plan_segments(cfg: FedGBFConfig, n: int) -> list:
+def _plan_segments(cfg: FedGBFConfig, n: int, start_round: int = 0,
+                   stop_round: Optional[int] = None) -> list:
     """The scan engine's segment plan: [(width, first_round, n_rounds,
     root_delta_rows), ...] — ONE host-side derivation shared by the compiled
     program and by the history/trace attribution of the segment ticks, so
@@ -387,6 +459,13 @@ def _plan_segments(cfg: FedGBFConfig, n: int) -> list:
     Within an eligible segment the static buffer is the bucketed max of
     its rounds' deltas — surplus rows are weight-0 inert, so differing
     buffer widths between the engines cannot change a single bit.
+
+    Resume (DESIGN.md §13): ``start_round``/``stop_round`` clip the FULL
+    plan to the 0-based round window [start, stop) — segment widths and the
+    per-segment ``root_delta_rows`` are derived from the full schedule
+    first, so a clipped segment keeps the buffer width the uninterrupted
+    run uses (surplus delta-buffer rows are weight-0 inert, so the shared
+    width cannot change a bit; see above).
     """
     sched, _ = dynamic.flat_schedule(cfg)
     n_keep_round = _keep_counts(cfg, n)
@@ -403,13 +482,25 @@ def _plan_segments(cfg: FedGBFConfig, n: int) -> list:
             seg_delta = int(n - n_keep_round[first:first + n_rounds].min())
             rdr = _delta_bucket(max(1, seg_delta), n)
         plan.append((width, first, n_rounds, rdr))
+    start = int(start_round)
+    stop = cfg.rounds if stop_round is None else int(stop_round)
+    if start > 0 or stop < cfg.rounds:
+        clipped = []
+        for width, first, n_rounds, rdr in plan:
+            a, b = max(first, start), min(first + n_rounds, stop)
+            if b > a:
+                clipped.append((width, a, b - a, rdr))
+        plan = clipped
     return plan
 
 
-@partial(jax.jit, static_argnames=("cfg", "bk", "eval_every", "telemetry"))
+@partial(jax.jit, static_argnames=("cfg", "bk", "eval_every", "telemetry",
+                                   "start_round", "stop_round"))
 def _scan_train_program(
     binned, y, binned_valid, y_valid, rng, cfg: FedGBFConfig, bk,
-    eval_every: int, telemetry: bool = False,
+    eval_every: int, telemetry: bool = False, round_mask=None,
+    init_margin=None, init_margin_valid=None, start_round: int = 0,
+    stop_round: Optional[int] = None,
 ):
     """The ONE compiled training program of the scanned engine.
 
@@ -446,9 +537,19 @@ def _scan_train_program(
     Top-level + jitted so a) it is the unit the compile-count benchmark
     inspects via ``_cache_size()``, and b) identical shapes/configs across
     calls reuse the cache.
+
+    Fault tolerance (DESIGN.md §13): ``round_mask`` ((M, d) bool or None)
+    ANDs into every round's sampled feature masks (party-dropout
+    degradation); ``start_round``/``stop_round`` (jit-static) clip the
+    executed segment plan to a round window while the rng stream, mask
+    draws and eval gating replay the FULL schedule, and
+    ``init_margin``/``init_margin_valid`` seed the boosting carry — the
+    final carry is returned so chunked runs hand margins forward exactly.
     """
     from repro.core import tree as tree_mod  # local to avoid cycle at import
 
+    start = int(start_round)
+    stop = cfg.rounds if stop_round is None else int(stop_round)
     n, d = binned.shape
     d_keep = forest_mod.feature_keep_count(d, cfg.rho_feat)
     obj = objective_mod.get_objective(cfg.loss)
@@ -498,6 +599,10 @@ def _scan_train_program(
             )
         else:
             smask, fmask = xs["smask"], xs["fmask"]
+        if round_mask is not None:
+            # party-dropout degradation (DESIGN.md §13): the round's
+            # surviving columns AND into the per-tree sampled masks
+            fmask = fmask & xs["rmask"][None, :]
         trees, per_pred = bk.build_forest_per_tree(
             binned, g, h, smask, fmask, cfg.tree, root_delta_rows=rdr
         )
@@ -525,20 +630,25 @@ def _scan_train_program(
               else (trees, tr_vec, va_vec))
         return (y_hat, y_hat_valid), ys
 
-    y_hat0 = obj.init_raw(n, cfg.base_score)
-    y_hat_valid0 = (
-        obj.init_raw(binned_valid.shape[0], cfg.base_score)
-        if has_valid else None
-    )
+    y_hat0 = (obj.init_raw(n, cfg.base_score) if init_margin is None
+              else init_margin)
+    y_hat_valid0 = None
+    if has_valid:
+        y_hat_valid0 = (
+            obj.init_raw(binned_valid.shape[0], cfg.base_score)
+            if init_margin_valid is None else init_margin_valid
+        )
     carry = (y_hat0, y_hat_valid0)
     offsets = np.concatenate([[0], np.cumsum(sched.n_trees)])
     trees_segs, tr_rows, va_rows, tele_rows = [], [], [], []
     # Segment boundaries + shared-root crossover come from the ONE shared
     # host-side plan (``_plan_segments``) the caller also uses to attribute
-    # the segment ticks back to rounds.
+    # the segment ticks back to rounds.  Under a resume window the plan is
+    # the full schedule's plan clipped to [start, stop) — keys/masks index
+    # by ABSOLUTE round, so every executed round replays its full-run draw.
     _emit_tick(0, y_hat0)
     for seg_idx, (width, first, n_rounds, rdr) in enumerate(
-        _plan_segments(cfg, n)
+        _plan_segments(cfg, n, start, stop)
     ):
         s, e = int(offsets[first]), int(offsets[first + n_rounds])
         xs = {"do_eval": jnp.asarray(do_eval[first:first + n_rounds])}
@@ -549,6 +659,8 @@ def _scan_train_program(
         else:
             xs["smask"] = smask_all[s:e].reshape(n_rounds, width, n)
             xs["fmask"] = fmask_all[s:e].reshape(n_rounds, width, d)
+        if round_mask is not None:
+            xs["rmask"] = round_mask[first:first + n_rounds]
         body = partial(round_body, rdr)
         if n_rounds == 1:
             carry, ys = body(
@@ -563,15 +675,17 @@ def _scan_train_program(
         if telemetry:
             tele_rows.append(ys[3])
         _emit_tick(seg_idx + 1, carry[0])
-    tr_mat = jnp.concatenate(tr_rows)  # (M, len(keys))
+    tr_mat = jnp.concatenate(tr_rows)  # (stop - start, len(keys))
     va_mat = jnp.concatenate(va_rows) if has_valid else None
     tele_mat = jnp.concatenate(tele_rows) if telemetry else None
-    return tuple(trees_segs), tr_mat, va_mat, tele_mat
+    return tuple(trees_segs), tr_mat, va_mat, tele_mat, carry
 
 
 def _train_scanned(
     x, y, cfg, rng, x_valid, y_valid, backend, eval_every, verbose,
     tracer=trace_mod.NULL_TRACER, telemetry=False,
+    round_feature_mask=None, start_round=0, stop_round=None,
+    init_margin=None, init_margin_valid=None,
 ) -> tuple[EnsembleModel, TrainHistory]:
     """Static-shape scanned training engine (DESIGN.md §4).
 
@@ -589,6 +703,8 @@ def _train_scanned(
                         if x_valid is not None else None)
 
     sched = dynamic.schedule_arrays(cfg)
+    start = int(start_round)
+    stop = cfg.rounds if stop_round is None else int(stop_round)
     rounds_idx = np.arange(1, cfg.rounds + 1)
     do_eval = (rounds_idx % eval_every == 0) | (rounds_idx == cfg.rounds)
 
@@ -596,10 +712,17 @@ def _train_scanned(
     t0 = time.perf_counter()
     with tracer.span("scan_program", cat="train",
                      args={"rounds": cfg.rounds, "telemetry": telemetry}):
-        trees_segs, tr_mat, va_mat, tele_mat = _scan_train_program(
+        trees_segs, tr_mat, va_mat, tele_mat, carry = _scan_train_program(
             binned, y, binned_valid,
             None if y_valid is None else jnp.asarray(y_valid),
             rng, cfg, bk, eval_every, telemetry=telemetry,
+            round_mask=(None if round_feature_mask is None
+                        else jnp.asarray(round_feature_mask)),
+            init_margin=(None if init_margin is None
+                         else jnp.asarray(init_margin)),
+            init_margin_valid=(None if init_margin_valid is None
+                               else jnp.asarray(init_margin_valid)),
+            start_round=start, stop_round=stop,
         )
         jax.block_until_ready(trees_segs)
     jax.effects_barrier()  # flush the in-program segment ticks
@@ -622,10 +745,10 @@ def _train_scanned(
             )
     forests = tuple(forests)
 
-    history = TrainHistory(engine="scan")
-    history.n_trees = [int(v) for v in sched.n_trees]
+    history = TrainHistory(engine="scan", start_round=start)
+    history.n_trees = [int(v) for v in sched.n_trees[start:stop]]
     history.rho_id = [dynamic.rho_id_schedule(cfg, m)  # full-precision, as loop
-                      for m in range(1, cfg.rounds + 1)]
+                      for m in range(start + 1, stop + 1)]
     if tele_np is not None:
         history.telemetry = _telemetry_dict(tele_np, cfg.tree.max_depth)
 
@@ -635,7 +758,7 @@ def _train_scanned(
     # docstring for the granularity limit).  Everything the call spent
     # outside the ticks — trace + compile + dispatch — lands in
     # ``overhead_s``, so cold and warm calls stay comparable.
-    plan = _plan_segments(cfg, binned.shape[0])
+    plan = _plan_segments(cfg, binned.shape[0], start, stop)
     # Unordered callbacks fire once per participating device: dedup to the
     # earliest timestamp per segment index, then clamp to monotone (host
     # callback delivery can jitter by microseconds across devices).
@@ -666,27 +789,36 @@ def _train_scanned(
                         cat="train", track="train")
     else:  # ticks unavailable (e.g. a backend without host callbacks):
         # fall back to the uniform smear so the total stays true.
-        history.wall_time_s = [wall / cfg.rounds] * cfg.rounds
-        per = wall / cfg.rounds
+        n_exec = stop - start
+        history.wall_time_s = [wall / n_exec] * n_exec
+        per = wall / n_exec
         for width, first, n_rounds, rdr in plan:
             history.segments.append({
                 "width": width, "first_round": first, "rounds": n_rounds,
                 "root_delta_rows": rdr, "wall_s": per * n_rounds,
-                "t0": t0 + first * per, "t1": t0 + (first + n_rounds) * per,
+                "t0": t0 + (first - start) * per,
+                "t1": t0 + (first - start + n_rounds) * per,
             })
     keys = objective_mod.get_objective(cfg.loss).metric_keys
     for m in np.nonzero(do_eval)[0]:
         m = int(m)
+        if not (start <= m < stop):
+            continue
         history.rounds.append(m + 1)
-        tr = dict(zip(keys, (float(v) for v in tr_np[m])))
+        tr = dict(zip(keys, (float(v) for v in tr_np[m - start])))
         history.train.append(tr)
         if va_np is not None:
-            history.valid.append(dict(zip(keys, (float(v) for v in va_np[m]))))
+            history.valid.append(
+                dict(zip(keys, (float(v) for v in va_np[m - start])))
+            )
         if verbose:
             msg = ", ".join(f"{k}={v:.4f}" for k, v in tr.items())
-            print(f"[round {m + 1:3d}] trees={history.n_trees[m]} "
-                  f"rho_id={history.rho_id[m]:.2f} {msg}")
+            print(f"[round {m + 1:3d}] trees={history.n_trees[m - start]} "
+                  f"rho_id={history.rho_id[m - start]:.2f} {msg}")
 
+    history.final_margin = np.asarray(carry[0])
+    if carry[1] is not None:
+        history.final_margin_valid = np.asarray(carry[1])
     model = EnsembleModel(
         forests=forests,
         learning_rate=cfg.learning_rate,

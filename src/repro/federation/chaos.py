@@ -1,0 +1,259 @@
+"""Chaos transport: seeded fault injection at the level-exchange seam.
+
+Composes over ANY gather the federated backends use (plain, double-buffered
+async, quantized payloads, top-k candidate stacks) and deterministically
+injects faults into the party exchange — dropped (zeroed), bit-corrupted,
+duplicated, and delayed level payloads — while a checksum channel lets the
+receiver *detect* every fault and select the clean retransmission
+(DESIGN.md §13).
+
+Fault model
+-----------
+Each traced exchange — one gather call — is a *slot*.  ``plan_for_slot``
+derives the slot's deterministic fault schedule from ``(spec.seed, slot)``
+with numpy's counter-based generator: up to ``max_retries`` failed attempts
+(drop or corrupt), then one clean transmission, optionally duplicated or
+delayed.  The schedule is pure and host-side, so the *predicted* ledger can
+replay it byte-for-byte (``protocol.wire_retry_bytes``) without touching the
+device program.  By construction the in-graph transport always recovers
+within the retry budget; retry *exhaustion* (true party dropout) is modeled
+one layer up, in ``federation.runtime``, where the degraded party's feature
+candidates leave the split search.
+
+Detection + recovery
+--------------------
+Every transmission ships the sender's 4-byte checksum of its clean local
+payload alongside the (possibly faulted) payload.  The checksum is a
+position-weighted byte sum with odd weights, so ANY single bit flip and any
+zeroed nonzero payload changes it.  The receiver recomputes per-party
+checksums of the gathered result and folds the attempts, taking for every
+party slice the first transmission whose checksum verified.  Because the
+final attempt is clean, the folded result is bit-identical to the fault-free
+gather — faults cost retransmitted bytes and latency, never correctness.
+This is what makes the zero-fault configuration (and, for the training
+output, even the faulty one) exactly the wrapped transport.
+
+Accounting
+----------
+The meter records a ``"retries"`` phase: 4 checksum bytes per transmission
+plus the full payload for every transmission after the first.  With zero
+faults that is exactly 4 bytes per slot (the always-on integrity channel);
+under faults it grows by the replayed payloads.  ``protocol.wire_run_cost``
+reproduces the same arithmetic from the pure plan, so the ledger's
+measured-vs-predicted reconciliation stays exact under retries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: checksum channel width per transmission (uint32 on the wire)
+CHECKSUM_BYTES = 4
+
+_PLAN_STREAM = 7919     # rng stream for fault kinds (shared with the ledger)
+_DETAIL_STREAM = 104729  # rng stream for victims/bit positions (graph only)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosSpec:
+    """Seeded fault-injection configuration (frozen + hashable: it rides in
+    jit-static backend closures exactly like ``TransportSpec``)."""
+
+    drop: float = 0.0      # P(attempt payload zeroed in flight)
+    corrupt: float = 0.0   # P(attempt payload has one bit flipped)
+    dup: float = 0.0       # P(clean transmission duplicated)
+    delay: float = 0.0     # P(clean transmission delayed — event only)
+    seed: int = 0
+    max_retries: int = 3
+
+    def __post_init__(self):
+        for name in ("drop", "corrupt", "dup", "delay"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"chaos {name} rate {v} outside [0, 1]")
+        if self.drop + self.corrupt >= 1.0:
+            raise ValueError("drop + corrupt must be < 1 (a transmission "
+                             "must be able to succeed)")
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+
+    @property
+    def zero_fault(self) -> bool:
+        return (self.drop == 0.0 and self.corrupt == 0.0
+                and self.dup == 0.0 and self.delay == 0.0)
+
+    @property
+    def tag(self) -> str:
+        return (f"chaos(drop={self.drop},corrupt={self.corrupt},"
+                f"dup={self.dup},delay={self.delay},seed={self.seed})")
+
+
+def plan_for_slot(spec: ChaosSpec, slot: int) -> tuple:
+    """Deterministic fault schedule of exchange slot ``slot``.
+
+    Returns ``(fails, final)`` where ``fails`` is a list of failed-attempt
+    kinds (``"drop"`` | ``"corrupt"``, at most ``max_retries``) and
+    ``final`` is the clean transmission's disposition (``"clean"`` |
+    ``"dup"`` | ``"delay"``).  Pure host arithmetic: the ledger replays it.
+    """
+    rng = np.random.default_rng([spec.seed, _PLAN_STREAM, slot])
+    fails = []
+    for _ in range(spec.max_retries):
+        u = rng.random()
+        if u < spec.drop:
+            fails.append("drop")
+        elif u < spec.drop + spec.corrupt:
+            fails.append("corrupt")
+        else:
+            break
+    u = rng.random()
+    final = ("dup" if u < spec.dup
+             else "delay" if u < spec.dup + spec.delay else "clean")
+    return fails, final
+
+
+def slot_details(spec: ChaosSpec, slot: int, num_parties: int,
+                 n_fails: int) -> list:
+    """Victim party and bit position of every failed attempt in a slot —
+    a separate rng stream, so the byte-accounting side never needs them."""
+    rng = np.random.default_rng([spec.seed, _DETAIL_STREAM, slot])
+    return [(int(rng.integers(num_parties)), int(rng.integers(1 << 30)))
+            for _ in range(n_fails)]
+
+
+def transmissions_for_slot(spec: ChaosSpec, slot: int) -> int:
+    fails, final = plan_for_slot(spec, slot)
+    return len(fails) + 1 + (1 if final == "dup" else 0)
+
+
+def plan_summary(spec: ChaosSpec, n_slots: int) -> dict:
+    """Fault events over one traced exchange program (= one boosting round:
+    the round program replays the same slots every round)."""
+    out = {"dropped": 0, "corrupted": 0, "duplicated": 0, "delayed": 0,
+           "retries": 0, "slots": n_slots}
+    for s in range(n_slots):
+        fails, final = plan_for_slot(spec, s)
+        out["dropped"] += sum(1 for k in fails if k == "drop")
+        out["corrupted"] += sum(1 for k in fails if k == "corrupt")
+        out["duplicated"] += 1 if final == "dup" else 0
+        out["delayed"] += 1 if final == "delay" else 0
+        out["retries"] += len(fails) + (1 if final == "dup" else 0)
+    out["faults_injected"] = (out["dropped"] + out["corrupted"]
+                             + out["duplicated"] + out["delayed"])
+    return out
+
+
+def n_slots_per_tree(aggregation: str, max_depth: int) -> int:
+    """Exchange slots one traced forest program enumerates: one histogram
+    gather per level, or three candidate-stack gathers per level (gain,
+    feature, threshold) under argmax/top-k."""
+    return max_depth if aggregation == "histogram" else 3 * max_depth
+
+
+def payload_checksum(x: jnp.ndarray) -> jnp.ndarray:
+    """uint32 checksum of a payload's raw bits: position-weighted byte sum
+    with odd weights, so any single bit flip — and any zeroing of a nonzero
+    payload — changes the value (mod 2^32, odd·2^b ≠ 0 for b < 32)."""
+    u = jax.lax.bitcast_convert_type(x, jnp.uint8).reshape(-1)
+    u = u.astype(jnp.uint32)
+    idx = jnp.arange(u.shape[0], dtype=jnp.uint32)
+    weights = idx * jnp.uint32(2654435761) + jnp.uint32(1)
+    return jnp.sum(u * weights, dtype=jnp.uint32)
+
+
+def _flip_one_bit(x: jnp.ndarray, rand: int) -> jnp.ndarray:
+    """Flip a deterministic bit of ``x``'s raw representation."""
+    u = jax.lax.bitcast_convert_type(x, jnp.uint8)
+    nbytes = int(np.prod(u.shape))
+    pos = rand % (nbytes * 8)
+    mask = np.zeros(nbytes, np.uint8)
+    mask[pos // 8] = np.uint8(1 << (pos % 8))
+    flipped = u.reshape(-1) ^ jnp.asarray(mask)
+    return jax.lax.bitcast_convert_type(flipped.reshape(u.shape), x.dtype)
+
+
+def _per_party_view(g: jnp.ndarray, axis: Optional[int], parties: int):
+    """View the gathered payload as (party, slice): stacked gathers already
+    lead with the party axis; tiled gathers fold it out of ``axis``."""
+    if axis is None:
+        return g, 0
+    shape = g.shape
+    new = (shape[:axis] + (parties, shape[axis] // parties)
+           + shape[axis + 1:])
+    return g.reshape(new), axis
+
+
+class ChaoticGather:
+    """Fault-injecting gather, composable over any base exchange.
+
+    Call-compatible with both seams: ``gather(x, party_axis, axis)`` for the
+    tiled histogram exchange and ``gather(x, party_axis)`` for the stacked
+    top-k candidate exchange.  A trace-time slot counter indexes the fault
+    plan; the backend resets it at every forest-builder entry so each traced
+    program enumerates slots ``0..L-1`` deterministically.
+    """
+
+    def __init__(self, spec: ChaosSpec, base_gather, num_parties: int,
+                 meter=None):
+        self.spec = spec
+        self.base_gather = base_gather
+        self.num_parties = num_parties
+        self.meter = meter
+        self._slot = 0
+
+    def begin_trace(self) -> None:
+        self._slot = 0
+
+    def _base(self, x, party_axis, axis):
+        if axis is None:  # stacked candidate gather (leading party axis)
+            return jax.lax.all_gather(x, party_axis)
+        return self.base_gather(x, party_axis, axis)
+
+    def __call__(self, x, party_axis, axis=None):
+        slot, self._slot = self._slot, self._slot + 1
+        spec, parties = self.spec, self.num_parties
+        fails, final = plan_for_slot(spec, slot)
+        details = slot_details(spec, slot, parties, len(fails))
+
+        me = jax.lax.axis_index(party_axis)
+        chk_clean = payload_checksum(x)
+        gathered, oks = [], []
+        n_tx = len(fails) + 1 + (1 if final == "dup" else 0)
+        for t in range(n_tx):
+            if t < len(fails):
+                victim, rand = details[t]
+                faulted = (jnp.zeros_like(x) if fails[t] == "drop"
+                           else _flip_one_bit(x, rand))
+                sent = jnp.where(me == victim, faulted, x)
+            else:
+                sent = x  # clean transmission (and its duplicate)
+            g = self._base(sent, party_axis, axis)
+            # checksum channel: sender's clean checksum rides every
+            # transmission (4 bytes); the receiver verifies per party slice
+            chk_all = jax.lax.all_gather(chk_clean, party_axis)
+            pv, pax = _per_party_view(g, axis, parties)
+            recomputed = jax.vmap(payload_checksum, in_axes=pax,
+                                  out_axes=0)(pv)
+            gathered.append(g)
+            oks.append(recomputed == chk_all)
+            if self.meter is not None:
+                self.meter.record("retries", chk_all[:1])
+                if t > 0:
+                    self.meter.record("retries", x)
+
+        # fold: per party slice, first transmission whose checksum verified
+        # (the final attempt is clean by construction, so the fold always
+        # lands on verified data — bit-identical to the fault-free gather)
+        result = gathered[-1]
+        for g, ok in zip(reversed(gathered[:-1]), reversed(oks[:-1])):
+            pv_g, pax = _per_party_view(g, axis, parties)
+            pv_r, _ = _per_party_view(result, axis, parties)
+            okb = jnp.expand_dims(
+                ok, tuple(i for i in range(pv_g.ndim) if i != pax))
+            result = jnp.where(okb, pv_g, pv_r).reshape(g.shape)
+        return result

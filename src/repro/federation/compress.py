@@ -120,6 +120,7 @@ def reconciled_ledger(
     shard_samples: bool = False,
     async_exchange: bool = False,
     n_channels: int = 1,
+    chaos=None,
 ):
     """One-call measured-vs-predicted accounting for a training run.
 
@@ -141,7 +142,7 @@ def reconciled_ledger(
     per_tree, grad = probe_tree_cost(
         mesh, tree, aggregation=aggregation, transport=transport,
         n_samples=n_samples, num_features=d, shard_samples=shard_samples,
-        async_exchange=async_exchange, n_channels=n_channels,
+        async_exchange=async_exchange, n_channels=n_channels, chaos=chaos,
     )
     data_shards = 1
     if shard_samples:
@@ -154,7 +155,8 @@ def reconciled_ledger(
         max_active_nodes=tree.max_active_nodes, data_shards=data_shards,
         n_channels=n_channels,
     )
-    ledger = protocol.ProtocolLedger(spec=spec, cfg=cfg, transport=transport)
+    ledger = protocol.ProtocolLedger(spec=spec, cfg=cfg, transport=transport,
+                                     chaos=chaos)
     ledger.record_run(per_tree, grad)
     return ledger
 
@@ -250,6 +252,7 @@ def probe_tree_cost(
     shard_samples: bool = False,
     async_exchange: bool = False,
     n_channels: int = 1,
+    chaos=None,
 ) -> tuple[dict, int]:
     """Measure one tree's actual per-phase wire bytes by abstract evaluation.
 
@@ -276,7 +279,7 @@ def probe_tree_cost(
     backend = vfl.make_vfl_backend(
         mesh, tree, aggregation=aggregation, transport=transport,
         shard_samples=shard_samples, meter=meter,
-        async_exchange=async_exchange,
+        async_exchange=async_exchange, chaos=chaos,
     )
     sds = jax.ShapeDtypeStruct
     # K-channel objectives (DESIGN.md §11) carry (n, K) derivatives; K = 1
@@ -422,13 +425,14 @@ def topk_round_choose_fn(
     k: int,
     party_axis: str = mesh_roles.PARTY_AXIS,
     meter: Optional[MessageMeter] = None,
+    gather: Optional[Callable] = None,
 ):
     """Round-native top-k chooser: the per-tree candidate exchange batched
     over the explicit tree axis (one vmapped gather program — a single
     collective per level in the lowered program).  The lossless party-major
     tie-break contract is untouched: it delegates to ``topk_choose_fn``
     per tree."""
-    per_tree = topk_choose_fn(cfg, k, party_axis, meter)
+    per_tree = topk_choose_fn(cfg, k, party_axis, meter, gather=gather)
     return lambda hist, fmask: jax.vmap(per_tree)(hist, fmask)
 
 
@@ -437,6 +441,7 @@ def topk_choose_fn(
     k: int,
     party_axis: str = mesh_roles.PARTY_AXIS,
     meter: Optional[MessageMeter] = None,
+    gather: Optional[Callable] = None,
 ):
     """Split chooser exchanging each party's k best candidates per node.
 
@@ -447,7 +452,14 @@ def topk_choose_fn(
     gain / ascending-flat-index order (``lax.top_k`` breaks ties toward the
     lower index), so ``argmax``'s first-occurrence rule reproduces the
     centralized tie-break exactly — the mode is lossless for any k ≥ 1.
+
+    ``gather`` is the *stacking* exchange seam (``gather(x, party_axis)``
+    -> leading party axis): the default is a direct ``all_gather``; the
+    chaos transport (DESIGN.md §13) substitutes its fault-injecting,
+    checksum-verified wrapper here.
     """
+    if gather is None:
+        gather = lambda x, pa: jax.lax.all_gather(x, pa)
 
     def fn(hist_local, feature_mask_local):
         num_nodes, d_party, num_bins, _ = hist_local.shape
@@ -464,9 +476,9 @@ def topk_choose_fn(
         if meter is not None:
             for arr in (top_gain, feat, thr):
                 meter.record("split_candidates", arr)
-        gains_all = jax.lax.all_gather(top_gain, party_axis)  # (P, nodes, k)
-        feats_all = jax.lax.all_gather(feat, party_axis)
-        thrs_all = jax.lax.all_gather(thr, party_axis)
+        gains_all = gather(top_gain, party_axis)  # (P, nodes, k)
+        feats_all = gather(feat, party_axis)
+        thrs_all = gather(thr, party_axis)
         num_parties = gains_all.shape[0]
         merge = lambda a: jnp.moveaxis(a, 1, 0).reshape(
             num_nodes, num_parties * k_eff

@@ -219,10 +219,14 @@ class Ledger:
 #: per level: protocol-wise it is the owning party's single message (the
 #: other parties' psum contributions are structurally zero).
 PER_PASSIVE_PHASES = ("grad_broadcast", "histograms", "feature_mask",
-                      "split_candidates")
+                      "split_candidates", "retries")
 
+#: ``retries`` is the chaos transport's integrity + retransmission channel
+#: (DESIGN.md §13): 4 checksum bytes per transmission plus the full payload
+#: for every transmission after the first.  Zero when no chaos wrapper is
+#: active; at zero fault rate it is exactly 4 bytes per exchange slot.
 WIRE_PHASES = ("grad_broadcast", "histograms", "feature_mask",
-               "split_candidates", "id_partition")
+               "split_candidates", "id_partition", "retries")
 
 
 def wire_party_tree_cost(
@@ -236,6 +240,7 @@ def wire_party_tree_cost(
     max_active_nodes: int = 0,
     data_shards: int = 1,
     n_channels: int = 1,
+    chaos=None,
 ) -> dict:
     """Predicted actual bytes ONE party ships to build ONE tree, mirroring
     the shard_map implementation payload-for-payload (the quantity
@@ -289,7 +294,74 @@ def wire_party_tree_cost(
             k = min(k, d_party * num_bins)
             phases["split_candidates"] += nodes * k * (4 + 4 + 4)
         phases["id_partition"] += id_bytes
+    if chaos is not None:
+        phases["retries"] = wire_retry_bytes(
+            chaos, d_party, num_bins, max_depth, aggregation, transport,
+            hist_subtraction, max_active_nodes, n_channels,
+        )
     return phases
+
+
+def _chaos_slot_bytes(
+    d_party: int,
+    num_bins: int,
+    max_depth: int,
+    aggregation: str = "histogram",
+    transport=None,
+    hist_subtraction: bool = False,
+    max_active_nodes: int = 0,
+    n_channels: int = 1,
+) -> list:
+    """Per-SLOT payload bytes of the chaos-wrapped exchange, in the exact
+    order the traced program enumerates its gathers: one histogram gather
+    per level (the quantized int payload only — the scale gather is outside
+    the chaos seam), or three candidate-stack gathers (gain, feature,
+    threshold) per level under argmax/top-k."""
+    kind = "raw" if transport is None else transport.kind
+    gh = 2 * n_channels
+    slots = []
+    if aggregation == "histogram":
+        per_node = (num_bins * gh * transport.bits // 8
+                    if kind == "quantized" else num_bins * (gh + 1) * 4)
+        for level in range(max_depth):
+            nodes = _nodes_sent(level, hist_subtraction, max_active_nodes)
+            slots.append(nodes * d_party * per_node)
+    else:  # argmax: three stacked (nodes, k) gathers of 4-byte lanes
+        k = transport.k if kind == "topk" else 1
+        k = min(k, d_party * num_bins)
+        for level in range(max_depth):
+            nodes = _active_nodes(level, max_active_nodes)
+            slots.extend([nodes * k * 4] * 3)
+    return slots
+
+
+def wire_retry_bytes(
+    chaos,
+    d_party: int,
+    num_bins: int,
+    max_depth: int,
+    aggregation: str = "histogram",
+    transport=None,
+    hist_subtraction: bool = False,
+    max_active_nodes: int = 0,
+    n_channels: int = 1,
+) -> int:
+    """Predicted per-tree ``retries`` bytes under a ``chaos.ChaosSpec``:
+    replay the pure fault plan slot-by-slot and charge 4 checksum bytes per
+    transmission plus the slot payload for every retransmission.  This is
+    the predicted twin of what ``ChaoticGather`` meters, so the ledger's
+    reconciliation stays exact under injected faults (DESIGN.md §13)."""
+    from repro.federation.chaos import CHECKSUM_BYTES, plan_for_slot
+
+    slots = _chaos_slot_bytes(d_party, num_bins, max_depth, aggregation,
+                              transport, hist_subtraction, max_active_nodes,
+                              n_channels)
+    total = 0
+    for s, payload in enumerate(slots):
+        fails, final = plan_for_slot(chaos, s)
+        tx = len(fails) + 1 + (1 if final == "dup" else 0)
+        total += tx * CHECKSUM_BYTES + (tx - 1) * payload
+    return total
 
 
 def wire_hist_level_bytes(
@@ -321,7 +393,8 @@ def wire_hist_level_bytes(
     ]
 
 
-def wire_run_cost(spec: ProtocolSpec, cfg: FedGBFConfig, transport=None) -> dict:
+def wire_run_cost(spec: ProtocolSpec, cfg: FedGBFConfig, transport=None,
+                  chaos=None) -> dict:
     """Predicted actual bytes for a full training run under ``cfg``.
 
     Per-passive-party phases scale by the passive count; ``party_dims`` must
@@ -336,6 +409,7 @@ def wire_run_cost(spec: ProtocolSpec, cfg: FedGBFConfig, transport=None) -> dict
         spec.n_samples, d_party, spec.num_bins, spec.max_depth,
         spec.aggregation, transport, spec.hist_subtraction,
         spec.max_active_nodes, spec.data_shards, spec.n_channels,
+        chaos=chaos,
     )
     grad_per_round = spec.n_samples * 2 * spec.n_channels * 4
     return _assemble_run_cost(per_tree, grad_per_round,
@@ -408,6 +482,7 @@ class ProtocolLedger:
     spec: ProtocolSpec
     cfg: FedGBFConfig
     transport: object = None     # compress.TransportSpec or None (raw)
+    chaos: object = None         # chaos.ChaosSpec or None (no fault wrapper)
     measured: dict = field(default_factory=dict)
     #: the last ``record_run`` probe, kept so per-round views
     #: (``per_round_measured``) are derivable from the ledger alone
@@ -441,7 +516,8 @@ class ProtocolLedger:
 
     def predicted(self) -> dict:
         """Wire-model prediction (actual plaintext payloads)."""
-        return wire_run_cost(self.spec, self.cfg, self.transport)
+        return wire_run_cost(self.spec, self.cfg, self.transport,
+                             chaos=self.chaos)
 
     def predicted_paillier(self) -> ProtocolCosts:
         """Paper-world protocol prediction (Paillier ciphertext rates)."""

@@ -568,6 +568,159 @@ def check_subtraction_hist_cut(num_parties: int, transport) -> None:
           f"{measured[False]} -> {measured[True]} B/tree ({cut:.2f}x)")
 
 
+def _train_named(mesh, tcfg, cfg, x, y, backend_name, **kw):
+    from repro.core.backend import get_backend
+
+    with use_mesh(mesh):
+        bk = get_backend(backend_name, mesh=mesh, tree=tcfg, **kw)
+        model, _ = boosting.train_fedgbf(
+            x, y, cfg, jax.random.PRNGKey(0), backend=bk, engine="scan"
+        )
+    return [np.asarray(l) for l in jax.tree.leaves(model)]
+
+
+def check_chaos(backend_name: str, num_parties: int = 4,
+                n: int = 512) -> None:
+    """Chaos transport equivalence (DESIGN.md §13): the ``-chaos`` twin of a
+    registry backend must train a bit-identical model — under the zero-fault
+    spec (checksums verify but never fire) AND under injected faults (every
+    dropped/corrupted transmission is detected by the payload checksum and
+    recovered from a retransmission, so faults cost only wire bytes, never
+    bits of the result)."""
+    from repro.federation import chaos as chaos_mod
+
+    mesh = jax.make_mesh((1, num_parties), ("data", "model"))
+    tcfg = TreeConfig(max_depth=3, num_bins=16)
+    cfg = FedGBFConfig(rounds=2, n_trees_max=3, n_trees_min=2,
+                       rho_id_min=0.5, rho_id_max=0.8, tree=tcfg)
+    rng = np.random.default_rng(0)
+    d = num_parties * 2
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    y = jnp.asarray((rng.normal(size=n) + x[:, 0] > 0).astype(np.float32))
+
+    base = _train_named(mesh, tcfg, cfg, x, y, backend_name)
+    zero_fault = _train_named(mesh, tcfg, cfg, x, y, backend_name + "-chaos")
+    for a, b in zip(base, zero_fault):
+        assert a.shape == b.shape and (a == b).all(), (
+            f"{backend_name}-chaos (zero-fault) diverged from {backend_name}"
+        )
+    spec = chaos_mod.ChaosSpec(drop=0.10, corrupt=0.05, dup=0.05, seed=7)
+    faulty = _train_named(mesh, tcfg, cfg, x, y, backend_name + "-chaos",
+                          chaos=spec)
+    for a, b in zip(base, faulty):
+        assert (a == b).all(), (
+            f"{backend_name}-chaos under {spec.tag} diverged: a fault "
+            "escaped checksum detection"
+        )
+    print(f"OK chaos bit-identity: {backend_name} (zero-fault AND "
+          f"{spec.tag})")
+
+
+def check_chaos_reconciliation(aggregation: str, transport,
+                               num_parties: int = 4, n: int = 777) -> None:
+    """Under injected faults the ledger must still reconcile EXACTLY: the
+    retried payloads + per-transmission checksums land in the dedicated
+    ``retries`` wire phase on both the measured and predicted side."""
+    from repro.federation import chaos as chaos_mod
+
+    mesh = jax.make_mesh((1, num_parties), ("data", "model"))
+    tcfg = TreeConfig(max_depth=3, num_bins=16)
+    cfg = FedGBFConfig(rounds=3, n_trees_max=4, n_trees_min=2,
+                       rho_id_min=0.2, rho_id_max=0.5)
+    spec = chaos_mod.ChaosSpec(drop=0.10, corrupt=0.05, dup=0.05, seed=7)
+    ledger = compress.reconciled_ledger(
+        mesh, tcfg, cfg, aggregation=aggregation, transport=transport,
+        n_samples=n, num_features=num_parties * 2, chaos=spec,
+    )
+    rec = ledger.reconcile()
+    tag = transport.tag if transport else "raw"
+    assert ledger.matches(), f"chaos {aggregation}/{tag}: {rec}"
+    assert rec["retries"]["measured"] > 0, (
+        f"chaos {aggregation}/{tag}: no retry bytes measured under faults"
+    )
+    print(f"OK chaos reconciliation: {aggregation}/{tag} "
+          f"retries={rec['retries']['measured']}B "
+          f"total={rec['total']['measured']}B (exact match)")
+
+
+def check_degradation(num_parties: int = 4, n: int = 512) -> None:
+    """Party-dropout degradation oracle (DESIGN.md §13): training with a
+    degraded party's columns masked via ``round_feature_mask`` must be
+    bit-identical federated-vs-central (the mask composes with the sampled
+    candidate masks before the exchange), and no tree may split on a
+    degraded column in a masked round."""
+    from repro.core.types import pack_ensemble
+    from repro.federation import runtime
+
+    mesh = jax.make_mesh((1, num_parties), ("data", "model"))
+    tcfg = TreeConfig(max_depth=3, num_bins=16)
+    cfg = FedGBFConfig(rounds=4, n_trees_max=3, n_trees_min=2,
+                       rho_id_min=0.5, rho_id_max=0.8, tree=tcfg)
+    rng = np.random.default_rng(3)
+    d = num_parties * 2
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    y = jnp.asarray((rng.normal(size=n) + x[:, 0] > 0).astype(np.float32))
+
+    sched = runtime.dropout_schedule(0.6, cfg.rounds, num_parties, seed=11,
+                                     policy=runtime.RetryPolicy(max_retries=0))
+    mask = runtime.degradation_masks(sched.degraded, d, num_parties)
+    assert mask is not None and not mask.all(), (
+        "oracle needs at least one degraded (round, party); reseed"
+    )
+    backend = vfl.make_vfl_backend(mesh, tcfg, aggregation="histogram")
+    with use_mesh(mesh):
+        model_f, _ = boosting.train_fedgbf(
+            x, y, cfg, jax.random.PRNGKey(0), backend=backend,
+            round_feature_mask=mask, engine="scan",
+        )
+    model_c, _ = boosting.train_fedgbf(
+        x, y, cfg, jax.random.PRNGKey(0), round_feature_mask=mask,
+        engine="scan",
+    )
+    for a, b in zip(jax.tree.leaves(model_f), jax.tree.leaves(model_c)):
+        assert (np.asarray(a) == np.asarray(b)).all(), (
+            "degraded fed run diverged from the masked-candidate oracle"
+        )
+    # no split on a masked column: walk each round's trees
+    packed = pack_ensemble(model_c)
+    for r in range(packed.rounds):
+        trees_r = packed.round_trees(r)
+        feats = np.asarray(trees_r.feature)
+        gains = np.asarray(trees_r.gain)
+        banned = np.nonzero(~mask[r])[0]
+        hit = np.isin(feats, banned) & (gains > 0)
+        assert not hit.any(), (
+            f"round {r + 1} split on degraded column(s) "
+            f"{np.unique(feats[hit])}"
+        )
+    n_deg = int(sched.degraded.sum())
+    print(f"OK degradation oracle: {n_deg} degraded (round, party) cells, "
+          "fed == masked-candidate central (bit-identical), no banned splits")
+
+
+def chaos_main() -> int:
+    """The §13 slice of the lattice (``--chaos``): chaos twins across the
+    transport x aggregation x async x sharded axes, exact reconciliation
+    under faults, and the party-dropout degradation oracle."""
+    n_dev = len(jax.devices())
+    if n_dev < 4:
+        print(f"need >= 4 devices, got {n_dev} (set XLA_FLAGS)",
+              file=sys.stderr)
+        return 2
+    for name in ("vfl-histogram", "vfl-histogram-q8", "vfl-histogram-q16",
+                 "vfl-argmax", "vfl-argmax-topk", "vfl-histogram-async",
+                 "vfl-histogram-async-q8", "vfl-histogram-sharded"):
+        check_chaos(name)
+    for aggregation, transport in (
+        ("histogram", None), ("histogram", compress.Q8),
+        ("argmax", None), ("argmax", compress.TOPK),
+    ):
+        check_chaos_reconciliation(aggregation, transport)
+    check_degradation()
+    print("ALL CHAOS SELF-TESTS PASSED")
+    return 0
+
+
 def main() -> int:
     n_dev = len(jax.devices())
     if n_dev < 4:
@@ -711,4 +864,7 @@ def main() -> int:
 
 
 if __name__ == "__main__":
-    sys.exit(main())
+    # ``--chaos`` runs ONLY the §13 fault-tolerance slice (chaos twins,
+    # faulty reconciliation, degradation oracle); the default run is the
+    # original lattice, so tier-1 runtime is unchanged.
+    sys.exit(chaos_main() if "--chaos" in sys.argv[1:] else main())

@@ -26,6 +26,7 @@ from repro.core.backend import BackendDescriptor, TreeBackend, register_backend
 from repro.core.types import TreeConfig
 from repro.federation import aggregator, compress, mesh_roles
 from repro.federation import async_exchange as async_mod
+from repro.federation import chaos as chaos_mod
 
 
 def make_vfl_backend(
@@ -37,6 +38,7 @@ def make_vfl_backend(
     transport=None,
     meter=None,
     async_exchange: bool = False,
+    chaos=None,
 ) -> TreeBackend:
     """Construct the vertically-federated TreeBackend (DESIGN.md §1).
 
@@ -67,6 +69,12 @@ def make_vfl_backend(
         logical metered message per level either way.  Histogram
         aggregation only — the argmax/top-k candidate exchange already
         ships small independent gathers.
+      chaos: ``chaos.ChaosSpec`` — wrap the level exchange (whatever base
+        gather the flags above select) in the fault-injecting, checksum-
+        verified chaos transport (DESIGN.md §13).  The recovered result is
+        bit-identical to the wrapped transport even under injected faults;
+        the meter gains a ``"retries"`` phase for the integrity channel +
+        retransmissions.
     """
     cfg = tree
     num_parties = mesh.shape[party_axis]
@@ -79,11 +87,40 @@ def make_vfl_backend(
             "(the argmax candidate exchange is already multi-buffered)"
         )
 
+    # Chaos transport (DESIGN.md §13): ONE stateful wrapper per backend,
+    # composed over whatever base gather the other flags select.  The
+    # forest builders reset its trace-time slot counter at every entry so
+    # each traced program enumerates fault slots 0..L-1 deterministically.
+    chaos_gather = None
+    if chaos is not None:
+        base_gather = (partial(async_mod.double_buffered_gather,
+                               split_axis=-2)
+                       if async_exchange else aggregator.plain_gather)
+        chaos_gather = chaos_mod.ChaoticGather(
+            chaos, base_gather, num_parties, meter=meter
+        )
+
     # Round-native providers (DESIGN.md §9): the tree axis is explicit, so
     # each level's party exchange is ONE collective carrying the whole
     # round's (T, active, d_party, B, ...) payload.
     if aggregation == "histogram":
-        if async_exchange:
+        if chaos_gather is not None:
+            # same provider lattice, with the chaos gather at the seam
+            if transport.kind == "quantized":
+                histogram_fn = compress.quantized_round_histogram_fn(
+                    party_axis, data_axes, transport, meter=meter,
+                    gather=chaos_gather,
+                )
+            elif transport.kind == "raw":
+                histogram_fn = aggregator.federated_round_histogram_fn(
+                    party_axis, data_axes, meter=meter, gather=chaos_gather
+                )
+            else:
+                raise ValueError(
+                    f"transport {transport.kind!r} does not apply to the "
+                    "histogram aggregation (use 'raw' or 'quantized')"
+                )
+        elif async_exchange:
             histogram_fn = async_mod.async_round_histogram_fn(
                 party_axis, data_axes, transport, meter=meter
             )
@@ -107,11 +144,12 @@ def make_vfl_backend(
         histogram_fn = aggregator.local_round_histogram_fn(party_axis, data_axes)
         if transport.kind == "topk":
             choose_fn = compress.topk_round_choose_fn(
-                cfg, transport.k, party_axis, meter=meter
+                cfg, transport.k, party_axis, meter=meter,
+                gather=chaos_gather,
             )
         elif transport.kind == "raw":
             choose_fn = compress.topk_round_choose_fn(
-                cfg, 1, party_axis, meter=meter
+                cfg, 1, party_axis, meter=meter, gather=chaos_gather
             )
         else:
             raise ValueError(
@@ -134,8 +172,12 @@ def make_vfl_backend(
         impl += "-async"
     if transport.kind != "raw":
         impl += f"-{transport.tag}"
+    if shard_samples:
+        impl += "-sharded"
+    if chaos is not None:
+        impl += "-chaos"
     descriptor = BackendDescriptor(
-        impl=impl + ("-sharded" if shard_samples else ""),
+        impl=impl,
         num_parties=num_parties,
         party_axis=party_axis,
         data_axes=data_axes,
@@ -143,6 +185,7 @@ def make_vfl_backend(
         transport=transport.tag,
         transport_spec=None if transport.kind == "raw" else transport,
         async_exchange=async_exchange,
+        chaos=chaos,
     )
     inner = TreeBackend(
         descriptor=descriptor,
@@ -257,6 +300,8 @@ def make_vfl_backend(
     def forest_builder(binned, g, h, sample_mask, feature_mask, _cfg=None,
                        root_delta_rows=0):
         _check(binned, _cfg)
+        if chaos_gather is not None:
+            chaos_gather.begin_trace()
         if meter is not None:
             # The per-round (g, h) broadcast active -> each passive party.
             # Not a collective here (the derivatives enter replicated), so
@@ -274,6 +319,8 @@ def make_vfl_backend(
     def forest_builder_per_tree(binned, g, h, sample_mask, feature_mask,
                                 _cfg=None, root_delta_rows=0):
         _check(binned, _cfg)
+        if chaos_gather is not None:
+            chaos_gather.begin_trace()
         if meter is not None:
             meter.record("grad_broadcast", g)
             meter.record("grad_broadcast", h)
@@ -326,7 +373,7 @@ def make_federated_forest_fn(
 # Compressed-transport variants (DESIGN.md §5) are distinct registry names,
 # not kwargs, so scaling work stays registry factories per DESIGN.md §1.
 def _vfl_factory(aggregation: str, shard_samples: bool, transport=None,
-                 async_exchange: bool = False):
+                 async_exchange: bool = False, chaos_enabled: bool = False):
     def factory(mesh=None, tree=None, **kw):
         if mesh is None or tree is None:
             raise ValueError(
@@ -344,17 +391,29 @@ def _vfl_factory(aggregation: str, shard_samples: bool, transport=None,
                 f"transport= {explicit!r} was passed; drop the kwarg or use "
                 "the matching registry name"
             )
+        chaos = kw.pop("chaos", None)
+        if chaos_enabled:
+            # "-chaos" names default to the zero-fault spec: the wrapper
+            # (checksum channel + selection fold) is live, faults are not.
+            chaos = chaos if chaos is not None else chaos_mod.ChaosSpec()
+        elif chaos is not None:
+            raise ValueError(
+                "chaos= was passed to a non-chaos backend name; use the "
+                "matching '-chaos' registry name (DESIGN.md §13)"
+            )
         return make_vfl_backend(
             mesh, tree, aggregation=aggregation, shard_samples=shard_samples,
             transport=transport if transport is not None else explicit,
-            async_exchange=async_exchange, **kw
+            async_exchange=async_exchange, chaos=chaos, **kw
         )
 
     return factory
 
 
 # The async double-buffered exchange (DESIGN.md §10) is a histogram-mode
-# lever, so only the histogram family grows "-async" names.
+# lever, so only the histogram family grows "-async" names.  Every name in
+# the lattice also grows a "-chaos" twin (DESIGN.md §13): the fault-
+# injecting transport composes over any of them.
 _TRANSPORTS = {
     "histogram": (("", None), ("-q8", compress.Q8), ("-q16", compress.Q16)),
     "argmax": (("", None), ("-topk", compress.TOPK)),
@@ -364,16 +423,18 @@ for _agg, _variants in _TRANSPORTS.items():
         _asyncs = (False, True) if _agg == "histogram" else (False,)
         for _async in _asyncs:
             _name = f"vfl-{_agg}" + ("-async" if _async else "") + _suffix
-            register_backend(
-                _name,
-                _vfl_factory(_agg, shard_samples=False, transport=_transport,
-                             async_exchange=_async),
-            )
-            register_backend(
-                _name + "-sharded",
-                _vfl_factory(_agg, shard_samples=True, transport=_transport,
-                             async_exchange=_async),
-            )
+            for _shard, _sname in ((False, _name), (True, _name + "-sharded")):
+                register_backend(
+                    _sname,
+                    _vfl_factory(_agg, shard_samples=_shard,
+                                 transport=_transport, async_exchange=_async),
+                )
+                register_backend(
+                    _sname + "-chaos",
+                    _vfl_factory(_agg, shard_samples=_shard,
+                                 transport=_transport, async_exchange=_async,
+                                 chaos_enabled=True),
+                )
 
 
 def party_shardings(mesh: Mesh, party_axis: str = mesh_roles.PARTY_AXIS):

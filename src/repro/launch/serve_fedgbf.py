@@ -89,6 +89,17 @@ class StreamMetrics:
             "Mean real-row fraction per microbatch (1 = no padding).")
         self.rows_per_s = r.gauge("fedgbf_serve_rows_per_second",
                                   "Stream throughput over the last run.")
+        self.rows_rejected = r.counter(
+            "fedgbf_serve_rows_rejected_total",
+            "Rows rejected for non-finite (inf) features: scored as NaN, "
+            "never fed to the ensemble (DESIGN.md §13).")
+        self.reloads = r.counter(
+            "fedgbf_serve_reloads_total",
+            "Hot model reloads that passed validation and were swapped in.")
+        self.reload_failures = r.counter(
+            "fedgbf_serve_reload_failures_total",
+            "Hot reloads refused (corrupt checkpoint / failed probe); the "
+            "previous ensemble keeps serving.")
         self.batch_size.set(batch_size)
         self._capacity = batch_size
 
@@ -132,8 +143,20 @@ def score_stream(
     if metrics is None:
         metrics = StreamMetrics(batch_size)
     for start in range(0, n, batch_size):
-        chunk = x[start:start + batch_size]
-        pad = batch_size - chunk.shape[0]
+        chunk = np.array(x[start:start + batch_size], copy=True)
+        real = chunk.shape[0]
+        pad = batch_size - real
+        # Input hardening (DESIGN.md §13): rows carrying inf would silently
+        # bin to the extreme buckets and score as if legitimate — reject
+        # them instead.  They are zeroed before the compiled program (shape
+        # stays static), their scores come back as NaN, and the rejection
+        # lands on ``fedgbf_serve_rows_rejected_total``.  Plain NaN features
+        # are NOT rejected: binning routes them to the reserved missing-value
+        # bin (NAN_BIN), the same semantics training used.
+        bad = np.isinf(chunk).any(axis=1)
+        if bad.any():
+            chunk[bad] = 0.0
+            metrics.rows_rejected.inc(int(bad.sum()))
         if pad:
             chunk = np.concatenate([chunk, np.zeros((pad,) + chunk.shape[1:],
                                                     chunk.dtype)])
@@ -141,13 +164,57 @@ def score_stream(
         scores = jax.block_until_ready(
             _score_batch(packed, jnp.asarray(chunk), impl)
         )
-        metrics.observe_batch(time.perf_counter() - t0, batch_size - pad)
+        metrics.observe_batch(time.perf_counter() - t0, real)
         if out is None:
             out = np.empty((n,) + scores.shape[1:], np.float32)
-        out[start:start + batch_size - pad] = np.asarray(
-            scores[:batch_size - pad]
-        )
+        block = np.asarray(scores[:real])
+        if bad.any():
+            block = block.copy()
+            block[bad] = np.nan
+        out[start:start + real] = block
     return out, metrics
+
+
+class ModelSlot:
+    """Hot-reloadable model holder with validate-before-swap (DESIGN.md §13).
+
+    ``try_reload`` loads a candidate checkpoint (sha256-verified by
+    ``checkpoint.io``), scores a zero probe batch through the serving
+    program, and only THEN swaps it in.  Any failure — missing file,
+    corrupt/truncated npz, checksum mismatch, non-finite probe scores —
+    leaves the previous ensemble serving and increments
+    ``fedgbf_serve_reload_failures_total``; a successful swap increments
+    ``fedgbf_serve_reloads_total``.
+    """
+
+    def __init__(self, packed: PackedEnsemble, impl: str = "packed",
+                 metrics: StreamMetrics = None) -> None:
+        self.packed = packed
+        self.impl = impl
+        self.metrics = metrics
+
+    def _validate(self, packed: PackedEnsemble) -> None:
+        d = packed.bin_edges.shape[0]
+        probe = jnp.zeros((4, d), jnp.float32)
+        scores = np.asarray(_score_batch(packed, probe, self.impl))
+        if not np.isfinite(scores).all():
+            raise ValueError("probe batch produced non-finite scores")
+
+    def try_reload(self, path: str) -> bool:
+        try:
+            candidate = ckpt_io.load_ensemble(path)
+            self._validate(candidate)
+        except (ValueError, OSError) as e:
+            if self.metrics is not None:
+                self.metrics.reload_failures.inc()
+            print(f"reload REFUSED ({path}): {e} — keeping previous model")
+            return False
+        self.packed = candidate
+        if self.metrics is not None:
+            self.metrics.reloads.inc()
+        print(f"reload OK ({path}): {candidate.total_trees} trees / "
+              f"{candidate.rounds} rounds")
+        return True
 
 
 def main() -> None:
@@ -168,6 +235,11 @@ def main() -> None:
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the Prometheus text exposition of the "
                          "stream metrics here ('-' for stdout)")
+    ap.add_argument("--reload", default=None, metavar="PATH",
+                    help="hot-reload this checkpoint before scoring the "
+                         "stream (validate-before-swap: a corrupt or "
+                         "non-finite candidate is refused and the current "
+                         "model keeps serving)")
     args = ap.parse_args()
 
     ds = synthetic.load(args.dataset)
@@ -202,12 +274,18 @@ def main() -> None:
         print(f"requests < batch-size: shrinking microbatch "
               f"{args.batch_size} -> {batch_size}")
 
+    sm = StreamMetrics(batch_size)
+    slot = ModelSlot(packed, args.impl, metrics=sm)
+    if args.reload:
+        slot.try_reload(args.reload)
+
     # Warm-up compiles the single microbatch program (ONE batch, not the
     # whole stream); its metrics are thrown away so the reported histogram
     # covers only steady-state batches.
-    score_stream(packed, requests[:batch_size], batch_size, args.impl)
+    score_stream(slot.packed, requests[:batch_size], batch_size, args.impl)
     t0 = time.perf_counter()
-    scores, sm = score_stream(packed, requests, batch_size, args.impl)
+    scores, sm = score_stream(slot.packed, requests, batch_size, args.impl,
+                              metrics=sm)
     sm.finalize(time.perf_counter() - t0)
     # Quantiles from the log-bucket counts (geometric-midpoint estimate,
     # error bounded by half the bucket growth) — the raw latency list is

@@ -15,20 +15,26 @@ from __future__ import annotations
 import json
 
 
-def round_records(history, per_round_bytes=None) -> list:
+def round_records(history, per_round_bytes=None, faults=None) -> list:
     """One dict per round from a ``TrainHistory`` (+ optional ledger rows).
 
     ``per_round_bytes`` is ``ProtocolLedger.per_round_measured()`` — the
     same rows the trace exporter uses, so log, trace and ledger agree
-    byte-for-byte.
+    byte-for-byte.  ``faults`` is an optional list (one dict per executed
+    round) of fault-runtime counters — ``faults_injected`` / ``retries`` /
+    ``degraded_parties`` (DESIGN.md §13) — attached verbatim under
+    ``"faults"``.  Round numbers are ABSOLUTE: a resumed segment starting at
+    ``history.start_round`` logs rounds ``start_round + 1 ...``, so stitched
+    logs from a killed-and-resumed run line up with an uninterrupted one.
     """
+    base = int(getattr(history, "start_round", 0) or 0)
     eval_at = {m: i for i, m in enumerate(history.rounds)}
     tele = history.telemetry or {}
     recs = []
     for i in range(len(history.n_trees)):
         rec = {
             "event": "round",
-            "round": i + 1,
+            "round": base + i + 1,
             "n_trees": int(history.n_trees[i]),
             "rho_id": round(float(history.rho_id[i]), 6),
             "wall_s": (round(float(history.wall_time_s[i]), 6)
@@ -36,7 +42,7 @@ def round_records(history, per_round_bytes=None) -> list:
             "metrics": None,
             "valid": None,
         }
-        j = eval_at.get(i + 1)
+        j = eval_at.get(base + i + 1)
         if j is not None:
             rec["metrics"] = {k: float(v) for k, v in history.train[j].items()}
             if j < len(history.valid):
@@ -52,14 +58,16 @@ def round_records(history, per_round_bytes=None) -> list:
         if per_round_bytes is not None and i < len(per_round_bytes):
             rec["bytes"] = {k: int(v) for k, v in per_round_bytes[i].items()
                             if v}
+        if faults is not None and i < len(faults) and faults[i]:
+            rec["faults"] = faults[i]
         recs.append(rec)
     return recs
 
 
-def render_round_lines(history, per_round_bytes=None) -> list:
+def render_round_lines(history, per_round_bytes=None, faults=None) -> list:
     """The ``--log-json`` lines: compact one-object-per-line JSON."""
     return [json.dumps(r, separators=(",", ":"))
-            for r in round_records(history, per_round_bytes)]
+            for r in round_records(history, per_round_bytes, faults)]
 
 
 def parse_round_log(text: str) -> list:

@@ -89,34 +89,50 @@ def round_intervals(history) -> list:
     return out
 
 
-def add_training_timeline(tracer, history, per_round_bytes=None) -> None:
+def add_training_timeline(tracer, history, per_round_bytes=None,
+                          faults=None) -> None:
     """Merge a ``TrainHistory`` (and optionally the ledger's per-round wire
     bytes) into ``tracer`` as derived spans + counters.
 
     Per-round spans land on the ``rounds`` track carrying schedule, metric
     and liveness args; each wire phase gets its own ``wire/<phase>`` track
     whose span ``args.bytes`` are exactly ``per_round_bytes`` (i.e. the
-    ledger's own ``protocol.per_round_cost`` rows).
+    ledger's own ``protocol.per_round_cost`` rows).  ``faults`` (optional,
+    one dict per executed round — DESIGN.md §13) adds a ``faults`` track:
+    one span per round that actually saw injected faults, retries, or party
+    degradation, so chaos shows up as a first-class timeline lane.
+
+    Segment anchors carry ABSOLUTE ``first_round``; per-executed-round
+    lists (``n_trees`` etc.) are indexed relative to ``history.start_round``
+    so resumed segments land at their true round numbers.
     """
     tele = history.telemetry or {}
     per_level = tele.get("split_nodes_per_level")
     eval_at = {m: i for i, m in enumerate(history.rounds)}
+    base = int(getattr(history, "start_round", 0) or 0)
     cum: dict = {}
     for i, t0, t1 in round_intervals(history):
+        k = i - base  # executed-round index into the history lists
         args = {
-            "n_trees": int(history.n_trees[i]),
-            "rho_id": round(float(history.rho_id[i]), 6),
+            "n_trees": int(history.n_trees[k]),
+            "rho_id": round(float(history.rho_id[k]), 6),
         }
         if (i + 1) in eval_at:
             args["metrics"] = history.train[eval_at[i + 1]]
-        if per_level is not None and i < len(per_level):
-            args["split_nodes_per_level"] = per_level[i]
+        if per_level is not None and k < len(per_level):
+            args["split_nodes_per_level"] = per_level[k]
             tracer.counter("live_split_nodes",
-                           {"nodes": int(sum(per_level[i]))}, ts=t1)
+                           {"nodes": int(sum(per_level[k]))}, ts=t1)
         tracer.add_span(f"round {i + 1}", t0, t1, cat="round",
                         track="rounds", args=args)
-        if per_round_bytes is not None and i < len(per_round_bytes):
-            for phase, nbytes in per_round_bytes[i].items():
+        if faults is not None and k < len(faults) and faults[k]:
+            fa = faults[k]
+            if (fa.get("faults_injected") or fa.get("retries")
+                    or fa.get("degraded_parties")):
+                tracer.add_span(f"faults r{i + 1}", t0, t1, cat="fault",
+                                track="faults", args=dict(fa))
+        if per_round_bytes is not None and k < len(per_round_bytes):
+            for phase, nbytes in per_round_bytes[k].items():
                 if not nbytes:
                     continue
                 tracer.add_span(phase, t0, t1, cat="wire",

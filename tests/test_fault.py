@@ -1,0 +1,301 @@
+"""Fault-tolerant federation runtime (DESIGN.md §13).
+
+Covers the three pillars end-to-end:
+
+* checkpoint hardening — atomic writes, sha256 sidecar verification,
+  clear errors on truncated or bit-flipped files;
+* chaos transport — deterministic fault plans, checksum detection, and
+  bit-identity of the ``-chaos`` twins (zero-fault AND faulty) via the
+  selftest's multi-device subprocess slice;
+* bit-identical segment resume — a killed-and-resumed training run must
+  produce a byte-identical PackedEnsemble and matching history metrics;
+* party-dropout degradation — the round mask equals the masked-candidate
+  oracle and the runtime schedule is deterministic.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt_io
+from repro.core import boosting
+from repro.core.types import pack_ensemble
+from repro.federation import chaos as chaos_mod
+from repro.federation import runtime
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _toy(n=256, d=8, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    w = rng.normal(size=d)
+    y = (x @ w + 0.3 * rng.normal(size=n) > 0).astype(np.float32)
+    return x, y
+
+
+def _train(x, y, cfg, engine="scan", **kw):
+    return boosting.train_fedgbf(x, y, cfg, jax.random.PRNGKey(42),
+                                 engine=engine, verbose=False, **kw)
+
+
+def _packed_bytes(model) -> bytes:
+    from repro.core.types import PackedEnsemble
+
+    packed = (model if isinstance(model, PackedEnsemble)
+              else pack_ensemble(model))
+    return b"".join(np.ascontiguousarray(np.asarray(l)).tobytes()
+                    for l in jax.tree.leaves(packed))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint hardening
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_truncated_npz_raises(tmp_path):
+    x, y = _toy()
+    cfg = boosting.secureboost_config(rounds=2)
+    model, _ = _train(x, y, cfg)
+    path = str(tmp_path / "ck")
+    ckpt_io.save_ensemble(path, model)
+    npz = path + ".npz"
+    data = open(npz, "rb").read()
+    with open(npz, "wb") as f:  # torn write: half the payload
+        f.write(data[: len(data) // 2])
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        ckpt_io.load_ensemble(path)
+
+
+def test_checkpoint_bit_flip_detected(tmp_path):
+    x, y = _toy()
+    cfg = boosting.secureboost_config(rounds=2)
+    model, _ = _train(x, y, cfg)
+    path = str(tmp_path / "ck")
+    ckpt_io.save_ensemble(path, model)
+    npz = path + ".npz"
+    with open(npz, "r+b") as f:
+        f.seek(100)
+        b = f.read(1)
+        f.seek(100)
+        f.write(bytes([b[0] ^ 0x01]))  # single bit flip
+    with pytest.raises(ValueError, match="sha256"):
+        ckpt_io.load_ensemble(path)
+
+
+def test_checkpoint_roundtrip_and_train_state(tmp_path):
+    x, y = _toy()
+    cfg = boosting.secureboost_config(rounds=3)
+    model, hist = _train(x, y, cfg)
+    path = str(tmp_path / "state")
+    ckpt_io.save_train_state(path, model, margin=hist.final_margin,
+                             completed_rounds=3, fingerprint="fp-1")
+    state = ckpt_io.load_train_state(path)
+    assert state["completed_rounds"] == 3
+    assert state["config_fingerprint"] == "fp-1"
+    np.testing.assert_array_equal(state["margin"], hist.final_margin)
+    assert _packed_bytes(state["packed"]) == _packed_bytes(model)
+
+
+def test_payload_checksum_detects_bit_flip():
+    x = np.linspace(-3, 3, 64, dtype=np.float32).reshape(4, 16)
+    base = int(chaos_mod.payload_checksum(np.asarray(x)))
+    for rand in (0, 137, 999_999_937):
+        flipped = np.asarray(chaos_mod._flip_one_bit(np.asarray(x), rand))
+        assert int(chaos_mod.payload_checksum(flipped)) != base
+    zeroed = np.zeros_like(x)
+    assert int(chaos_mod.payload_checksum(zeroed)) != base
+
+
+def test_chaos_plan_deterministic():
+    spec = chaos_mod.ChaosSpec(drop=0.2, corrupt=0.1, dup=0.1, seed=9)
+    plans = [[chaos_mod.plan_for_slot(spec, s) for s in range(20)]
+             for _ in range(2)]
+    assert plans[0] == plans[1]
+    assert any(fails for fails, _ in plans[0])  # faults actually drawn
+    zero = chaos_mod.ChaosSpec()
+    assert zero.zero_fault
+    assert all(chaos_mod.plan_for_slot(zero, s) == ([], "clean")
+               for s in range(20))
+    with pytest.raises(ValueError):
+        chaos_mod.ChaosSpec(drop=0.7, corrupt=0.5)
+    with pytest.raises(ValueError):
+        chaos_mod.ChaosSpec(drop=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# chaos transport bit-identity + faulty reconciliation (multi-device slice)
+# ---------------------------------------------------------------------------
+
+def test_chaos_selftest_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.federation.selftest", "--chaos"],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "ALL CHAOS SELF-TESTS PASSED" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# bit-identical segment resume
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["loop", "scan"])
+def test_resume_equals_uninterrupted(engine, tmp_path):
+    x, y = _toy(n=200, d=8, seed=1)
+    xv, yv = _toy(n=80, d=8, seed=2)
+    cfg = boosting.secureboost_config(rounds=7, learning_rate=0.3)
+
+    full_model, full_hist = _train(x, y, cfg, engine=engine,
+                                   x_valid=xv, y_valid=yv, eval_every=2)
+
+    # "kill" after round 3: checkpoint the carry through checkpoint.io
+    m1, h1 = _train(x, y, cfg, engine=engine, x_valid=xv, y_valid=yv,
+                    eval_every=2, stop_round=3)
+    path = str(tmp_path / "seg")
+    ckpt_io.save_train_state(path, m1, margin=h1.final_margin,
+                             completed_rounds=3, fingerprint="fp",
+                             margin_valid=h1.final_margin_valid)
+    state = ckpt_io.load_train_state(path)
+    assert state["completed_rounds"] == 3
+
+    # resume from the persisted carry
+    m2, h2 = _train(x, y, cfg, engine=engine, x_valid=xv, y_valid=yv,
+                    eval_every=2, start_round=3,
+                    init_margin=state["margin"],
+                    init_margin_valid=state["margin_valid"])
+
+    from repro.core.types import unpack_ensemble
+
+    prefix = unpack_ensemble(state["packed"])
+    stitched = boosting.EnsembleModel(
+        forests=prefix.forests + m2.forests,
+        learning_rate=m1.learning_rate, base_score=m1.base_score,
+        bin_edges=m1.bin_edges, loss=m1.loss, max_depth=m1.max_depth,
+    )
+    # byte-identical PackedEnsemble
+    assert _packed_bytes(stitched) == _packed_bytes(full_model)
+    # history metrics of the stitched run match the uninterrupted run
+    assert h1.rounds + h2.rounds == full_hist.rounds
+    assert h1.train + h2.train == full_hist.train
+    assert h1.valid + h2.valid == full_hist.valid
+    np.testing.assert_array_equal(h2.final_margin, full_hist.final_margin)
+
+
+def test_resume_argument_validation():
+    x, y = _toy(n=64)
+    cfg = boosting.secureboost_config(rounds=4)
+    with pytest.raises(ValueError, match="start_round"):
+        _train(x, y, cfg, start_round=2)  # resume without a margin carry
+    with pytest.raises(ValueError, match="init_margin"):
+        _train(x, y, cfg, init_margin=np.zeros(64, np.float32))
+    with pytest.raises(ValueError, match="round window"):
+        _train(x, y, cfg, stop_round=9)
+
+
+# ---------------------------------------------------------------------------
+# party-dropout degradation
+# ---------------------------------------------------------------------------
+
+def test_dropout_schedule_deterministic_and_masks():
+    pol = runtime.RetryPolicy(max_retries=2)
+    s1 = runtime.dropout_schedule(0.5, 10, 4, seed=3, policy=pol)
+    s2 = runtime.dropout_schedule(0.5, 10, 4, seed=3, policy=pol)
+    np.testing.assert_array_equal(s1.degraded, s2.degraded)
+    np.testing.assert_array_equal(s1.retries, s2.retries)
+    assert s1.backoff_s == s2.backoff_s
+    # degraded <=> all 1 + max_retries attempts failed
+    assert (s1.retries[s1.degraded] == pol.max_retries).all()
+    mask = runtime.degradation_masks(s1.degraded, d=8, num_parties=4)
+    assert mask is not None and mask.shape == (10, 8)
+    for m in range(10):
+        for p in range(4):
+            cols = mask[m, p * 2:(p + 1) * 2]
+            assert cols.all() != s1.degraded[m, p] or not cols.any()
+    # zero-dropout schedule lowers to None (pre-§13 path untouched)
+    clean = runtime.dropout_schedule(0.0, 10, 4, seed=3, policy=pol)
+    assert runtime.degradation_masks(clean.degraded, 8, 4) is None
+
+
+def test_degradation_equals_masked_candidate_oracle():
+    """A degraded round is bit-identical to a run whose candidate masks
+    never contained the degraded party's columns (single-device oracle;
+    the federated twin of this assertion runs in the --chaos selftest)."""
+    x, y = _toy(n=220, d=8, seed=5)
+    cfg = boosting.secureboost_config(rounds=4)
+    sched = runtime.dropout_schedule(
+        0.6, cfg.rounds, 4, seed=11, policy=runtime.RetryPolicy(max_retries=0))
+    mask = runtime.degradation_masks(sched.degraded, 8, 4)
+    assert mask is not None
+    m_scan, _ = _train(x, y, cfg, engine="scan", round_feature_mask=mask)
+    m_loop, _ = _train(x, y, cfg, engine="loop", round_feature_mask=mask)
+    assert _packed_bytes(m_scan) == _packed_bytes(m_loop)
+    packed = pack_ensemble(m_scan)
+    for r in range(packed.rounds):
+        trees_r = packed.round_trees(r)
+        feats = np.asarray(trees_r.feature)
+        gains = np.asarray(trees_r.gain)
+        banned = np.nonzero(~mask[r])[0]
+        assert not (np.isin(feats, banned) & (gains > 0)).any()
+
+
+def test_retry_policy_backoff():
+    pol = runtime.RetryPolicy(max_retries=4, base_delay_s=0.1, max_delay_s=0.5)
+    assert pol.backoff(0) == pytest.approx(0.1)
+    assert pol.backoff(1) == pytest.approx(0.2)
+    assert pol.backoff(3) == pytest.approx(0.5)  # capped
+    with pytest.raises(ValueError):
+        runtime.RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError):
+        runtime.dropout_schedule(1.0, 5, 2)
+
+
+# ---------------------------------------------------------------------------
+# serving hardening
+# ---------------------------------------------------------------------------
+
+def test_serve_rejects_inf_rows_and_hot_reload(tmp_path):
+    from repro.launch import serve_fedgbf
+
+    x, y = _toy(n=300, d=6, seed=7)
+    cfg = boosting.secureboost_config(rounds=2)
+    model, _ = _train(x, y, cfg)
+    packed = pack_ensemble(model)
+
+    req = x[:64].copy()
+    req[3, 2] = np.inf
+    req[10, 0] = -np.inf
+    req[20, 1] = np.nan  # NaN is a missing value, NOT a rejection
+    scores, sm = serve_fedgbf.score_stream(packed, req, batch_size=32)
+    assert sm.rows_rejected.value == 2
+    assert np.isnan(scores[3]) and np.isnan(scores[10])
+    assert np.isfinite(scores[20])
+    good = np.ones(64, bool)
+    good[[3, 10]] = False
+    assert np.isfinite(scores[good]).all()
+
+    # hot reload: corrupt candidate refused, previous model keeps serving
+    ok_path = str(tmp_path / "ok")
+    ckpt_io.save_ensemble(ok_path, packed)
+    bad_path = str(tmp_path / "bad")
+    ckpt_io.save_ensemble(bad_path, packed)
+    with open(bad_path + ".npz", "r+b") as f:
+        f.seek(64)
+        b = f.read(1)
+        f.seek(64)
+        f.write(bytes([b[0] ^ 0xFF]))
+    slot = serve_fedgbf.ModelSlot(packed, metrics=sm)
+    assert not slot.try_reload(bad_path)
+    assert sm.reload_failures.value == 1
+    assert slot.packed is packed  # previous ensemble still serving
+    assert slot.try_reload(ok_path)
+    assert sm.reloads.value == 1
+    rendered = sm.render()
+    assert "fedgbf_serve_rows_rejected_total 2" in rendered
+    assert "fedgbf_serve_reload_failures_total 1" in rendered

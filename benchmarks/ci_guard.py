@@ -41,6 +41,16 @@ regresses on any of the contracts this repo has already banked:
     of the untraced steady-round time of the SAME bench run (ratio of the
     same run, machine-independent), and the traced variant must itself
     compile exactly 1 program (the telemetry flag is jit-static);
+  * **serving-tier floors** (DESIGN.md §14) — the fused bin+traverse
+    program must beat the two-program (separate bin then traverse)
+    baseline on steady-state rows/s WITHIN the same fresh run (ratio of
+    the same run, machine-independent); the quantized ensembles' measured
+    max margin delta vs the f32 oracle must sit inside the provable
+    ``margin_delta_bound`` at 8 AND 16 bits; and the fused vmap
+    throughput / p99 must stay above the committed rows/s floor and
+    below the committed p99 ceiling in BENCH_serve.json (0.35x / 5x of
+    the banked measurement — wide enough for runner variance, tighter
+    than the cost of silently falling back to the two-program shape);
   * **chaos transport floors** (DESIGN.md §13) — the ``-chaos`` wrapper at
     a zero-fault spec is bit-identical to the wrapped backend and within
     5% of its warm train wall (ratio of the same run); under seeded
@@ -75,16 +85,23 @@ def _load(name: str) -> dict:
 def main() -> int:
     base_train = _load("BENCH_train.json")
     base_comm = _load("BENCH_comm.json")
+    try:
+        base_serve = _load("BENCH_serve.json")
+    except FileNotFoundError:
+        base_serve = {}
 
-    from benchmarks import comm_bench, train_bench
+    from benchmarks import comm_bench, serve_bench, train_bench
 
     print("== ci_guard: re-running train_bench --smoke ==")
     train_bench.main(smoke=True)
     print("== ci_guard: re-running comm_bench --smoke ==")
     comm_bench.main(smoke=True)
+    print("== ci_guard: re-running serve_bench --smoke ==")
+    serve_bench.main(smoke=True)
 
     fresh_train = _load("BENCH_train.json")
     fresh_comm = _load("BENCH_comm.json")
+    fresh_serve = _load("BENCH_serve.json")
 
     failures = []
 
@@ -205,6 +222,34 @@ def main() -> int:
               f"{rows_floor:,.0f}")
     else:
         print("  [--] no committed sharded rows/s floor yet (first run)")
+
+    # -- serving-tier floors (ISSUE 10) --------------------------------------
+    sacc = fresh_serve.get("acceptance", {})
+    sx = sacc.get("fused_vs_two_program_x", 0.0)
+    check(sacc.get("fused_beats_two_program") is True,
+          f"fused bin+traverse beats two-program baseline "
+          f"({sx:.2f}x > 1x, same-run ratio)")
+    check(sacc.get("q8_delta_within_bound") is True,
+          "q8 serving: measured margin delta within the provable bound")
+    check(sacc.get("q16_delta_within_bound") is True,
+          "q16 serving: measured margin delta within the provable bound")
+    sfused = fresh_serve.get("variants", {}).get("fused_f32_vmap", {})
+    srows_floor = base_serve.get("ci", {}).get("fused_rows_per_s_floor")
+    if srows_floor is not None:
+        got_srows = sfused.get("rows_per_s", 0.0)
+        check(got_srows >= srows_floor,
+              f"fused serving rows/s {got_srows:,.0f} >= committed floor "
+              f"{srows_floor:,.0f}")
+    else:
+        print("  [--] no committed serving rows/s floor yet (first run)")
+    sp99_ceil = base_serve.get("ci", {}).get("fused_p99_ceiling_ms")
+    if sp99_ceil is not None:
+        got_p99 = sfused.get("p99_ms", float("inf"))
+        check(got_p99 <= sp99_ceil,
+              f"fused serving p99 {got_p99:.2f}ms <= committed ceiling "
+              f"{sp99_ceil:.2f}ms")
+    else:
+        print("  [--] no committed serving p99 ceiling yet (first run)")
 
     # -- subtraction speedup floor -------------------------------------------
     floor = base_train.get("subtraction", {}).get("speedup_floor")

@@ -24,6 +24,7 @@ def main() -> None:
         predict_bench,
         roofline_report,
         runtime_model,
+        serve_bench,
         train_bench,
     )
 
@@ -33,6 +34,7 @@ def main() -> None:
         ("kernel_bench", kernel_bench),
         ("train_bench", train_bench),
         ("predict_bench", predict_bench),
+        ("serve_bench", serve_bench),
         ("obs_bench", obs_bench),
         ("runtime_model", runtime_model),
         ("paper_tables", paper_tables),

@@ -1,0 +1,195 @@
+"""Serving-tier benchmark (DESIGN.md §14): fused bin+traverse vs the
+two-program baseline, f32 vs quantized, vmap vs Pallas kernel.
+
+Every variant streams the SAME microbatched request loop (pad + dispatch +
+block, latencies into a log-bucket histogram) so the only difference under
+measurement is the serving program structure:
+
+  * ``two_program_f32_vmap`` — the pre-§14 shape: one jitted binning
+    dispatch (``bin_data``) THEN one jitted traversal dispatch per batch;
+  * ``fused_f32_vmap`` / ``fused_q8_vmap`` — ONE program on raw floats
+    (value-space thresholds; quantized leaves dequantize in-graph);
+  * ``fused_f32_pallas`` / ``fused_q8_pallas`` — the fused Pallas
+    ``ensemble_predict`` kernel.  On this CPU container it runs in
+    interpret mode over a reduced row count — a correctness vehicle, NOT
+    representative of TPU throughput (flagged in the banked row).
+
+The quantized section measures the max |margin_q − margin_f32| on the
+request sample against the PROVABLE ``types.margin_delta_bound`` — a
+machine-independent exactness contract ci_guard re-checks in CI.
+
+Results land in reports/serve_bench.json and the repo-root
+BENCH_serve.json with the ci_guard floors (rows/s floor, p99 ceiling).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_report, scale
+from repro.core import binning, boosting, objective as objective_mod
+from repro.core import tree as tree_mod
+from repro.core.types import margin_delta_bound, pack_ensemble, quantize_ensemble
+from repro.launch import serve_fedgbf
+from repro.obs import metrics as obs_metrics
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _stream(fn, x: np.ndarray, batch: int, repeats: int) -> dict:
+    """Steady-state stream measurement: rows/s (best full-stream wall over
+    ``repeats``) + p50/p99 from the accumulated latency histogram."""
+    n = x.shape[0]
+    hist = obs_metrics.LogBucketHistogram("lat", lo=1e-6, hi=60.0)
+    jax.block_until_ready(fn(jnp.asarray(x[:batch])))  # warm/compile
+    best_wall = float("inf")
+    for _ in range(repeats):
+        wall0 = time.perf_counter()
+        for start in range(0, n, batch):
+            chunk = x[start:start + batch]
+            if chunk.shape[0] < batch:
+                chunk = np.concatenate(
+                    [chunk, np.zeros((batch - chunk.shape[0],) + x.shape[1:],
+                                     x.dtype)])
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(jnp.asarray(chunk)))
+            hist.observe(time.perf_counter() - t0)
+        best_wall = min(best_wall, time.perf_counter() - wall0)
+    return {
+        "rows_per_s": n / best_wall,
+        "p50_ms": hist.quantile(0.5) * 1e3,
+        "p99_ms": hist.quantile(0.99) * 1e3,
+        "batches": hist.count,
+    }
+
+
+def main(smoke: bool = False) -> list:
+    quick = scale() == "quick"
+    if smoke:
+        n_train, n_serve, rounds, batch = 4_000, 32_768, 6, 1024
+        n_pallas, repeats = 2_048, 2
+    elif quick:
+        n_train, n_serve, rounds, batch = 8_000, 131_072, 10, 1024
+        n_pallas, repeats = 4_096, 3
+    else:
+        n_train, n_serve, rounds, batch = 30_000, 1_048_576, 20, 4096
+        n_pallas, repeats = 8_192, 3
+    d = 23
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(n_train, d)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 2, n_train), jnp.float32)
+    cfg = boosting.dynamic_fedgbf_config(rounds=rounds)
+    model, _ = boosting.train_fedgbf(x, y, cfg, jax.random.PRNGKey(0))
+    packed = pack_ensemble(model)
+    q8 = quantize_ensemble(packed, bits=8, key=jax.random.PRNGKey(1))
+    q16 = quantize_ensemble(packed, bits=16, key=jax.random.PRNGKey(1))
+
+    requests = rng.normal(size=(n_serve, d)).astype(np.float32)
+    act = objective_mod.get_objective(packed.loss).activation
+
+    # the two-program baseline: serve-time binning as its OWN dispatch,
+    # then the binned traversal — what serving looked like before §14
+    bin_prog = jax.jit(lambda xb: binning.bin_data(xb, packed.bin_edges))
+    trav_prog = jax.jit(
+        lambda b: act(tree_mod.predict_packed_weighted(packed, b)))
+
+    def two_program(xb):
+        return trav_prog(bin_prog(xb))
+
+    variants = {
+        "two_program_f32_vmap": (two_program, requests),
+        "fused_f32_vmap": (
+            lambda xb: serve_fedgbf._score_batch(packed, xb, "fused"),
+            requests),
+        "fused_q8_vmap": (
+            lambda xb: serve_fedgbf._score_batch(q8, xb, "fused"),
+            requests),
+        # interpret-mode Pallas on CPU: reduced rows, correctness vehicle
+        "fused_f32_pallas": (
+            lambda xb: serve_fedgbf._score_batch(packed, xb, "fused-pallas"),
+            requests[:n_pallas]),
+        "fused_q8_pallas": (
+            lambda xb: serve_fedgbf._score_batch(q8, xb, "fused-pallas"),
+            requests[:n_pallas]),
+    }
+    on_tpu = jax.default_backend() == "tpu"
+    results, rows = {}, []
+    for name, (fn, req) in variants.items():
+        pallas = name.endswith("pallas")
+        b = min(batch, req.shape[0])
+        r = _stream(fn, req, b, repeats)
+        r["requests"] = int(req.shape[0])
+        r["batch_size"] = b
+        if pallas:
+            r["interpret"] = not on_tpu
+        results[name] = r
+        note = "interpret-mode, not TPU-representative" if pallas and not on_tpu \
+            else f"{r['rows_per_s']:,.0f} rows/s"
+        print(f"  {name}: {r['rows_per_s']:,.0f} rows/s "
+              f"p50={r['p50_ms']:.2f}ms p99={r['p99_ms']:.2f}ms")
+        rows.append((f"serve/{name}",
+                     r["p50_ms"] * 1e3,
+                     note))
+
+    # quantized accuracy: measured max margin delta vs the provable bound
+    sample = jnp.asarray(requests[:min(n_serve, 16_384)])
+    m32 = boosting.predict(packed, sample, impl="fused")
+    quant = {}
+    for tag, qe in (("bits8", q8), ("bits16", q16)):
+        mq = boosting.predict(qe, sample, impl="fused")
+        delta = float(jnp.max(jnp.abs(mq - m32)))
+        bound = margin_delta_bound(qe)
+        quant[tag] = {"margin_delta": delta, "margin_bound": bound,
+                      "within_bound": delta <= bound}
+        print(f"  quantized {tag}: max margin delta {delta:.3e} "
+              f"<= bound {bound:.3e}: {delta <= bound}")
+
+    fused = results["fused_f32_vmap"]
+    two = results["two_program_f32_vmap"]
+    speedup = fused["rows_per_s"] / two["rows_per_s"]
+    acceptance = {
+        "fused_vs_two_program_x": speedup,
+        "fused_beats_two_program": speedup > 1.0,
+        "q8_delta_within_bound": quant["bits8"]["within_bound"],
+        "q16_delta_within_bound": quant["bits16"]["within_bound"],
+    }
+    print(f"  fused vs two-program: {speedup:.2f}x "
+          f"({'OK' if speedup > 1.0 else 'REGRESSION'})")
+    rows.append(("serve/fused_vs_two_program", 0.0, f"{speedup:.2f}x"))
+
+    payload = {
+        "scale": "smoke" if smoke else scale(),
+        "requests": n_serve,
+        "batch_size": batch,
+        "rounds": rounds,
+        "total_trees": int(packed.total_trees),
+        "variants": results,
+        "quantized": quant,
+        "acceptance": acceptance,
+        # conservative machine-crossing floors (ci_guard): a fresh smoke run
+        # must keep >= 35% of the banked fused throughput and stay under 5x
+        # the banked p99 — wide enough for CI-runner variance, tight enough
+        # to catch a serving-path regression (e.g. a silent fallback to the
+        # two-program shape, which alone costs more than the slack)
+        "ci": {
+            "fused_rows_per_s_floor": 0.35 * fused["rows_per_s"],
+            "fused_p99_ceiling_ms": 5.0 * fused["p99_ms"],
+        },
+    }
+    save_report("serve_bench", payload)
+    with open(os.path.join(ROOT, "BENCH_serve.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(0 if main(smoke="--smoke" in sys.argv) is not None else 1)

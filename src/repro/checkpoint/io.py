@@ -166,16 +166,29 @@ def _as_packed(model):
 
 
 def save_ensemble(path: str, model) -> None:
-    """Persist a FedGBF model (EnsembleModel or PackedEnsemble) packed.
+    """Persist a FedGBF model packed (or quantized, DESIGN.md §14).
 
     Array leaves go to the npz; the pytree's static aux data (round offsets,
     learning rate, base score, loss, max_depth) goes into the json sidecar
     under ``"packed_ensemble"`` so ``load_ensemble`` is self-describing.
+    A ``QuantizedEnsemble`` persists its int8/int16 tables verbatim under a
+    ``"quantized_ensemble"`` sidecar instead — the checkpoint at rest is as
+    small as the serving tables, and ``load_ensemble`` hands back the same
+    type it was given.
     """
+    from repro.core.types import QuantizedEnsemble
+
     # spans on the process-global tracer: checkpoint I/O sits below the
     # drivers, so it cannot be handed a tracer argument (DESIGN.md §12)
     with trace_mod.global_tracer().span("checkpoint.save", cat="io",
                                         args={"path": path}):
+        if isinstance(model, QuantizedEnsemble):
+            leaves, aux = model.tree_flatten()
+            meta = _packed_meta(aux[1:])
+            meta["bits"] = int(aux[0])
+            save_pytree(path, list(leaves),
+                        extra_meta={"quantized_ensemble": meta})
+            return
         model = _as_packed(model)
         leaves, aux = model.tree_flatten()
         save_pytree(path, list(leaves),
@@ -183,13 +196,19 @@ def save_ensemble(path: str, model) -> None:
 
 
 def load_ensemble(path: str):
-    """Load a packed FedGBF checkpoint; returns a PackedEnsemble."""
-    from repro.core.types import PackedEnsemble
+    """Load an ensemble checkpoint; returns a ``PackedEnsemble`` or — for a
+    ``"quantized_ensemble"`` sidecar — a ``QuantizedEnsemble``."""
+    from repro.core.types import PackedEnsemble, QuantizedEnsemble
 
     with trace_mod.global_tracer().span("checkpoint.load", cat="io",
                                         args={"path": path}):
         with open(_meta_path(path)) as f:
             meta = json.load(f)
+        if "quantized_ensemble" in meta:
+            qe = meta["quantized_ensemble"]
+            leaves = _load_leaves(path, meta)
+            return QuantizedEnsemble.tree_unflatten(
+                (int(qe["bits"]),) + _packed_aux(qe), tuple(leaves))
         if "packed_ensemble" not in meta:
             raise ValueError(
                 f"{path} is not a packed-ensemble checkpoint (missing "

@@ -904,17 +904,44 @@ def predict(
     Routed through the ``PackedEnsemble`` layout (DESIGN.md §3): one
     traversal of all trees instead of an O(rounds) Python loop.  ``impl``:
 
-      ``"packed"``    single vmapped traversal, exact per-round combiner
-                      (bit-for-bit equal to the legacy loop) — the default;
-      ``"weighted"``  single-pass tree_scale combiner (serving fast path);
-      ``"pallas"``    the fused Pallas ``ensemble_predict`` kernel;
-      ``"loop"``      the legacy per-round loop (kept for benchmarks).
+      ``"packed"``        single vmapped traversal, exact per-round combiner
+                          (bit-for-bit equal to the legacy loop) — default;
+      ``"weighted"``      single-pass tree_scale combiner;
+      ``"pallas"``        the Pallas ``ensemble_predict`` kernel on binned
+                          inputs;
+      ``"fused"``         serve-time binning fused INTO the traversal
+                          (DESIGN.md §14): raw floats compare against
+                          value-space thresholds, no separate binning
+                          dispatch — leaf-routing-identical to binning +
+                          ``"weighted"``;
+      ``"fused-pallas"``  the fused path as one Pallas kernel sweep;
+      ``"loop"``          the legacy per-round loop (kept for benchmarks).
+
+    A ``QuantizedEnsemble`` (DESIGN.md §14) serves natively on the fused
+    impls (leaf table dequantized in-graph); the binned impls widen it to
+    the f32 packed layout first.
     """
     from repro.core import tree as tree_mod
+    from repro.core.types import QuantizedEnsemble, dequantize_ensemble
 
     if impl == "loop":
+        if isinstance(model, QuantizedEnsemble):
+            model = dequantize_ensemble(model)
         return predict_loop(model, x)
-    packed = model if isinstance(model, PackedEnsemble) else _packed_for(model)
+    if isinstance(model, (PackedEnsemble, QuantizedEnsemble)):
+        packed = model
+    else:
+        packed = _packed_for(model)
+    if impl == "fused":
+        return tree_mod.predict_packed_fused(packed, x)
+    if impl == "fused-pallas":
+        from repro.kernels.ensemble_predict.ops import (
+            predict_packed_fused_pallas,
+        )
+
+        return predict_packed_fused_pallas(packed, x)
+    if isinstance(packed, QuantizedEnsemble):
+        packed = dequantize_ensemble(packed)
     binned = binning.bin_data(x, packed.bin_edges)
     if impl == "packed":
         return tree_mod.predict_packed(packed, binned)

@@ -71,6 +71,37 @@ def route_local(binned: jnp.ndarray, assign: jnp.ndarray, decision) -> jnp.ndarr
     return traverse_level(binned, assign, decision.feature, decision.threshold)
 
 
+def traverse_level_values(
+    x: jnp.ndarray,
+    idx: jnp.ndarray,
+    feature: jnp.ndarray,
+    thr_value: jnp.ndarray,
+) -> jnp.ndarray:
+    """Raw-float twin of ``traverse_level`` — the fused bin+traverse body.
+
+    ``types.float_thresholds`` rewrites bin-space thresholds into value
+    space (``bin(v) <= t  <=>  v <= edges[f, t]``), so serving compares the
+    raw feature float directly and the separate binning dispatch disappears.
+    NaN features route left (``NaN > thr`` is False) — exactly the reserved
+    ``binning.NAN_BIN = 0`` semantics; ±inf compares past every finite edge,
+    matching the extreme bins.  Leaf routing is bit-identical to binning
+    followed by ``traverse_level``.
+
+    Args:
+      x: (n, d) float32 RAW features (not binned).
+      idx: (n,) int32 within-level node index.
+      feature: (width,) int32; thr_value: (width,) float32 value-space.
+    Returns:
+      (n,) int32 next-level node index.
+    """
+    rows = jnp.arange(x.shape[0])
+    f = feature[idx]
+    t = thr_value[idx]
+    fv = x[rows, jnp.clip(f, 0, None)]
+    go_right = (f >= 0) & (fv > t)
+    return idx * 2 + go_right.astype(jnp.int32)
+
+
 def traverse_level_round(
     binned: jnp.ndarray,
     idx: jnp.ndarray,
@@ -504,5 +535,67 @@ def predict_packed_weighted(packed: PackedEnsemble, binned: jnp.ndarray) -> jnp.
                  dtype=jnp.float32),
         (packed.feature, packed.threshold, packed.leaf_weight,
          packed.tree_scale),
+    )
+    return out
+
+
+def predict_tree_values(
+    x: jnp.ndarray,
+    feature: jnp.ndarray,
+    thr_value: jnp.ndarray,
+    leaf: jnp.ndarray,
+    max_depth: int,
+) -> jnp.ndarray:
+    """``predict_tree`` on RAW floats via the value-space threshold table.
+
+    Args:
+      x: (n, d) float32 raw features.
+      feature: (num_internal,) int32; thr_value: (num_internal,) float32.
+      leaf: (num_leaves[, K]) float32.
+    Returns:
+      (n[, K]) float32 leaf values — leaf-index-identical to binning + the
+      bin-space ``predict_tree``.
+    """
+    n = x.shape[0]
+    idx = jnp.zeros(n, dtype=jnp.int32)
+    for level in range(max_depth):
+        offset = 2**level - 1
+        width = 2**level
+        idx = traverse_level_values(
+            x, idx,
+            feature[offset:offset + width],
+            thr_value[offset:offset + width],
+        )
+    return leaf[idx]
+
+
+def predict_packed_fused(model, x: jnp.ndarray) -> jnp.ndarray:
+    """Fused bin+traverse serving margin: ONE program on raw floats.
+
+    The scan structure mirrors ``predict_packed_weighted`` — streaming
+    ``base + sum_t tree_scale[t] * tree_t(x)`` accumulation, one compiled
+    tree body — but the per-sample binning pass (a ``searchsorted`` over
+    every feature column) is gone: thresholds were rewritten into value
+    space once at table-build time (``types.serving_tables``).  Accepts a
+    ``PackedEnsemble`` or a ``QuantizedEnsemble`` (leaf table dequantized
+    in-graph).  Leaf routing, and therefore the margin, is bit-identical to
+    ``bin_data`` + ``predict_packed_weighted`` for every input, including
+    NaN (routes left, the NAN_BIN semantics) and ±inf rows.
+    """
+    from repro.core.types import serving_tables
+
+    feature, thr_value, leaf, tree_scale = serving_tables(model)
+    n = x.shape[0]
+
+    def body(out, xs):
+        f, t, lw, scale = xs
+        return out + scale * predict_tree_values(
+            x, f, t, lw, model.max_depth
+        ), None
+
+    out, _ = jax.lax.scan(
+        body,
+        jnp.full(_margin_shape(n, leaf), model.base_score, dtype=jnp.float32),
+        (feature, thr_value, leaf, tree_scale),
     )
     return out

@@ -267,3 +267,216 @@ def unpack_ensemble(packed: PackedEnsemble) -> EnsembleModel:
         loss=packed.loss,
         max_depth=packed.max_depth,
     )
+
+
+# ---------------------------------------------------------------------------
+# Serving tables: fused bin+traverse + the quantized ensemble variant
+# (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+#: Sentinel threshold for unsplit nodes in the VALUE-space threshold table.
+#: Finite (float32 max) rather than +inf: the Pallas traversal reads node
+#: params through one-hot contractions, and ``0 * inf = NaN`` would poison
+#: the selected lane.  Any real feature value (post-sanitization) compares
+#: ``<= FLOAT_MAX``, so the node routes every sample left — the same
+#: semantics as the bin-space ``threshold == num_bins`` sentinel.
+FLOAT_MAX = float(jnp.finfo(jnp.float32).max)
+
+
+def float_thresholds(feature: jnp.ndarray, threshold: jnp.ndarray,
+                     bin_edges: jnp.ndarray) -> jnp.ndarray:
+    """Value-space split thresholds for the fused bin+traverse serving path.
+
+    Training stores bin-space thresholds: go left iff ``bin(v) <= t`` where
+    ``bin(v) = searchsorted(edges, v, side="left")`` counts edges strictly
+    below ``v``.  That predicate is *exactly* ``v <= edges[f, t]`` (including
+    duplicate edges and values landing exactly on an edge), so serving can
+    compare raw floats against ``edges[feature, threshold]`` and skip the
+    binning pass entirely — one program instead of two, bit-identical leaf
+    routing.  Valid split thresholds satisfy ``t <= B - 2`` (``split.py``:
+    ``t == B - 1`` sends everything left and is never chosen), so the gather
+    is always in range; unsplit nodes (``feature == -1`` / ``t == B``) get
+    the ``FLOAT_MAX`` route-left sentinel.
+
+    Args:
+      feature / threshold: (T, I) int32 packed node tables.
+      bin_edges: (d, B - 1) float32 training quantile edges.
+    Returns:
+      (T, I) float32 value-space thresholds.
+    """
+    num_bins = bin_edges.shape[1] + 1
+    t = jnp.clip(threshold, 0, num_bins - 2)
+    vals = bin_edges[jnp.clip(feature, 0, None), t]
+    is_split = (feature >= 0) & (threshold <= num_bins - 2)
+    return jnp.where(is_split, vals, FLOAT_MAX).astype(jnp.float32)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QuantizedEnsemble:
+    """int8/int16 serving variant of ``PackedEnsemble`` (DESIGN.md §14).
+
+    The numeric tables shrink the way SecureBoost+ packs its GBDT wire
+    payloads: *structure* stays lossless, only *leaf values* are lossy.
+
+      * ``feature`` narrows to int16 and ``threshold`` to int8/int16 —
+        LOSSLESS: thresholds are bin ids in ``[0, num_bins]`` and features
+        are column ids, both exactly representable (asserted on quantize);
+      * ``leaf_q`` is the leaf table stochastically rounded through
+        ``federation.compress.quantize_stats`` with one ``leaf_scale`` per
+        tree (per channel when the table is K-wide) — the same unbiased
+        floor(x/s + u) machinery the VFL histogram wire uses;
+      * the gain table is dropped (serving never reads it).
+
+    Because routing is bit-identical to the f32 oracle, the only score error
+    is the leaf rounding, which gives the *provable* margin bound of
+    ``margin_delta_bound``: ``|margin_q - margin_f32| <=
+    sum_t tree_scale[t] * leaf_scale[t]`` (each leaf is off by < 1 quantum).
+
+    Registered as a pytree (arrays = leaves, the rest static aux) so it
+    passes straight through ``jax.jit`` serving and ``checkpoint.io``.
+    """
+
+    feature: jnp.ndarray      # (total_trees, num_internal) int16
+    threshold: jnp.ndarray    # (total_trees, num_internal) int8/int16
+    leaf_q: jnp.ndarray       # (total_trees, num_leaves[, K]) int8/int16
+    leaf_scale: jnp.ndarray   # (total_trees,[ K]) float32 per-tree quantum
+    tree_scale: jnp.ndarray   # (total_trees,) float32 = lr / n_trees(round)
+    bin_edges: jnp.ndarray    # (d, num_bins - 1) float32 training edges
+    bits: int                 # static: 8 or 16
+    round_offsets: tuple
+    learning_rate: float
+    base_score: float
+    loss: str
+    max_depth: int
+
+    @property
+    def rounds(self) -> int:
+        return len(self.round_offsets) - 1
+
+    @property
+    def total_trees(self) -> int:
+        return int(self.round_offsets[-1])
+
+    def tree_flatten(self):
+        leaves = (self.feature, self.threshold, self.leaf_q,
+                  self.leaf_scale, self.tree_scale, self.bin_edges)
+        aux = (self.bits, self.round_offsets, self.learning_rate,
+               self.base_score, self.loss, self.max_depth)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+
+def quantize_ensemble(packed: PackedEnsemble, bits: int = 8,
+                      key=None, stochastic: bool = True) -> QuantizedEnsemble:
+    """Quantize a packed ensemble for serving (int8/int16 tables).
+
+    Reuses ``federation.compress.quantize_stats`` for the leaf table
+    (stochastic rounding by default; ``key`` defaults to PRNGKey(0) so the
+    call is deterministic unless the caller varies it).  Thresholds and
+    features round-trip exactly — a narrowing that loses a single id raises
+    instead of serving a silently different model.
+    """
+    from repro.federation import compress  # local: compress imports types
+
+    if bits not in (8, 16):
+        raise ValueError(f"bits must be 8 or 16, got {bits}")
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    num_bins = packed.bin_edges.shape[1] + 1
+    thr_dtype = jnp.int8 if num_bins <= 126 else jnp.int16
+    feature = packed.feature.astype(jnp.int16)
+    threshold = packed.threshold.astype(thr_dtype)
+    if not bool(jnp.all(feature.astype(jnp.int32) == packed.feature)):
+        raise ValueError("feature ids do not fit int16")
+    if not bool(jnp.all(threshold.astype(jnp.int32) == packed.threshold)):
+        raise ValueError(f"bin thresholds do not fit {thr_dtype.__name__}")
+    lw = packed.leaf_weight
+    lw3 = lw[..., None] if lw.ndim == 2 else lw  # (T, L, K)
+    q, scale = compress.quantize_stats(lw3, bits, key, stochastic=stochastic)
+    if lw.ndim == 2:
+        q, scale = q[..., 0], scale[..., 0]      # (T, L), (T,)
+    return QuantizedEnsemble(
+        feature=feature,
+        threshold=threshold,
+        leaf_q=q,
+        leaf_scale=scale,
+        tree_scale=packed.tree_scale,
+        bin_edges=packed.bin_edges,
+        bits=bits,
+        round_offsets=packed.round_offsets,
+        learning_rate=packed.learning_rate,
+        base_score=packed.base_score,
+        loss=packed.loss,
+        max_depth=packed.max_depth,
+    )
+
+
+def dequantize_leaf(q: QuantizedEnsemble) -> jnp.ndarray:
+    """f32 leaf table of a quantized ensemble: ``leaf_q * leaf_scale``
+    broadcast per tree (per channel when K-wide)."""
+    if q.leaf_q.ndim == 2:
+        return q.leaf_q.astype(jnp.float32) * q.leaf_scale[:, None]
+    return q.leaf_q.astype(jnp.float32) * q.leaf_scale[:, None, :]
+
+
+def dequantize_ensemble(q: QuantizedEnsemble) -> PackedEnsemble:
+    """Widen a quantized ensemble back to the f32 packed layout.
+
+    Routing tables round-trip exactly; the leaf table carries the rounding
+    error bounded by ``margin_delta_bound``.  The gain table (dropped at
+    quantize time) comes back as zeros — explain tooling should use the f32
+    checkpoint.
+    """
+    return PackedEnsemble(
+        feature=q.feature.astype(jnp.int32),
+        threshold=q.threshold.astype(jnp.int32),
+        gain=jnp.zeros(q.feature.shape, jnp.float32),
+        leaf_weight=dequantize_leaf(q),
+        tree_scale=q.tree_scale,
+        bin_edges=q.bin_edges,
+        round_offsets=q.round_offsets,
+        learning_rate=q.learning_rate,
+        base_score=q.base_score,
+        loss=q.loss,
+        max_depth=q.max_depth,
+    )
+
+
+def margin_delta_bound(q: QuantizedEnsemble) -> float:
+    """Provable |quantized − f32| margin bound (worst case over any input).
+
+    Every leaf entry is off by < 1 quantum (``leaf_scale[t]``; stochastic
+    floor(x/s + u) and round-to-nearest both land within one step, the clip
+    at ±qmax only ever moves values back toward the true one), a sample
+    reads exactly ONE leaf per tree, and tree contributions are
+    ``tree_scale``-weighted sums — so the margin error is at most
+    ``sum_t tree_scale[t] * max_k leaf_scale[t, k]``.
+    """
+    per_tree = q.leaf_scale
+    if per_tree.ndim == 2:                      # K-channel: worst channel
+        per_tree = jnp.max(per_tree, axis=-1)
+    return float(jnp.sum(q.tree_scale * per_tree))
+
+
+def serving_tables(model) -> tuple:
+    """Resolve any ensemble variant into the fused-serving node tables.
+
+    Returns ``(feature i32 (T, I), thr_value f32 (T, I), leaf f32
+    (T, L[, K]), tree_scale f32 (T,))`` — value-space thresholds via
+    ``float_thresholds`` and, for a ``QuantizedEnsemble``, the leaf table
+    dequantized *in-graph* (XLA folds the widening into the traversal, so
+    one f32 program serves both variants and the int8 checkpoint stays
+    small at rest and on the wire).
+    """
+    if isinstance(model, QuantizedEnsemble):
+        leaf = dequantize_leaf(model)
+    else:
+        leaf = model.leaf_weight
+    feature = model.feature.astype(jnp.int32)
+    thr = float_thresholds(feature, model.threshold.astype(jnp.int32),
+                           model.bin_edges)
+    return feature, thr, leaf.astype(jnp.float32), model.tree_scale

@@ -69,6 +69,89 @@ def _predict_kernel(binned_ref, feat_ref, thr_ref, leaf_ref, scale_ref, out_ref,
     out_ref[...] += pred * scale_ref[0, 0]
 
 
+def _predict_raw_kernel(x_ref, feat_ref, thr_ref, leaf_ref, scale_ref, out_ref,
+                        *, max_depth: int):
+    """Fused bin+traverse grid step: RAW float features, value-space
+    thresholds (DESIGN.md §14) — the binning dispatch is gone entirely.
+
+    Identical structure to ``_predict_kernel`` except the feature read
+    compares floats against ``types.float_thresholds`` output instead of
+    bins against bin ids.  The tile is sanitized up front: the feature read
+    is a one-hot *contraction*, so a NaN or ±inf anywhere in the tile would
+    poison every lane of its row (``0 * inf = NaN``).  NaN maps to
+    -FLOAT_MAX (compares ``<=`` every threshold → routes left, the NAN_BIN
+    semantics) and ±inf clips to ±FLOAT_MAX (still beyond every finite
+    edge), so routing stays bit-identical to the binned oracle for ALL
+    inputs, finite or not.
+
+    x_ref: (tile_n, d) float32 raw features
+    thr_ref: (1, num_internal) float32 value-space thresholds
+    (rest as ``_predict_kernel``)
+    """
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tile_n, d = x_ref.shape
+    fmax = jnp.float32(jnp.finfo(jnp.float32).max)
+    x = x_ref[...]
+    x = jnp.where(jnp.isnan(x), -fmax, jnp.clip(x, -fmax, fmax))
+    idx = jnp.zeros((tile_n,), jnp.int32)
+    for level in range(max_depth):
+        off = 2**level - 1
+        width = 2**level
+        sel = (idx[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (tile_n, width), 1)).astype(jnp.float32)
+        feats = feat_ref[0, off:off + width].astype(jnp.float32)   # (width,)
+        thrs = thr_ref[0, off:off + width]
+        f = sel @ feats                                    # (T,)
+        t = sel @ thrs
+        f_onehot = (f[:, None] == jax.lax.broadcasted_iota(
+            jnp.float32, (tile_n, d), 1)).astype(jnp.float32)
+        fv = jnp.sum(x * f_onehot, axis=1)                 # (T,)
+        go_right = jnp.logical_and(f >= 0.0, fv > t)
+        idx = idx * 2 + go_right.astype(jnp.int32)
+
+    leaves = leaf_ref[0, :]                                # (num_leaves,)
+    lsel = (idx[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (tile_n, leaves.shape[0]), 1)).astype(jnp.float32)
+    pred = lsel @ leaves
+    out_ref[...] += pred * scale_ref[0, 0]
+
+
+def predict_forest_raw_pallas_call(
+    x: jnp.ndarray,          # (n_pad, d) float32 RAW features
+    feature: jnp.ndarray,    # (n_trees, num_internal) int32
+    thr_value: jnp.ndarray,  # (n_trees, num_internal) float32 value-space
+    leaf: jnp.ndarray,       # (n_trees, num_leaves) float32
+    scale: jnp.ndarray,      # (n_trees,) float32 per-tree contribution
+    *,
+    max_depth: int,
+    tile_n: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused bin+traverse+combine over the whole ensemble in one kernel."""
+    n_pad, d = x.shape
+    n_trees, num_internal = feature.shape
+    num_leaves = leaf.shape[1]
+    grid = (n_pad // tile_n, n_trees)
+    return pl.pallas_call(
+        functools.partial(_predict_raw_kernel, max_depth=max_depth),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, num_internal), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, num_internal), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, num_leaves), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        interpret=interpret,
+    )(x, feature, thr_value, leaf, scale.reshape(n_trees, 1))
+
+
 def predict_forest_pallas_call(
     binned: jnp.ndarray,     # (n_pad, d) int32
     feature: jnp.ndarray,    # (n_trees, num_internal) int32

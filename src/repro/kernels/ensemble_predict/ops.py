@@ -9,9 +9,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import PackedEnsemble, TreeArrays
+from repro.core.types import PackedEnsemble, TreeArrays, serving_tables
 from repro.kernels.ensemble_predict.ensemble_predict import (
     predict_forest_pallas_call,
+    predict_forest_raw_pallas_call,
 )
 
 
@@ -85,3 +86,62 @@ def predict_packed_pallas(
         packed.tree_scale, binned, packed.max_depth, tile_n, interpret,
     )
     return packed.base_score + margin
+
+
+@partial(jax.jit, static_argnames=("max_depth", "tile_n", "interpret"))
+def _fused_ensemble_pallas(
+    feature: jnp.ndarray,    # (n_trees, num_internal) int32
+    thr_value: jnp.ndarray,  # (n_trees, num_internal) float32 value-space
+    leaf: jnp.ndarray,       # (n_trees, num_leaves) float32
+    scale: jnp.ndarray,      # (n_trees,) float32
+    x: jnp.ndarray,          # (n, d) float32 RAW features
+    max_depth: int,
+    tile_n: int,
+    interpret: bool,
+) -> jnp.ndarray:
+    n, _ = x.shape
+    n_pad = ((n + tile_n - 1) // tile_n) * tile_n
+    x_p = jnp.pad(x.astype(jnp.float32), ((0, n_pad - n), (0, 0)))
+    out = predict_forest_raw_pallas_call(
+        x_p,
+        feature.astype(jnp.int32),
+        thr_value.astype(jnp.float32),
+        leaf.astype(jnp.float32),
+        scale.astype(jnp.float32),
+        max_depth=max_depth,
+        tile_n=tile_n,
+        interpret=interpret,
+    )
+    return out[:n]
+
+
+def predict_packed_fused_pallas(
+    model,
+    x: jnp.ndarray,          # (n, d) float32 RAW features
+    *,
+    tile_n: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Fused bin+traverse ensemble margin in ONE kernel sweep (DESIGN.md §14).
+
+    Takes RAW floats — no ``bin_data`` dispatch — and accepts either a
+    ``PackedEnsemble`` or a ``QuantizedEnsemble`` (``serving_tables``
+    rewrites thresholds to value space and dequantizes quantized leaves
+    in-graph).  Leaf routing is bit-identical to binning + the bin-space
+    kernel for all inputs, including NaN/±inf rows (sanitized in-kernel).
+    K-channel leaf tables are not supported here (same limitation as the
+    bin-space kernel's 2-D leaf BlockSpec) — use the vmap fused path.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    feature, thr_value, leaf, scale = serving_tables(model)
+    if leaf.ndim != 2:
+        raise ValueError(
+            "pallas ensemble_predict serves 2-D (trees, leaves) tables; "
+            "K-channel ensembles must use impl='fused'"
+        )
+    margin = _fused_ensemble_pallas(
+        feature, thr_value, leaf, scale, x, model.max_depth, tile_n,
+        interpret,
+    )
+    return model.base_score + margin

@@ -1,27 +1,49 @@
 """Batched FedGBF scoring service — the millions-of-users serving scenario.
 
-The model is held in the ``PackedEnsemble`` layout (DESIGN.md §3), so every
-request batch costs ONE ensemble traversal: binning + all-trees vmap (or the
-fused Pallas ``ensemble_predict`` kernel) + the scale combiner, compiled once
-for a fixed microbatch shape.  Requests are padded to the microbatch size so
-the whole serving loop replays a single XLA program.
+The production serving tier (DESIGN.md §14) stacks four layers:
+
+* **Fused bin+traverse** — checkpoints ship their bin edges, requests
+  arrive as raw floats, and ONE compiled program does bin + traverse +
+  combine (``--impl fused`` vmap scan or ``fused-pallas`` kernel): the
+  separate binning dispatch of the two-program serving path is gone.
+* **Quantized ensembles** — ``--quantize 8|16`` serves an int8/int16
+  ``QuantizedEnsemble`` (stochastically-rounded leaf tables via
+  ``federation/compress.py``); routing stays bit-identical to f32 and the
+  margin error is bounded by ``types.margin_delta_bound``.
+* **Admission control + latency-aware micro-batching** — a pre-compiled
+  ``BatchLadder`` of power-of-two batch shapes; each iteration admits the
+  largest rung whose observed p99 (read live from the per-rung log-bucket
+  histograms) fits ``--p99-budget-ms``, capped at the queue depth so short
+  queues never pay full-batch padding.  Adaptation never recompiles: every
+  rung was warmed at startup and on every successful hot-swap.
+* **Mid-traffic hot-swap** — ``ModelSlot.try_reload`` validates a
+  candidate checkpoint (sha256, probe scores, rung pre-compile) and swaps
+  it in BETWEEN microbatches (``--reload-at-batch``), timing the swap into
+  ``fedgbf_serve_swap_seconds``; a refused candidate leaves the serving
+  stream untouched.
 
 Observability (DESIGN.md §12): the stream records into a ``StreamMetrics``
-bundle — a log-bucketed latency histogram (p50/p90/p99 derived from bucket
-counts, NOT from a raw per-batch list, so memory stays constant under
-unbounded streams) plus rows/batches/padded-rows counters and occupancy /
-rows-per-second gauges.  ``--metrics-out`` writes the whole bundle in the
-Prometheus text exposition format — the scrape payload a metrics endpoint
-serves verbatim.
+bundle — log-bucketed latency histograms (overall + per rung, p50/p90/p99
+from bucket counts so memory stays constant under unbounded streams),
+rows/batches/padded-rows/swap counters, occupancy + throughput gauges
+segmented per model generation.  ``--metrics-out`` writes the Prometheus
+text exposition to a file; ``--metrics-port`` serves it over a localhost
+HTTP scrape endpoint.
 
     # train a small model, save the packed checkpoint, score a request stream
     PYTHONPATH=src python -m repro.launch.serve_fedgbf \
         --dataset default_credit_card --rounds 10 --save /tmp/fedgbf_ckpt
 
-    # serve an existing packed checkpoint with the Pallas kernel
+    # serve a checkpoint fused + int8-quantized with a 5 ms p99 budget and
+    # a live scrape endpoint
     PYTHONPATH=src python -m repro.launch.serve_fedgbf \
-        --checkpoint /tmp/fedgbf_ckpt --impl pallas --requests 200000 \
-        --metrics-out /tmp/fedgbf_metrics.prom
+        --checkpoint /tmp/fedgbf_ckpt --impl fused --quantize 8 \
+        --requests 200000 --p99-budget-ms 5 --metrics-port 9109
+
+    # hot-swap a retrained checkpoint mid-stream, between microbatches
+    PYTHONPATH=src python -m repro.launch.serve_fedgbf \
+        --checkpoint /tmp/fedgbf_ckpt --reload /tmp/fedgbf_ckpt_v2 \
+        --reload-at-batch 8
 """
 
 from __future__ import annotations
@@ -43,9 +65,12 @@ from repro.obs import metrics as obs_metrics
 
 
 @partial(jax.jit, static_argnames=("impl",))
-def _score_batch(packed: PackedEnsemble, x: jnp.ndarray, impl: str) -> jnp.ndarray:
+def _score_batch(packed, x: jnp.ndarray, impl: str) -> jnp.ndarray:
     """One compiled program per (microbatch shape, impl): bin + traverse,
-    via the same dispatch boosting.predict exposes.
+    via the same dispatch boosting.predict exposes.  ``impl="fused"`` /
+    ``"fused-pallas"`` skip the binning pass entirely — raw floats compare
+    against value-space thresholds (DESIGN.md §14) — and accept a
+    ``QuantizedEnsemble`` natively.
 
     The activation comes from the objective registry keyed by the
     checkpoint's stored loss name (DESIGN.md §11) — sigmoid for logistic,
@@ -60,11 +85,18 @@ def _score_batch(packed: PackedEnsemble, x: jnp.ndarray, impl: str) -> jnp.ndarr
 class StreamMetrics:
     """Serving instruments for one scoring stream (bounded memory).
 
-    Latency lives ONLY in the log-bucketed histogram — p50/p90/p99 come
-    from ``latency.quantile`` with a bucket-width error bound (~4.5%
-    relative at the default growth), never from a raw list that grows with
-    the stream.  Batch occupancy = real rows / microbatch capacity, so
-    ``1 - occupancy`` is the fraction of traversal work spent on padding.
+    Latency lives ONLY in log-bucketed histograms — the overall
+    ``fedgbf_serve_batch_latency_seconds`` plus one
+    ``fedgbf_serve_rung_latency_seconds{batch_size="..."}`` series per
+    admitted batch rung (the admission controller reads rung p99s live) —
+    so p50/p90/p99 come from bucket counts with a ~4.5% relative error
+    bound, never from a raw list that grows with the stream.
+
+    Occupancy (real rows / admitted capacity) accumulates PER MODEL
+    SEGMENT: ``begin_model_segment()`` (called on every successful
+    hot-swap) resets the accumulators and bumps
+    ``fedgbf_serve_model_generation``, so a swap never blends two models'
+    padding behavior into one gauge.
     """
 
     def __init__(self, batch_size: int) -> None:
@@ -81,12 +113,13 @@ class StreamMetrics:
                                  "Microbatches dispatched.")
         self.padded_rows = r.counter(
             "fedgbf_serve_padded_rows_total",
-            "Zero-padding rows scored to keep the microbatch shape static.")
+            "Zero-padding rows scored to keep microbatch shapes static.")
         self.batch_size = r.gauge("fedgbf_serve_batch_size",
-                                  "Static microbatch capacity.")
+                                  "Capacity of the last admitted microbatch.")
         self.occupancy = r.gauge(
             "fedgbf_serve_batch_occupancy",
-            "Mean real-row fraction per microbatch (1 = no padding).")
+            "Mean real-row fraction per microbatch (1 = no padding), "
+            "accumulated over the current model segment only.")
         self.rows_per_s = r.gauge("fedgbf_serve_rows_per_second",
                                   "Stream throughput over the last run.")
         self.rows_rejected = r.counter(
@@ -100,16 +133,57 @@ class StreamMetrics:
             "fedgbf_serve_reload_failures_total",
             "Hot reloads refused (corrupt checkpoint / failed probe); the "
             "previous ensemble keeps serving.")
+        self.swap_latency = r.histogram(
+            "fedgbf_serve_swap_seconds",
+            "Validate-before-swap hot reload latency (load + sha256 + probe "
+            "+ rung warm), successful swaps only.",
+            lo=1e-4, hi=600.0,
+        )
+        self.model_generation = r.gauge(
+            "fedgbf_serve_model_generation",
+            "Model segment counter: bumped on every successful hot-swap; "
+            "per-segment gauges reset at each bump.")
         self.batch_size.set(batch_size)
         self._capacity = batch_size
+        self._rung_hists: dict = {}
+        self._seg_rows = 0
+        self._seg_slots = 0
 
-    def observe_batch(self, latency_s: float, real_rows: int) -> None:
+    def rung_latency(self, capacity: int) -> obs_metrics.LogBucketHistogram:
+        """The labeled per-rung latency histogram (registered lazily)."""
+        h = self._rung_hists.get(capacity)
+        if h is None:
+            h = self.registry.histogram(
+                "fedgbf_serve_rung_latency_seconds",
+                "Per-microbatch latency by admitted batch capacity; the "
+                "admission controller reads each rung's p99 live.",
+                lo=1e-6, hi=60.0, labels={"batch_size": str(capacity)},
+            )
+            self._rung_hists[capacity] = h
+        return h
+
+    def observe_batch(self, latency_s: float, real_rows: int,
+                      capacity: int | None = None) -> None:
+        cap = self._capacity if capacity is None else capacity
         self.latency.observe(latency_s)
+        self.rung_latency(cap).observe(latency_s)
         self.rows.inc(real_rows)
         self.batches.inc()
-        self.padded_rows.inc(self._capacity - real_rows)
-        total = self._capacity * self.batches.value
-        self.occupancy.set(self.rows.value / total if total else 0.0)
+        self.padded_rows.inc(cap - real_rows)
+        self.batch_size.set(cap)
+        self._seg_rows += real_rows
+        self._seg_slots += cap
+        self.occupancy.set(
+            self._seg_rows / self._seg_slots if self._seg_slots else 0.0)
+
+    def begin_model_segment(self) -> None:
+        """Reset per-model gauges at a hot-swap boundary: occupancy starts
+        a fresh accumulation and the generation gauge bumps, so the gauges
+        never blend two models' serving behavior."""
+        self._seg_rows = 0
+        self._seg_slots = 0
+        self.occupancy.set(0.0)
+        self.model_generation.set(self.model_generation.value + 1)
 
     def finalize(self, wall_s: float) -> None:
         if wall_s > 0:
@@ -123,56 +197,63 @@ class StreamMetrics:
         return self.registry.render()
 
 
-def score_stream(
-    packed: PackedEnsemble,
-    x: np.ndarray,
-    batch_size: int = 8192,
-    impl: str = "packed",
-    metrics: StreamMetrics = None,
-) -> tuple[np.ndarray, StreamMetrics]:
-    """Score ``x`` in fixed-shape microbatches; returns (scores, metrics).
+def ladder_sizes(max_size: int, min_size: int = 256) -> list:
+    """Power-of-two batch rungs up to ``max_size`` (always included)."""
+    min_size = max(1, min(min_size, max_size))
+    sizes, s = [], 1
+    while s < max_size:
+        if s >= min_size:
+            sizes.append(s)
+        s *= 2
+    sizes.append(max_size)
+    return sizes
 
-    The last partial batch is zero-padded to ``batch_size`` (scores of the
-    padding are dropped) so every step hits the same compiled program.
-    Per-batch latency and occupancy land in ``metrics`` (a fresh
-    ``StreamMetrics`` unless one is passed in to accumulate across calls) —
-    fixed-size state, so an unbounded stream cannot grow it.
+
+class BatchLadder:
+    """Pre-compiled ladder of static batch shapes + the admission policy.
+
+    Every rung is compiled once up front (``warm``; ``ModelSlot`` re-warms
+    on hot-swap), so ``pick`` may move between rungs every single batch
+    without ever triggering a recompile — the no-recompile property is
+    asserted via ``_score_batch._cache_size()`` in tests.
+
+    ``pick`` implements the admission policy: cap at the smallest rung
+    covering the queue (a larger one only buys padding), then take the
+    largest capped rung whose OBSERVED p99 — read live from the per-rung
+    log-bucket histogram — fits the latency budget.  Rungs with fewer than
+    ``min_obs`` observations are admitted optimistically (they were warmed,
+    and a broken budget walks the ladder down within a batch or two); with
+    no budget the queue cap alone decides (max throughput).
     """
-    n = x.shape[0]
-    out = None  # allocated after the first batch: (n,) or (n, K) scores
-    if metrics is None:
-        metrics = StreamMetrics(batch_size)
-    for start in range(0, n, batch_size):
-        chunk = np.array(x[start:start + batch_size], copy=True)
-        real = chunk.shape[0]
-        pad = batch_size - real
-        # Input hardening (DESIGN.md §13): rows carrying inf would silently
-        # bin to the extreme buckets and score as if legitimate — reject
-        # them instead.  They are zeroed before the compiled program (shape
-        # stays static), their scores come back as NaN, and the rejection
-        # lands on ``fedgbf_serve_rows_rejected_total``.  Plain NaN features
-        # are NOT rejected: binning routes them to the reserved missing-value
-        # bin (NAN_BIN), the same semantics training used.
-        bad = np.isinf(chunk).any(axis=1)
-        if bad.any():
-            chunk[bad] = 0.0
-            metrics.rows_rejected.inc(int(bad.sum()))
-        if pad:
-            chunk = np.concatenate([chunk, np.zeros((pad,) + chunk.shape[1:],
-                                                    chunk.dtype)])
-        t0 = time.perf_counter()
-        scores = jax.block_until_ready(
-            _score_batch(packed, jnp.asarray(chunk), impl)
-        )
-        metrics.observe_batch(time.perf_counter() - t0, real)
-        if out is None:
-            out = np.empty((n,) + scores.shape[1:], np.float32)
-        block = np.asarray(scores[:real])
-        if bad.any():
-            block = block.copy()
-            block[bad] = np.nan
-        out[start:start + real] = block
-    return out, metrics
+
+    def __init__(self, sizes) -> None:
+        self.sizes = sorted(set(int(s) for s in sizes))
+        if not self.sizes or self.sizes[0] < 1:
+            raise ValueError(f"need positive rung sizes, got {sizes!r}")
+        self.max_size = self.sizes[-1]
+
+    def warm(self, model, d: int, impl: str) -> None:
+        """Compile every (rung, model-structure) serving program."""
+        for s in self.sizes:
+            jax.block_until_ready(
+                _score_batch(model, jnp.zeros((s, d), jnp.float32), impl))
+
+    def pick(self, queued: int, budget_s: float | None,
+             metrics: StreamMetrics, min_obs: int = 8) -> int:
+        cap = self.max_size
+        for s in self.sizes:
+            if s >= queued:
+                cap = s
+                break
+        if budget_s is None:
+            return cap
+        for s in reversed(self.sizes):
+            if s > cap:
+                continue
+            h = metrics.rung_latency(s)
+            if h.count < min_obs or h.quantile(0.99) <= budget_s:
+                return s
+        return self.sizes[0]
 
 
 class ModelSlot:
@@ -180,27 +261,38 @@ class ModelSlot:
 
     ``try_reload`` loads a candidate checkpoint (sha256-verified by
     ``checkpoint.io``), scores a zero probe batch through the serving
-    program, and only THEN swaps it in.  Any failure — missing file,
-    corrupt/truncated npz, checksum mismatch, non-finite probe scores —
-    leaves the previous ensemble serving and increments
-    ``fedgbf_serve_reload_failures_total``; a successful swap increments
-    ``fedgbf_serve_reloads_total``.
+    program, pre-compiles every warm rung shape for the candidate, and only
+    THEN swaps it in — so the swap is legal BETWEEN MICROBATCHES of a live
+    stream and the first post-swap batch hits a warm program.  Any failure
+    — missing file, corrupt/truncated npz, checksum mismatch, non-finite
+    probe scores — leaves the previous ensemble serving and increments
+    ``fedgbf_serve_reload_failures_total`` without touching any other
+    serving metric; a successful swap increments
+    ``fedgbf_serve_reloads_total``, records the swap wall into
+    ``fedgbf_serve_swap_seconds`` and starts a fresh model segment
+    (``StreamMetrics.begin_model_segment``).
     """
 
-    def __init__(self, packed: PackedEnsemble, impl: str = "packed",
-                 metrics: StreamMetrics = None) -> None:
+    def __init__(self, packed, impl: str = "packed",
+                 metrics: StreamMetrics = None, warm_sizes=()) -> None:
         self.packed = packed
         self.impl = impl
         self.metrics = metrics
+        self.warm_sizes = tuple(int(s) for s in warm_sizes)
 
-    def _validate(self, packed: PackedEnsemble) -> None:
+    def _validate(self, packed) -> None:
         d = packed.bin_edges.shape[0]
         probe = jnp.zeros((4, d), jnp.float32)
         scores = np.asarray(_score_batch(packed, probe, self.impl))
         if not np.isfinite(scores).all():
             raise ValueError("probe batch produced non-finite scores")
+        for s in self.warm_sizes:
+            jax.block_until_ready(
+                _score_batch(packed, jnp.zeros((s, d), jnp.float32),
+                             self.impl))
 
     def try_reload(self, path: str) -> bool:
+        t0 = time.perf_counter()
         try:
             candidate = ckpt_io.load_ensemble(path)
             self._validate(candidate)
@@ -212,9 +304,98 @@ class ModelSlot:
         self.packed = candidate
         if self.metrics is not None:
             self.metrics.reloads.inc()
+            self.metrics.swap_latency.observe(time.perf_counter() - t0)
+            self.metrics.begin_model_segment()
         print(f"reload OK ({path}): {candidate.total_trees} trees / "
               f"{candidate.rounds} rounds")
         return True
+
+
+def serve_stream(
+    slot: ModelSlot,
+    x: np.ndarray,
+    *,
+    ladder: BatchLadder,
+    metrics: StreamMetrics = None,
+    p99_budget_s: float | None = None,
+    swap_plan: dict | None = None,
+) -> tuple[np.ndarray, StreamMetrics]:
+    """The production serving loop: admission, scoring, mid-stream swaps.
+
+    Each iteration (1) applies any hot-swap scheduled for this batch index
+    (``swap_plan``: batch_idx -> checkpoint path — swaps land BETWEEN
+    microbatches, never inside one), (2) asks the ladder for a capacity
+    given the queue depth and p99 budget, (3) scores one microbatch on the
+    slot's current model.
+
+    Host-copy discipline: a full clean batch goes straight from the caller's
+    array into the device transfer — NO host-side staging copy.  A copy is
+    made only when the batch needs mutation (inf rows zeroed before the
+    compiled program; their scores return NaN and land on
+    ``fedgbf_serve_rows_rejected_total``) or zero-padding to the admitted
+    capacity.  Plain NaN features are NOT rejected: the fused traversal
+    routes them left, the same reserved-NAN_BIN semantics training used.
+    """
+    n = x.shape[0]
+    out = None  # allocated after the first batch: (n,) or (n, K) scores
+    if metrics is None:
+        metrics = StreamMetrics(ladder.max_size)
+    pos = 0
+    batch_idx = 0
+    while pos < n:
+        if swap_plan and batch_idx in swap_plan:
+            slot.try_reload(swap_plan[batch_idx])
+        queued = n - pos
+        cap = ladder.pick(queued, p99_budget_s, metrics)
+        real = min(cap, queued)
+        view = x[pos:pos + real]
+        bad = np.isinf(view).any(axis=1)
+        nbad = int(bad.sum())
+        if nbad or real < cap:
+            batch = np.zeros((cap,) + x.shape[1:], x.dtype)
+            batch[:real] = view
+            if nbad:
+                batch[:real][bad] = 0.0
+            metrics.rows_rejected.inc(nbad)
+        else:
+            batch = view
+        t0 = time.perf_counter()
+        scores = jax.block_until_ready(
+            _score_batch(slot.packed, jnp.asarray(batch), slot.impl)
+        )
+        metrics.observe_batch(time.perf_counter() - t0, real, capacity=cap)
+        if out is None:
+            out = np.empty((n,) + scores.shape[1:], np.float32)
+        block = np.asarray(scores[:real])
+        if nbad:
+            block = block.copy()
+            block[bad] = np.nan
+        out[pos:pos + real] = block
+        pos += real
+        batch_idx += 1
+    return out, metrics
+
+
+def score_stream(
+    packed,
+    x: np.ndarray,
+    batch_size: int = 8192,
+    impl: str = "packed",
+    metrics: StreamMetrics = None,
+) -> tuple[np.ndarray, StreamMetrics]:
+    """Score ``x`` in fixed-shape microbatches; returns (scores, metrics).
+
+    The single-rung special case of ``serve_stream`` (kept as the simple
+    API): the last partial batch is zero-padded to ``batch_size`` so every
+    step hits the same compiled program.  Per-batch latency and occupancy
+    land in ``metrics`` (a fresh ``StreamMetrics`` unless one is passed in
+    to accumulate across calls) — fixed-size state, so an unbounded stream
+    cannot grow it.
+    """
+    slot = ModelSlot(packed, impl)
+    return serve_stream(slot, x, ladder=BatchLadder([batch_size]),
+                        metrics=metrics if metrics is not None
+                        else StreamMetrics(batch_size))
 
 
 def main() -> None:
@@ -229,17 +410,45 @@ def main() -> None:
                     help="training rounds when no checkpoint is given")
     ap.add_argument("--requests", type=int, default=100_000,
                     help="size of the synthetic request stream")
-    ap.add_argument("--batch-size", type=int, default=8192)
-    ap.add_argument("--impl", choices=["packed", "weighted", "pallas"],
-                    default="packed")
+    ap.add_argument("--batch-size", type=int, default=8192,
+                    help="microbatch capacity (the ladder's top rung)")
+    ap.add_argument("--impl",
+                    choices=["fused", "fused-pallas", "packed", "weighted",
+                             "pallas"],
+                    default="fused",
+                    help="serving traversal: 'fused'/'fused-pallas' run "
+                         "bin+traverse+combine as ONE program on raw floats "
+                         "(DESIGN.md §14); the rest bin in a separate "
+                         "dispatch first")
+    ap.add_argument("--quantize", type=int, choices=[8, 16], default=None,
+                    metavar="BITS",
+                    help="serve an int8/int16 QuantizedEnsemble (stochastic "
+                         "leaf rounding; margin error provably bounded, "
+                         "printed at startup)")
+    ap.add_argument("--p99-budget-ms", type=float, default=None,
+                    help="latency budget: each batch admits the largest "
+                         "ladder rung whose observed p99 fits (implies "
+                         "--adaptive)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="enable the power-of-two batch ladder even without "
+                         "a p99 budget (short queues admit smaller rungs "
+                         "instead of padding to --batch-size)")
+    ap.add_argument("--ladder-min", type=int, default=256,
+                    help="smallest ladder rung (adaptive mode)")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the Prometheus text exposition of the "
                          "stream metrics here ('-' for stdout)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve the exposition on a localhost HTTP scrape "
+                         "endpoint (0 = ephemeral port) for the stream's "
+                         "duration")
     ap.add_argument("--reload", default=None, metavar="PATH",
-                    help="hot-reload this checkpoint before scoring the "
-                         "stream (validate-before-swap: a corrupt or "
-                         "non-finite candidate is refused and the current "
-                         "model keeps serving)")
+                    help="hot-reload this checkpoint (validate-before-swap: "
+                         "a corrupt or non-finite candidate is refused and "
+                         "the current model keeps serving)")
+    ap.add_argument("--reload-at-batch", type=int, default=None, metavar="N",
+                    help="apply --reload between microbatches N-1 and N of "
+                         "the live stream (default: before the stream)")
     args = ap.parse_args()
 
     ds = synthetic.load(args.dataset)
@@ -261,6 +470,15 @@ def main() -> None:
         ckpt_io.save_ensemble(args.save, packed)
         print(f"saved packed checkpoint to {args.save}")
 
+    if args.quantize:
+        from repro.core.types import margin_delta_bound, quantize_ensemble
+
+        if isinstance(packed, PackedEnsemble):
+            packed = quantize_ensemble(packed, bits=args.quantize,
+                                       key=jax.random.PRNGKey(0))
+        print(f"serving int{args.quantize} quantized tables: margin error "
+              f"bound {margin_delta_bound(packed):.3e}")
+
     # Synthetic request stream: resample test rows up to --requests users.
     rng = np.random.default_rng(0)
     idx = rng.integers(0, ds.x_test.shape[0], args.requests)
@@ -274,29 +492,49 @@ def main() -> None:
         print(f"requests < batch-size: shrinking microbatch "
               f"{args.batch_size} -> {batch_size}")
 
-    sm = StreamMetrics(batch_size)
-    slot = ModelSlot(packed, args.impl, metrics=sm)
-    if args.reload:
-        slot.try_reload(args.reload)
+    adaptive = args.adaptive or args.p99_budget_ms is not None
+    ladder = BatchLadder(ladder_sizes(batch_size, args.ladder_min)
+                         if adaptive else [batch_size])
 
-    # Warm-up compiles the single microbatch program (ONE batch, not the
-    # whole stream); its metrics are thrown away so the reported histogram
-    # covers only steady-state batches.
-    score_stream(slot.packed, requests[:batch_size], batch_size, args.impl)
+    sm = StreamMetrics(batch_size)
+    server = None
+    if args.metrics_port is not None:
+        server = obs_metrics.serve_metrics_http(sm.registry,
+                                                port=args.metrics_port)
+        print(f"metrics scrape endpoint: {server.url}")
+    slot = ModelSlot(packed, args.impl, metrics=sm,
+                     warm_sizes=ladder.sizes)
+    swap_plan = {}
+    if args.reload:
+        if args.reload_at_batch is not None:
+            swap_plan[args.reload_at_batch] = args.reload
+        else:
+            slot.try_reload(args.reload)
+
+    # Warm-up compiles every ladder rung for the current model (swaps warm
+    # their own candidate inside ``try_reload``), so the admission
+    # controller can move between rungs with ZERO mid-stream recompiles;
+    # warm batches are zero probes and never touch the stream metrics.
+    d = slot.packed.bin_edges.shape[0]
+    ladder.warm(slot.packed, d, args.impl)
+
+    budget_s = (args.p99_budget_ms * 1e-3
+                if args.p99_budget_ms is not None else None)
     t0 = time.perf_counter()
-    scores, sm = score_stream(slot.packed, requests, batch_size, args.impl,
-                              metrics=sm)
+    scores, sm = serve_stream(slot, requests, ladder=ladder, metrics=sm,
+                              p99_budget_s=budget_s, swap_plan=swap_plan)
     sm.finalize(time.perf_counter() - t0)
     # Quantiles from the log-bucket counts (geometric-midpoint estimate,
     # error bounded by half the bucket growth) — the raw latency list is
     # gone on purpose: it grew with the stream.
     q = sm.quantiles_ms()
-    print(f"impl={args.impl} batch={batch_size} "
+    print(f"impl={args.impl} batch<= {batch_size} "
           f"requests={args.requests}: {sm.rows_per_s.value:,.0f} rows/s, "
           f"batch latency p50={q[0.5]:.2f}ms p90={q[0.9]:.2f}ms "
           f"p99={q[0.99]:.2f}ms "
           f"({int(sm.batches.value)} batches, "
-          f"occupancy={sm.occupancy.value:.3f})")
+          f"occupancy={sm.occupancy.value:.3f}, "
+          f"swaps={int(sm.reloads.value)})")
     if args.metrics_out:
         text = sm.render()
         if args.metrics_out == "-":
@@ -305,6 +543,14 @@ def main() -> None:
             with open(args.metrics_out, "w") as f:
                 f.write(text)
             print(f"metrics exposition -> {args.metrics_out}")
+    if server is not None:
+        # one self-scrape proves the endpoint served the live registry
+        from urllib.request import urlopen
+
+        with urlopen(server.url) as resp:
+            lines = resp.read().decode().count("\n")
+        print(f"self-scrape {server.url}: {lines} exposition lines")
+        server.close()
     print(f"score head: {scores[:5]}")
 
 

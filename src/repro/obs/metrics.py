@@ -9,15 +9,30 @@ relative error is bounded by half the bucket growth factor (~4.5% at the
 default 2**(1/8) growth), independent of stream length.
 
 ``MetricsRegistry.render()`` writes the Prometheus text exposition format
-(the de-facto scrape payload), so wiring an HTTP endpoint later is just
-serving this string; ``serve_fedgbf --metrics-out`` dumps it to a file.
+(the de-facto scrape payload); ``serve_metrics_http`` serves it over a
+localhost HTTP endpoint (``serve_fedgbf --metrics-port``), and
+``serve_fedgbf --metrics-out`` still dumps it to a file.
+
+Instruments take an optional ``labels`` dict, rendering standard
+``name{k="v"}`` series; several instruments may share a family name with
+distinct label sets (the per-batch-size serving latency ladder), and HELP /
+TYPE headers are emitted once per family.
 """
 
 from __future__ import annotations
 
 import math
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 import numpy as np
+
+
+def _label_str(labels: dict | None) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    return "{" + inner + "}"
 
 
 class Counter:
@@ -25,9 +40,11 @@ class Counter:
 
     kind = "counter"
 
-    def __init__(self, name: str, help: str = "") -> None:
+    def __init__(self, name: str, help: str = "",
+                 labels: dict | None = None) -> None:
         self.name = name
         self.help = help
+        self.labels = dict(labels) if labels else {}
         self.value = 0.0
 
     def inc(self, v: float = 1.0) -> None:
@@ -36,7 +53,7 @@ class Counter:
         self.value += v
 
     def render(self) -> list:
-        return [f"{self.name} {_fmt(self.value)}"]
+        return [f"{self.name}{_label_str(self.labels)} {_fmt(self.value)}"]
 
 
 class Gauge:
@@ -44,16 +61,18 @@ class Gauge:
 
     kind = "gauge"
 
-    def __init__(self, name: str, help: str = "") -> None:
+    def __init__(self, name: str, help: str = "",
+                 labels: dict | None = None) -> None:
         self.name = name
         self.help = help
+        self.labels = dict(labels) if labels else {}
         self.value = 0.0
 
     def set(self, v: float) -> None:
         self.value = float(v)
 
     def render(self) -> list:
-        return [f"{self.name} {_fmt(self.value)}"]
+        return [f"{self.name}{_label_str(self.labels)} {_fmt(self.value)}"]
 
 
 class LogBucketHistogram:
@@ -69,11 +88,13 @@ class LogBucketHistogram:
     kind = "histogram"
 
     def __init__(self, name: str, help: str = "", lo: float = 1e-5,
-                 hi: float = 60.0, growth: float = 2 ** 0.125) -> None:
+                 hi: float = 60.0, growth: float = 2 ** 0.125,
+                 labels: dict | None = None) -> None:
         if not (lo > 0 and hi > lo and growth > 1):
             raise ValueError("need 0 < lo < hi and growth > 1")
         self.name = name
         self.help = help
+        self.labels = dict(labels) if labels else {}
         self.growth = growth
         n = int(math.ceil(math.log(hi / lo) / math.log(growth))) + 1
         #: upper bucket edges, seconds; the implicit last bucket is +Inf
@@ -104,16 +125,17 @@ class LogBucketHistogram:
     def render(self) -> list:
         """Prometheus histogram series: cumulative ``_bucket`` lines for
         occupied buckets (+ the mandatory +Inf), ``_sum``, ``_count``."""
+        lab = _label_str(self.labels)
         lines, cum = [], 0
         for i, c in enumerate(self.counts[:-1]):
             if c:
                 cum += int(c)
-                lines.append(
-                    f'{self.name}_bucket{{le="{_fmt(self.bounds[i])}"}} {cum}'
-                )
-        lines.append(f'{self.name}_bucket{{le="+Inf"}} {self.count}')
-        lines.append(f"{self.name}_sum {_fmt(self.sum)}")
-        lines.append(f"{self.name}_count {self.count}")
+                bucket = dict(self.labels, le=_fmt(self.bounds[i]))
+                lines.append(f"{self.name}_bucket{_label_str(bucket)} {cum}")
+        inf = dict(self.labels, le="+Inf")
+        lines.append(f"{self.name}_bucket{_label_str(inf)} {self.count}")
+        lines.append(f"{self.name}_sum{lab} {_fmt(self.sum)}")
+        lines.append(f"{self.name}_count{lab} {self.count}")
         return lines
 
 
@@ -124,34 +146,99 @@ def _fmt(v: float) -> str:
 
 
 class MetricsRegistry:
-    """Orders instruments and renders the text exposition."""
+    """Orders instruments and renders the text exposition.
+
+    Uniqueness is per SERIES — family name + label set — so a family may
+    carry many labeled instruments (e.g. one latency histogram per batch
+    rung); HELP/TYPE render once per family, on first appearance.
+    """
 
     def __init__(self) -> None:
         self._metrics: list = []
         self._names: set = set()
 
     def _register(self, metric):
-        if metric.name in self._names:
-            raise ValueError(f"duplicate metric {metric.name!r}")
-        self._names.add(metric.name)
+        key = metric.name + _label_str(metric.labels)
+        if key in self._names:
+            raise ValueError(f"duplicate metric {key!r}")
+        self._names.add(key)
         self._metrics.append(metric)
         return metric
 
-    def counter(self, name: str, help: str = "") -> Counter:
-        return self._register(Counter(name, help))
+    def counter(self, name: str, help: str = "",
+                labels: dict | None = None) -> Counter:
+        return self._register(Counter(name, help, labels=labels))
 
-    def gauge(self, name: str, help: str = "") -> Gauge:
-        return self._register(Gauge(name, help))
+    def gauge(self, name: str, help: str = "",
+              labels: dict | None = None) -> Gauge:
+        return self._register(Gauge(name, help, labels=labels))
 
     def histogram(self, name: str, help: str = "", **kw) -> LogBucketHistogram:
         return self._register(LogBucketHistogram(name, help, **kw))
 
     def render(self) -> str:
         """Prometheus text exposition (version 0.0.4)."""
-        out = []
+        out, seen = [], set()
         for m in self._metrics:
-            if m.help:
-                out.append(f"# HELP {m.name} {m.help}")
-            out.append(f"# TYPE {m.name} {m.kind}")
+            if m.name not in seen:
+                seen.add(m.name)
+                if m.help:
+                    out.append(f"# HELP {m.name} {m.help}")
+                out.append(f"# TYPE {m.name} {m.kind}")
             out.extend(m.render())
         return "\n".join(out) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# HTTP scrape endpoint (DESIGN.md §14): the registry's exposition, served
+# ---------------------------------------------------------------------------
+class MetricsHTTPServer:
+    """Localhost Prometheus scrape endpoint over a live registry.
+
+    A daemon-threaded ``ThreadingHTTPServer`` whose GET handler renders the
+    registry *at scrape time* — no snapshotting, the instruments mutate as
+    the serving loop runs and the scraper always sees the current counts.
+    ``port=0`` binds an ephemeral port (tests); ``.port`` reports the bound
+    one.  ``close()`` shuts the listener down.
+    """
+
+    CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+    def __init__(self, registry: MetricsRegistry, port: int = 0,
+                 host: str = "127.0.0.1") -> None:
+        outer = self
+
+        class Handler(BaseHTTPRequestHandler):
+            def do_GET(self):  # noqa: N802 (http.server API)
+                body = outer.registry.render().encode()
+                self.send_response(200)
+                self.send_header("Content-Type", outer.CONTENT_TYPE)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *a):  # scrapes stay off stderr
+                pass
+
+        self.registry = registry
+        self._server = ThreadingHTTPServer((host, port), Handler)
+        self.host = host
+        self.port = self._server.server_address[1]
+        self._thread = threading.Thread(
+            target=self._server.serve_forever, daemon=True
+        )
+        self._thread.start()
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}/metrics"
+
+    def close(self) -> None:
+        self._server.shutdown()
+        self._server.server_close()
+
+
+def serve_metrics_http(registry: MetricsRegistry, port: int = 0,
+                       host: str = "127.0.0.1") -> MetricsHTTPServer:
+    """Start a scrape endpoint for ``registry``; returns the server handle."""
+    return MetricsHTTPServer(registry, port=port, host=host)
